@@ -1,0 +1,30 @@
+"""Paper Figs. 10/11: cost-model accuracy — estimated vs actual I/O for
+speculative in-filtering and post-filtering across pool lengths."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BenchResult, get_engine, run_policy
+from repro.data.synth import make_selectors
+
+
+def run() -> list:
+    ds, e, _ = get_engine()
+    sels = make_selectors(ds, e, "label_or")
+    results = []
+    for policy, fig in (("speculative", "fig10_in"), ("post", "fig11_post")):
+        for l in (16, 32, 64):
+            r = run_policy(ds, e, sels, policy, l=l)
+            st = r["stats"]
+            mask = [i for i, m in enumerate(st.mechanism)
+                    if (m == "in") == (policy == "speculative")]
+            if not mask:
+                mask = list(range(len(st.mechanism)))
+            est = float(np.mean(st.est_io_pages[mask]))
+            act = float(np.mean(st.io_pages[mask]))
+            results.append(BenchResult(
+                name=f"{fig}/L={l}",
+                us_per_call=r["cpu_us"],
+                derived={"est_io": f"{est:.0f}", "actual_io": f"{act:.0f}",
+                         "ratio": f"{est / max(act, 1e-9):.2f}"}))
+    return results

@@ -1,0 +1,32 @@
+"""Paper Fig. 2: search throughput of each filtering mechanism across query
+selectivities (range workload), at a fixed recall knob."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (BenchResult, get_engine, modeled_qps,
+                               run_policy)
+from repro.core.selectors import RangeSelector
+
+
+def run() -> list:
+    ds, e, _ = get_engine()
+    rs = e.range_store
+    values = np.sort(rs.values)
+    n = values.size
+    results = []
+    for sel_frac in (0.001, 0.01, 0.05, 0.2, 0.5):
+        lo_i = int(0.25 * n)
+        hi_i = min(n - 1, lo_i + max(1, int(sel_frac * n)))
+        sels = [RangeSelector(rs, float(values[lo_i]), float(values[hi_i]))
+                for _ in range(16)]
+        for policy in ("speculative", "post", "strict_pre", "strict_in"):
+            r = run_policy(ds, e, sels, policy, l=32)
+            qps = modeled_qps(r["io_pages"], r["cpu_us"])
+            results.append(BenchResult(
+                name=f"fig2/{policy}/sel={sel_frac}",
+                us_per_call=r["cpu_us"],
+                derived={"qps_model": f"{qps:.0f}",
+                         "recall": f"{r['recall']:.3f}",
+                         "io_pages": f"{r['io_pages']:.0f}"}))
+    return results

@@ -1,0 +1,30 @@
+"""Paper Figs. 5/6: throughput + latency on label workloads —
+PIPEANN-FILTER (speculative) vs PipeANN-BaseFilter (pre<1%/post router) vs
+strict baselines. label_or ≈ YT5M, label_and ≈ YFCC10M."""
+from __future__ import annotations
+
+from benchmarks.common import (BenchResult, get_engine, modeled_latency_us,
+                               modeled_qps, run_policy)
+from repro.data.synth import make_selectors
+
+
+def run() -> list:
+    ds, e, _ = get_engine()
+    results = []
+    for workload in ("label_or", "label_and"):
+        sels = make_selectors(ds, e, workload)
+        for policy in ("speculative", "basefilter", "post", "strict_in"):
+            r = run_policy(ds, e, sels, policy, l=48)
+            mech = max(r["mech_counts"], key=r["mech_counts"].get)
+            lat = modeled_latency_us(mech, r["hops"], r["io_pages"],
+                                     r["cpu_us"])
+            qps = modeled_qps(r["io_pages"], r["cpu_us"])
+            results.append(BenchResult(
+                name=f"fig5_6/{workload}/{policy}",
+                us_per_call=r["cpu_us"],
+                derived={"latency_us_model": f"{lat:.0f}",
+                         "qps_model": f"{qps:.0f}",
+                         "recall": f"{r['recall']:.3f}",
+                         "io_pages": f"{r['io_pages']:.0f}",
+                         "routes": str(r["mech_counts"]).replace(",", "/")}))
+    return results

@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks: XLA reference path timing on CPU (the Pallas
+TPU kernels are validated in interpret mode; wall-clock belongs to TPU)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchResult
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters: int = 20) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    results = []
+
+    n, m = 100_000, 16
+    codes = jnp.asarray(rng.integers(0, 256, (n, m)), dtype=jnp.uint8)
+    table = jnp.asarray(rng.normal(0, 1, (m, 256)).astype(np.float32))
+    f = jax.jit(ref.pq_scan_ref)
+    us = _time(f, codes, table)
+    results.append(BenchResult(
+        name="kernel/pq_scan_ref", us_per_call=us,
+        derived={"codes": f"{n}x{m}",
+                 "gdist_per_s": f"{n / us:.1f}M"}))
+
+    blooms = jnp.asarray(rng.integers(0, 2**31, n).astype(np.uint32))
+    buckets = jnp.asarray(rng.integers(0, 256, n).astype(np.uint8))
+    masks = jnp.asarray(rng.integers(0, 2**16, 8).astype(np.uint32))
+    params = jnp.asarray(np.array([7, 8, 10, 200, 2, 1, 0, 0], np.int32))
+    f = jax.jit(ref.approx_probe_ref)
+    us = _time(f, blooms, buckets, masks, params)
+    results.append(BenchResult(
+        name="kernel/approx_probe_ref", us_per_call=us,
+        derived={"n": n, "gprobe_per_s": f"{n / us:.1f}M"}))
+
+    b, d = 4096, 128
+    vecs = jnp.asarray(rng.normal(0, 1, (b, d)).astype(np.float32))
+    q = jnp.asarray(rng.normal(0, 1, d).astype(np.float32))
+    f = jax.jit(ref.l2_rerank_ref)
+    us = _time(f, vecs, q)
+    results.append(BenchResult(
+        name="kernel/l2_rerank_ref", us_per_call=us,
+        derived={"b": b, "d": d}))
+    return results

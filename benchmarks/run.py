@@ -1,0 +1,58 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper figure/table (see DESIGN.md §1).
+
+  fig2   — mechanism × selectivity throughput sweep (paper Fig. 2)
+  fig5_6 — label workloads: throughput/latency vs baselines (Figs. 5/6)
+  fig7_9 — Label/Range/Hybrid suite + strict in-filter recall gap (Figs. 7-9)
+  fig10_11 — cost-model estimated vs actual I/O (Figs. 10/11)
+  table3 — probabilistic-filter memory + §5.4 fp-exploration stats
+  kernels — hot-loop micro-benchmarks
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_selectivity, fig5_6_label, fig7_9_workloads,
+                            fig10_11_cost_model, kernels_bench, table3_memory)
+    suites = {
+        "fig2": fig2_selectivity.run,
+        "fig5_6": fig5_6_label.run,
+        "fig7_9": fig7_9_workloads.run,
+        "fig10_11": fig10_11_cost_model.run,
+        "table3": table3_memory.run,
+        "kernels": kernels_bench.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    ok = True
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            for res in fn():
+                print(res.csv(), flush=True)
+        except Exception:                                  # noqa: BLE001
+            ok = False
+            print(f"{name},ERROR,{traceback.format_exc()[-400:]!r}",
+                  flush=True)
+        print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

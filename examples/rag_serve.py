@@ -1,0 +1,79 @@
+"""RAG-style serving: filtered vector retrieval (the paper's engine) feeding
+a decoder-only LM — the integration path of DESIGN.md §4.
+
+A corpus of synthetic "documents" is embedded (stub projector), indexed with
+attributes (topic labels + a freshness value); each request runs a filtered
+top-k search (e.g. "topic X AND published in range") and the retrieved
+motifs are prepended to the prompt before generation.
+
+    PYTHONPATH=src python examples/rag_serve.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core import (AndSelector, FilteredANNEngine, IndexConfig,
+                        LabelOrSelector, RangeSelector, SearchConfig)
+from repro.models import lm
+from repro.serve.decode import generate
+
+
+def embed_docs(docs: np.ndarray, d_embed: int, seed: int = 0) -> np.ndarray:
+    """Stub embedding: random projection of token histograms."""
+    rng = np.random.default_rng(seed)
+    vocab = int(docs.max()) + 1
+    proj = rng.normal(0, 1 / np.sqrt(vocab), (vocab, d_embed))
+    hist = np.zeros((len(docs), vocab), np.float32)
+    for i, doc in enumerate(docs):
+        np.add.at(hist[i], doc, 1.0)
+    return (hist @ proj).astype(np.float32)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n_docs, doc_len, vocab = 2000, 24, 512
+    docs = rng.integers(0, vocab, (n_docs, doc_len))
+    topics = rng.integers(0, 20, n_docs)                 # one topic label
+    freshness = rng.uniform(0, 100, n_docs).astype(np.float32)
+
+    # index the corpus with attributes
+    embeds = embed_docs(docs, d_embed=32)
+    offsets = np.arange(n_docs + 1, dtype=np.int64)
+    engine = FilteredANNEngine.build(
+        embeds, offsets, topics.astype(np.int32), 20, freshness,
+        IndexConfig(r=16, r_dense=160, l_build=32, pq_m=8))
+    print(f"indexed {n_docs} docs")
+
+    # a tiny LM as the generator
+    cfg = smoke_config("qwen2-1.5b")
+    cfg = dataclasses.replace(cfg, vocab=vocab)
+    params = lm.init_lm(cfg, jax.random.PRNGKey(0))
+
+    # serve a batch of filtered retrieve->generate requests
+    queries = embed_docs(docs[rng.integers(0, n_docs, 4)], 32, seed=1)
+    for i in range(4):
+        topic = int(rng.integers(0, 20))
+        sel = AndSelector([
+            LabelOrSelector(engine.label_store, [topic]),
+            RangeSelector(engine.range_store, 25.0, 90.0)])
+        ids, dists, stats = engine.search(
+            queries[i:i + 1], [sel], SearchConfig(k=4, l=24))
+        hit_ids = [int(x) for x in ids[0] if x >= 0]
+        # verify the filter held
+        assert all(topics[h] == topic and 25 <= freshness[h] < 90
+                   for h in hit_ids)
+        context = np.concatenate([docs[h][:8] for h in hit_ids]) \
+            if hit_ids else np.zeros(8, np.int64)
+        prompt = np.concatenate([context, docs[0][:8]])[None, :].astype(np.int32)
+        out = generate(params, cfg, jnp.asarray(prompt), n_new=8)
+        print(f"req {i}: topic={topic} mech={stats.mechanism[0]} "
+              f"retrieved={hit_ids} io={int(stats.io_pages[0])} "
+              f"generated={np.asarray(out)[0].tolist()}")
+    print("all retrievals satisfied their attribute constraints")
+
+
+if __name__ == "__main__":
+    main()

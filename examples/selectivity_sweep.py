@@ -1,0 +1,32 @@
+"""Reproduce the shape of paper Fig. 2 interactively: how the cost model
+routes queries as selectivity moves from 0.1% to 50%.
+
+    PYTHONPATH=src python examples/selectivity_sweep.py
+"""
+import numpy as np
+
+from repro.core import RangeSelector, SearchConfig
+from benchmarks.common import get_engine, modeled_qps, run_policy
+
+
+def main():
+    ds, e, build_s = get_engine(n=8000)
+    print(f"engine built in {build_s:.0f}s")
+    values = np.sort(e.range_store.values)
+    n = values.size
+    print(f"{'selectivity':>12} {'route':>6} {'io/q':>7} {'recall':>7} "
+          f"{'QPS(model)':>11}")
+    for frac in (0.001, 0.005, 0.02, 0.1, 0.3, 0.5):
+        lo = int(0.2 * n)
+        hi = min(n - 1, lo + max(1, int(frac * n)))
+        sels = [RangeSelector(e.range_store, float(values[lo]),
+                              float(values[hi])) for _ in range(8)]
+        r = run_policy(ds, e, sels, "speculative", l=32)
+        route = max(r["mech_counts"], key=r["mech_counts"].get)
+        qps = modeled_qps(r["io_pages"], r["cpu_us"])
+        print(f"{frac:12.3f} {route:>6} {r['io_pages']:7.0f} "
+              f"{r['recall']:7.3f} {qps:11.0f}")
+
+
+if __name__ == "__main__":
+    main()

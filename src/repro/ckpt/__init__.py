@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import (CheckpointManager, latest_step, restore,
+                                   save)

@@ -1,0 +1,2 @@
+from repro.configs.registry import (ARCHS, SHAPES, get_config, input_specs,
+                                    list_archs, runnable, smoke_config)

@@ -1,0 +1,103 @@
+"""False-positive-aware cost estimation (paper §4.2, Table 1).
+
+Two scaling principles over the candidate pool required to yield L valid
+results: selectivity scaling (L/s) and precision scaling (L/p). During
+speculative in-filtering at low selectivity (s·R_d/p_in ≤ R) the false
+positives are pure bridge nodes — traversed anyway — so their overhead is
+excluded; the traversal is equivalent to a standard search with effective
+pool length (L/s)·(R/R_d).
+
+Total cost = α·IO_pages + β·distance_comps, α=10, β=1 by default.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+GAMMA = 0.05   # relative cost of is_member_approx vs one distance comparison
+
+
+@dataclasses.dataclass(frozen=True)
+class CostInputs:
+    n: int            # dataset size
+    l: int            # target pool length L
+    s: float          # estimated query selectivity
+    p_pre: float      # precision of the pre-filter superset
+    p_in: float       # precision of is_member_approx
+    x_pre: int        # pages: attribute-index scan for pre-filtering
+    x_in: int         # pages: initial rare-posting fetch for in-filtering
+    r: int            # standard out-degree
+    r_d: int          # densified out-degree (direct + 2-hop)
+    s_r: int          # pages per standard record
+    s_d: int          # pages per densified record
+    gamma: float = GAMMA
+
+
+@dataclasses.dataclass(frozen=True)
+class MechanismCost:
+    io_pages: float
+    compute: float
+
+    def total(self, alpha: float, beta: float) -> float:
+        return alpha * self.io_pages + beta * self.compute
+
+
+def pre_filtering_cost(c: CostInputs) -> MechanismCost:
+    p = max(c.p_pre, 1e-9)
+    io = c.x_pre + (c.l / p) * c.s_r
+    compute = c.s * c.n / p
+    return MechanismCost(io, compute)
+
+
+def in_filtering_cost(c: CostInputs) -> MechanismCost:
+    s = max(c.s, 1e-9)
+    p = max(c.p_in, 1e-9)
+    if s * c.r_d / p <= c.r:     # low selectivity: false positives = bridges
+        hops = (c.l / s) * (c.r / max(c.r_d, 1))
+        io = c.x_in + hops * c.s_d
+        compute = (hops + c.gamma * (c.l / s)) * c.r
+    else:                        # high selectivity: precision scaling
+        hops = c.l / p
+        io = c.x_in + hops * c.s_d
+        compute = hops * (c.r + c.gamma * c.r_d)
+    return MechanismCost(io, compute)
+
+
+def post_filtering_cost(c: CostInputs) -> MechanismCost:
+    s = max(c.s, 1e-9)
+    hops = c.l / s
+    io = hops * c.s_r
+    compute = hops * c.r
+    return MechanismCost(io, compute)
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    mechanism: str           # 'pre' | 'in' | 'post'
+    costs: dict
+    effective_l: int         # pool length the executor should use
+
+
+def route_query(c: CostInputs, alpha: float = 10.0, beta: float = 1.0,
+                max_pool: int = 4096) -> Route:
+    """Pick the cheapest mechanism and size its search parameters."""
+    costs = {
+        "pre": pre_filtering_cost(c),
+        "in": in_filtering_cost(c),
+        "post": post_filtering_cost(c),
+    }
+    totals = {k: v.total(alpha, beta) for k, v in costs.items()}
+    mech = min(totals, key=totals.get)
+
+    s = max(c.s, 1e-9)
+    if mech == "post":
+        eff_l = min(max_pool, int(c.l / s) + c.l)
+    elif mech == "in":
+        p = max(c.p_in, 1e-9)
+        if s * c.r_d / p <= c.r:
+            eff_l = min(max_pool, int((c.l / s) * (c.r / max(c.r_d, 1))) + c.l)
+        else:
+            eff_l = min(max_pool, int(c.l / p) + c.l)
+    else:
+        eff_l = min(max_pool, int(c.l / max(c.p_pre, 1e-9)) + c.l)
+    return Route(mechanism=mech, costs=costs, effective_l=max(c.l, eff_l))

@@ -1,0 +1,163 @@
+"""Distributed filtered search on a TPU pod mesh (DESIGN.md §2 mapping).
+
+Tier mapping of the paper's memory hierarchy onto the pod:
+
+  * **Record store ("SSD")** — vectors, adjacency (+2-hop), attributes —
+    sharded by vector-ID range across ALL mesh devices (a LAION100M-scale
+    store is ~0.5 TB: it only fits sharded). A record fetch is a
+    masked-local-gather + psum: only the owning shard contributes nonzero
+    rows, every device receives the full record. This is the TPU analogue
+    of a batched SSD read, and its payload bytes are the collective term
+    of the ANN roofline.
+  * **Probabilistic tier ("DRAM")** — PQ codes, Bloom words, bucket codes —
+    replicated per chip (small: ≤ bytes/vector), probed with zero
+    communication inside the beam loop, exactly like the paper's in-memory
+    structures.
+
+Queries run replicated across the mesh (every device executes the same beam
+control flow); batching coalesces the per-hop fetches of all queries into
+one psum — the TPU-native form of PipeANN's pipelined I/O.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import pq as pq_mod
+from repro.core import search as search_mod
+from repro.core.records import RecordStore
+from repro.core.selectors import InMemory, QueryFilter
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    mesh: object
+    shard_axes: tuple = ("data", "model")   # record store shards over these
+
+    @property
+    def n_shards(self) -> int:
+        s = 1
+        for a in self.shard_axes:
+            s *= self.mesh.shape[a]
+        return s
+
+
+def pad_store(store: RecordStore, n_shards: int) -> RecordStore:
+    """Pad N to a shard multiple (pad records are never reachable)."""
+    n = store.n
+    n_pad = -(-n // n_shards) * n_shards
+    if n_pad == n:
+        return store
+    extra = n_pad - n
+
+    def pad(arr, fill):
+        widths = [(0, extra)] + [(0, 0)] * (arr.ndim - 1)
+        return jnp.pad(arr, widths, constant_values=fill)
+
+    return RecordStore(
+        vectors=pad(store.vectors, 0.0),
+        neighbors=pad(store.neighbors, -1),
+        dense_neighbors=pad(store.dense_neighbors, -1),
+        rec_labels=pad(store.rec_labels, -1),
+        rec_values=pad(store.rec_values, 0.0),
+        pages_std=store.pages_std, pages_dense=store.pages_dense)
+
+
+def store_shardings(plan: ShardPlan, store: RecordStore) -> RecordStore:
+    """NamedShardings: dim-0 (vector id) over the shard axes."""
+    ax = plan.shard_axes
+
+    def shard(arr):
+        spec = P(ax, *([None] * (arr.ndim - 1)))
+        return NamedSharding(plan.mesh, spec)
+
+    return RecordStore(
+        vectors=shard(store.vectors), neighbors=shard(store.neighbors),
+        dense_neighbors=shard(store.dense_neighbors),
+        rec_labels=shard(store.rec_labels), rec_values=shard(store.rec_values),
+        pages_std=store.pages_std, pages_dense=store.pages_dense)
+
+
+def make_sharded_fetch(plan: ShardPlan, n_total: int) -> Callable:
+    """Fetch-by-global-id inside shard_map: masked local gather + psum."""
+    n_shards = plan.n_shards
+    shard_size = n_total // n_shards
+    axis_names = plan.shard_axes
+
+    def fetch(store: RecordStore, ids: jax.Array) -> dict:
+        # flatten the shard axes into a linear shard index
+        idx = jax.lax.axis_index(axis_names)
+        lo = idx * shard_size
+        local = ids - lo
+        mine = (local >= 0) & (local < shard_size)
+        safe = jnp.where(mine, local, 0)
+
+        def pull(arr, off=0):
+            """psum-combine rows: only the owner contributes nonzero. For
+            id-valued arrays (`off=1`) the pad -1 survives the psum by
+            shifting to a non-negative domain first."""
+            got = arr[safe] + off
+            got = jnp.where(
+                mine.reshape(mine.shape + (1,) * (got.ndim - mine.ndim)),
+                got, 0)
+            return jax.lax.psum(got, axis_names) - off
+
+        return {
+            "vectors": pull(store.vectors),
+            "neighbors": pull(store.neighbors, off=1),
+            "dense_neighbors": pull(store.dense_neighbors, off=1),
+            "rec_labels": pull(store.rec_labels, off=1),
+            "rec_values": pull(store.rec_values),
+        }
+
+    return fetch
+
+
+def distributed_filtered_search(plan: ShardPlan, store: RecordStore,
+                                codes, codebook, mem: InMemory,
+                                qfilters: QueryFilter, queries, entry: int,
+                                params: search_mod.SearchParams):
+    """shard_map-wrapped beam search over the pod.
+
+    Record-store arrays arrive sharded over plan.shard_axes; everything
+    else replicated. Output replicated."""
+    mesh = plan.mesh
+    ax = plan.shard_axes
+    n_total = store.n
+    fetch = make_sharded_fetch(plan, n_total)
+    pages_std, pages_dense = store.pages_std, store.pages_dense
+    arrays = (store.vectors, store.neighbors, store.dense_neighbors,
+              store.rec_labels, store.rec_values)
+
+    def body(vecs, nbrs, dense, rlab, rval, codes_l, cents, mem_l, qf_l, q_l):
+        store_l = RecordStore(vecs, nbrs, dense, rlab, rval,
+                              pages_std, pages_dense)
+        cb_l = pq_mod.PQCodebook(centroids=cents, dim=codebook.dim)
+        return search_mod.filtered_search(
+            store_l, codes_l, cb_l, mem_l, qf_l, q_l, entry, params,
+            fetch_fn=fetch)
+
+    def rep(tree):
+        return jax.tree_util.tree_map(lambda l: P(*([None] * jnp.ndim(l))),
+                                      tree)
+
+    in_specs = ((P(ax, None), P(ax, None), P(ax, None), P(ax, None), P(ax))
+                + (rep(codes), rep(codebook.centroids), rep(mem),
+                   rep(qfilters), rep(queries)))
+    # output structure from the local variant (eval_shape must not trace the
+    # sharded fetch: axis_index is only bound inside shard_map)
+    out_shape = jax.eval_shape(
+        lambda: search_mod.filtered_search(
+            RecordStore(*arrays, pages_std, pages_dense), codes, codebook,
+            mem, qfilters, queries, entry, params))
+    out_specs = jax.tree_util.tree_map(lambda _: P(), out_shape)
+
+    f = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_vma=False)
+    return f(*arrays, codes, codebook.centroids, mem, qfilters, queries)

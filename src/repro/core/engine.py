@@ -1,0 +1,255 @@
+"""FilteredANNEngine — the end-to-end system (paper §4 Fig. 4).
+
+Query processing: per-query cost estimation routes to speculative
+pre-filtering, speculative in-filtering, or post-filtering; queries are
+grouped by (mechanism, pool-size bucket) and executed as batches; exact
+verification piggybacks on re-ranking everywhere.
+
+Baseline policies (paper §5.1 compared systems) are selectable:
+  * ``speculative`` — the paper's system (cost-model routing).
+  * ``basefilter``  — PipeANN-BaseFilter: strict pre-filtering when
+                      selectivity < 1%, otherwise post-filtering.
+  * ``strict_in``   — Filtered-DiskANN-like strict in-filtering.
+  * ``strict_pre``  — Milvus-like always-pre-filtering.
+  * ``post``        — always post-filtering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model, graph, pq as pq_mod, prefilter, search
+from repro.core.labels import LabelStore, build_label_store, padded_vec_labels
+from repro.core.ranges import RangeStore, build_range_store
+from repro.core.records import RecordStore, make_record_store
+from repro.core.selectors import (InMemory, Selector, stack_filters)
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    r: int = 32               # Vamana out-degree
+    r_dense: int = 480        # 2-hop sample size (10-20x R, paper §4.1)
+    l_build: int = 64
+    alpha: float = 1.2
+    pq_m: int = 16            # PQ subquantizers
+    pq_iters: int = 8
+    max_labels: int = 16      # per-record label slots (exact verification)
+    ql: int = 8               # max labels per query
+    cap: int = 2048           # merged rare-list capacity
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    k: int = 10
+    l: int = 32               # base pool length L (recall knob)
+    beam_width: int = 1
+    max_hops: int = 512
+    alpha: float = 10.0       # cost-model IO weight
+    beta: float = 1.0
+    max_pool: int = 1024      # effective-L cap
+    l_rerank_delta: int = 16  # δ extra re-ranked vectors for pre-filtering
+    policy: str = "speculative"
+
+
+@dataclasses.dataclass
+class QueryStats:
+    mechanism: list
+    io_pages: np.ndarray
+    est_io_pages: np.ndarray
+    dist_comps: np.ndarray
+    est_compute: np.ndarray
+    hops: np.ndarray
+    fp_explored: np.ndarray
+    explored: np.ndarray
+    n_valid: np.ndarray
+    selectivity: np.ndarray
+    precision_in: np.ndarray
+
+
+class FilteredANNEngine:
+    def __init__(self, store: RecordStore, codes, codebook, mem: InMemory,
+                 label_store: LabelStore, range_store: RangeStore,
+                 medoid: int, config: IndexConfig):
+        self.store = store
+        self.codes = codes
+        self.codebook = codebook
+        self.mem = mem
+        self.label_store = label_store
+        self.range_store = range_store
+        self.medoid = medoid
+        self.config = config
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, vectors: np.ndarray, label_offsets: np.ndarray,
+              label_flat: np.ndarray, n_labels: int, values: np.ndarray,
+              config: IndexConfig = IndexConfig()) -> "FilteredANNEngine":
+        vectors = np.asarray(vectors, np.float32)
+        n, d = vectors.shape
+        # pad dim to a multiple of pq_m
+        if d % config.pq_m:
+            pad = config.pq_m - d % config.pq_m
+            vectors = np.pad(vectors, ((0, 0), (0, pad)))
+            d += pad
+
+        adj, medoid = graph.build_vamana(vectors, config.r, config.l_build,
+                                         config.alpha, seed=config.seed)
+        dense = graph.densify_2hop(adj, config.r_dense, seed=config.seed + 1)
+
+        label_store = build_label_store(label_offsets, label_flat, n_labels)
+        range_store = build_range_store(values)
+        rec_labels = padded_vec_labels(label_store, config.max_labels)
+
+        store = make_record_store(vectors, adj, dense, rec_labels,
+                                  values.astype(np.float32))
+
+        key = jax.random.PRNGKey(config.seed)
+        codebook = pq_mod.train_pq(key, jnp.asarray(vectors), config.pq_m,
+                                   iters=config.pq_iters)
+        codes = pq_mod.encode_pq(codebook, jnp.asarray(vectors))
+        mem = InMemory(blooms=jnp.asarray(label_store.blooms),
+                       bucket_codes=jnp.asarray(range_store.bucket_codes))
+        return cls(store, codes, codebook, mem, label_store, range_store,
+                   medoid, config)
+
+    # ------------------------------------------------------------------
+    def _route(self, plan, scfg: SearchConfig) -> cost_model.Route:
+        c = cost_model.CostInputs(
+            n=self.store.n, l=scfg.l, s=plan.selectivity,
+            p_pre=plan.precision_pre, p_in=plan.precision_in,
+            x_pre=plan.pages_prescan, x_in=plan.pages_prefetch,
+            r=self.store.degree,
+            r_d=self.store.degree + self.store.dense_degree,
+            s_r=self.store.pages_std, s_d=self.store.pages_dense)
+        if scfg.policy == "speculative":
+            return cost_model.route_query(c, scfg.alpha, scfg.beta,
+                                          scfg.max_pool)
+        if scfg.policy == "basefilter":
+            mech = "pre" if plan.selectivity < 0.01 else "post"
+        elif scfg.policy == "strict_in":
+            mech = "in"
+        elif scfg.policy == "strict_pre":
+            mech = "pre"
+        elif scfg.policy == "post":
+            mech = "post"
+        else:
+            raise ValueError(scfg.policy)
+        full = cost_model.route_query(c, scfg.alpha, scfg.beta, scfg.max_pool)
+        eff_l = full.effective_l if mech == full.mechanism else \
+            _effective_l_for(mech, c, scfg.max_pool)
+        return cost_model.Route(mech, full.costs, eff_l)
+
+    # ------------------------------------------------------------------
+    def search(self, queries: np.ndarray, selectors: Sequence[Selector],
+               scfg: SearchConfig = SearchConfig()):
+        """Returns (ids (B,k), dists (B,k), QueryStats)."""
+        queries = np.asarray(queries, np.float32)
+        if queries.shape[1] != self.store.dim:
+            pad = self.store.dim - queries.shape[1]
+            queries = np.pad(queries, ((0, 0), (0, pad)))
+        B = queries.shape[0]
+        cfg = self.config
+        strict = scfg.policy in ("strict_in", "strict_pre", "basefilter")
+
+        plans = [s.plan(cfg.ql, cfg.cap) for s in selectors]
+        routes = [self._route(p, scfg) for p in plans]
+
+        out_ids = np.full((B, scfg.k), -1, np.int32)
+        out_d = np.full((B, scfg.k), np.inf, np.float32)
+        stats = QueryStats(
+            mechanism=[r.mechanism for r in routes],
+            io_pages=np.zeros(B, np.int64),
+            est_io_pages=np.array(
+                [r.costs[r.mechanism].io_pages for r in routes]),
+            dist_comps=np.zeros(B, np.int64),
+            est_compute=np.array(
+                [r.costs[r.mechanism].compute for r in routes]),
+            hops=np.zeros(B, np.int64),
+            fp_explored=np.zeros(B, np.int64),
+            explored=np.zeros(B, np.int64),
+            n_valid=np.zeros(B, np.int64),
+            selectivity=np.array([p.selectivity for p in plans]),
+            precision_in=np.array([p.precision_in for p in plans]),
+        )
+
+        groups: dict = {}
+        for i, r in enumerate(routes):
+            eff = 1 << max(5, math.ceil(math.log2(max(r.effective_l, 1))))
+            eff = min(eff, scfg.max_pool)
+            groups.setdefault((r.mechanism, eff), []).append(i)
+
+        for (mech, eff_l), idxs in groups.items():
+            sub_q = jnp.asarray(queries[idxs])
+            sub_sel = [selectors[i] for i in idxs]
+            sub_qf = stack_filters([plans[i].qfilter for i in idxs])
+            if mech == "pre":
+                pp = prefilter.PrefilterParams(
+                    l_rerank=scfg.l + scfg.l_rerank_delta, k=scfg.k)
+                res = prefilter.prefilter_search(
+                    self.store, self.codes, self.codebook, sub_sel, sub_qf,
+                    sub_q, pp, speculative=not strict)
+                for j, i in enumerate(idxs):
+                    out_ids[i] = np.asarray(res.ids[j])
+                    out_d[i] = np.asarray(res.dists[j])
+                    stats.io_pages[i] = int(res.io_pages[j])
+                    stats.dist_comps[i] = int(res.dist_comps[j])
+                    stats.n_valid[i] = int(res.n_valid[j])
+            else:
+                mode = {"in": "strict_in" if scfg.policy == "strict_in"
+                        else "spec_in", "post": "post"}[mech]
+                sp = search.SearchParams(
+                    l_search=eff_l, k=scfg.k, beam_width=scfg.beam_width,
+                    max_hops=scfg.max_hops, mode=mode, l_valid=scfg.l)
+                res = search.filtered_search(
+                    self.store, self.codes, self.codebook, self.mem, sub_qf,
+                    sub_q, self.medoid, sp)
+                prefetch = np.array([plans[i].pages_prefetch for i in idxs]) \
+                    if mode == "spec_in" else 0
+                for j, i in enumerate(idxs):
+                    out_ids[i] = np.asarray(res.ids[j])
+                    out_d[i] = np.asarray(res.dists[j])
+                    stats.io_pages[i] = int(res.io_pages[j]) + (
+                        int(prefetch[j]) if mode == "spec_in" else 0)
+                    stats.dist_comps[i] = int(res.dist_comps[j])
+                    stats.hops[i] = int(res.hops[j])
+                    stats.fp_explored[i] = int(res.fp_explored[j])
+                    stats.explored[i] = int(res.hops[j])
+                    stats.n_valid[i] = int(res.n_valid[j])
+        return out_ids, out_d, stats
+
+
+def _effective_l_for(mech: str, c: cost_model.CostInputs,
+                     max_pool: int) -> int:
+    s = max(c.s, 1e-9)
+    if mech == "post":
+        return min(max_pool, int(c.l / s) + c.l)
+    if mech == "in":
+        return min(max_pool, int(c.l / s * (c.r / max(c.r_d, 1))) + c.l)
+    return c.l
+
+
+def brute_force_filtered(vectors: np.ndarray, rec_labels: np.ndarray,
+                         rec_values: np.ndarray, qfilter, query: np.ndarray,
+                         k: int) -> np.ndarray:
+    """Exact ground truth: top-k valid ids by full-precision distance."""
+    from repro.core.selectors import is_member
+    ok = np.asarray(is_member(qfilter, jnp.asarray(rec_labels),
+                              jnp.asarray(rec_values)))
+    d = np.sum((vectors - query[None, :]) ** 2, axis=1)
+    d = np.where(ok, d, np.inf)
+    order = np.argsort(d)[:k]
+    return order[np.isfinite(d[order])]
+
+
+def recall_at_k(result_ids: np.ndarray, gt_ids: np.ndarray, k: int) -> float:
+    gt = set(int(x) for x in gt_ids[:k])
+    if not gt:
+        return 1.0
+    got = set(int(x) for x in result_ids[:k] if x >= 0)
+    return len(got & gt) / len(gt)

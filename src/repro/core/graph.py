@@ -1,0 +1,166 @@
+"""Vamana graph construction (unmodified algorithm, paper §5.1) + ACORN-style
+2-hop densification (paper §4.1).
+
+Build is an offline path: a JAX batched greedy search drives candidate
+generation on-device; robust pruning and reverse-edge insertion run in numpy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Batched greedy (beam) search over an adjacency array — build-time navigator.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("ell", "max_hops"))
+def greedy_search(data, adj, entry: int, queries, ell: int, max_hops: int):
+    """Best-first search with a size-`ell` pool; exact (full-precision) dists.
+
+    data: (N, D) f32; adj: (N, R) i32 (-1 pad); queries: (B, D).
+    Returns (pool_ids, pool_dists): (B, ell) each, sorted ascending by dist.
+    """
+    r = adj.shape[1]
+
+    def one(q):
+        d0 = jnp.sum((data[entry] - q) ** 2)
+        pool_ids = jnp.full((ell,), -1, jnp.int32).at[0].set(entry)
+        pool_d = jnp.full((ell,), jnp.inf, jnp.float32).at[0].set(d0)
+        explored = jnp.zeros((ell,), jnp.bool_)
+
+        def cond(state):
+            _, pool_d, explored, hops = state
+            has_frontier = jnp.any(~explored & jnp.isfinite(pool_d))
+            return has_frontier & (hops < max_hops)
+
+        def body(state):
+            pool_ids, pool_d, explored, hops = state
+            # pick best unexplored
+            masked = jnp.where(explored, jnp.inf, pool_d)
+            i = jnp.argmin(masked)
+            explored = explored.at[i].set(True)
+            cur = pool_ids[i]
+            nbrs = adj[cur]                                    # (R,)
+            valid = nbrs >= 0
+            nv = jnp.where(valid, nbrs, 0)
+            nd = jnp.sum((data[nv] - q[None, :]) ** 2, axis=1)
+            nd = jnp.where(valid, nd, jnp.inf)
+            # dedup against pool
+            dup = jnp.any(nbrs[:, None] == pool_ids[None, :], axis=1)
+            nd = jnp.where(dup, jnp.inf, nd)
+            # merge: keep ell best of pool ∪ neighbors
+            all_ids = jnp.concatenate([pool_ids, nbrs])
+            all_d = jnp.concatenate([pool_d, nd])
+            all_exp = jnp.concatenate([explored, jnp.zeros((r,), jnp.bool_)])
+            order = jnp.argsort(all_d)[:ell]
+            return (all_ids[order], all_d[order], all_exp[order], hops + 1)
+
+        pool_ids, pool_d, explored, _ = jax.lax.while_loop(
+            cond, body, (pool_ids, pool_d, explored, jnp.int32(0)))
+        return pool_ids, pool_d
+
+    return jax.vmap(one)(queries)
+
+
+# ---------------------------------------------------------------------------
+# Robust prune (numpy, squared distances -> alpha^2 domination test)
+# ---------------------------------------------------------------------------
+
+def robust_prune(p_vec: np.ndarray, cand_ids: np.ndarray,
+                 cand_vecs: np.ndarray, r: int, alpha: float) -> np.ndarray:
+    """Vamana RobustPrune: keep ≤ r diverse candidates."""
+    if cand_ids.size == 0:
+        return cand_ids
+    d_p = np.sum((cand_vecs - p_vec[None, :]) ** 2, axis=1)
+    order = np.argsort(d_p, kind="stable")
+    a2 = alpha * alpha
+    pruned = np.zeros(cand_ids.size, dtype=bool)
+    keep: list[int] = []
+    for idx in order:
+        if pruned[idx]:
+            continue
+        keep.append(idx)
+        if len(keep) >= r:
+            break
+        d_kc = np.sum((cand_vecs - cand_vecs[idx][None, :]) ** 2, axis=1)
+        pruned |= a2 * d_kc <= d_p
+        pruned[idx] = True
+    return cand_ids[np.array(keep, dtype=np.int64)]
+
+
+def build_vamana(data: np.ndarray, r: int = 32, ell: int = 64,
+                 alpha: float = 1.2, batch: int = 1024,
+                 seed: int = 0) -> tuple[np.ndarray, int]:
+    """Build a Vamana graph. Returns (adjacency (N, r) int32 padded -1, medoid)."""
+    rng = np.random.default_rng(seed)
+    data = np.asarray(data, dtype=np.float32)
+    n = data.shape[0]
+    medoid = int(np.argmin(np.sum((data - data.mean(0, keepdims=True)) ** 2, 1)))
+
+    # random initial graph
+    adj = rng.integers(0, n, size=(n, r), dtype=np.int64).astype(np.int32)
+    adj[adj == np.arange(n, dtype=np.int32)[:, None]] = medoid
+
+    data_dev = jnp.asarray(data)
+
+    for alpha_pass in (1.0, alpha):
+        order = rng.permutation(n)
+        for start in range(0, n, batch):
+            ids = order[start:start + batch]
+            adj_dev = jnp.asarray(adj)
+            pool_ids, _ = greedy_search(data_dev, adj_dev, medoid,
+                                        data_dev[ids], ell, max_hops=ell)
+            pool_ids = np.asarray(pool_ids)
+            for k, p in enumerate(ids):
+                cands = np.concatenate([pool_ids[k], adj[p]])
+                cands = np.unique(cands[(cands >= 0) & (cands != p)])
+                kept = robust_prune(data[p], cands, data[cands], r, alpha_pass)
+                row = np.full(r, -1, np.int32)
+                row[:kept.size] = kept
+                adj[p] = row
+                # reverse edges
+                for q in kept:
+                    qrow = adj[q]
+                    if p in qrow:
+                        continue
+                    slot = np.where(qrow < 0)[0]
+                    if slot.size:
+                        adj[q, slot[0]] = p
+                    else:
+                        rc = np.unique(np.concatenate([qrow, [p]]))
+                        rc = rc[(rc >= 0) & (rc != q)]
+                        kept_q = robust_prune(data[q], rc, data[rc], r, alpha_pass)
+                        qnew = np.full(r, -1, np.int32)
+                        qnew[:kept_q.size] = kept_q
+                        adj[q] = qnew
+    return adj, medoid
+
+
+def densify_2hop(adj: np.ndarray, r_dense: int, seed: int = 0) -> np.ndarray:
+    """Random 2-hop sample per node (paper §4.1: ~10–20× direct degree).
+
+    Vectorized: pick random (first-hop, second-hop) slot pairs; duplicates and
+    occasional self-references are tolerated (search dedups), matching the
+    paper's random-subset semantics.
+    """
+    rng = np.random.default_rng(seed)
+    n, r = adj.shape
+    i1 = rng.integers(0, r, size=(n, r_dense))
+    i2 = rng.integers(0, r, size=(n, r_dense))
+    hop1 = np.take_along_axis(adj, i1, axis=1)               # (N, R_d)
+    hop1_safe = np.where(hop1 >= 0, hop1, 0)
+    hop2 = adj[hop1_safe, i2]                                # (N, R_d)
+    hop2 = np.where(hop1 >= 0, hop2, -1)
+    hop2 = np.where(hop2 == np.arange(n)[:, None], -1, hop2)
+    return hop2.astype(np.int32)
+
+
+def graph_stats(adj: np.ndarray) -> dict:
+    valid = adj >= 0
+    deg = valid.sum(1)
+    return {"avg_degree": float(deg.mean()), "min_degree": int(deg.min()),
+            "max_degree": int(deg.max())}

@@ -1,0 +1,60 @@
+"""SSD I/O accounting for the TPU-hosted record store.
+
+The paper evaluates on SSD pages (4 KB). We keep the same accounting unit so the
+paper's I/O-centric figures reproduce exactly, while the physical transport on a
+TPU pod is an HBM/ICI record gather (see DESIGN.md §2).
+
+All search routines thread integer page counters through their JAX loops; this
+module centralizes the constants and the latency model used by benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+PAGE_BYTES = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class IOModel:
+    """Latency/throughput model applied to counted I/O.
+
+    t_page_us: modeled latency of one random 4 KB read (NVMe incl. queueing).
+    parallelism: in-flight reads the device sustains (SSD queue depth analogue;
+        on TPU this is the coalesced-gather width).
+    """
+    page_bytes: int = PAGE_BYTES
+    t_page_us: float = 100.0
+    parallelism: int = 64
+
+    def pages(self, nbytes: int) -> int:
+        return max(1, math.ceil(nbytes / self.page_bytes))
+
+    def latency_us(self, pages_sequentially_dependent: int,
+                   pages_parallel: int = 0) -> float:
+        """Modeled I/O latency: dependent pages serialize (graph hops), batched
+        pages overlap up to ``parallelism``."""
+        par = math.ceil(pages_parallel / max(1, self.parallelism))
+        return (pages_sequentially_dependent + par) * self.t_page_us
+
+
+def record_bytes(dim: int, vec_dtype_size: int, n_neighbors: int,
+                 max_labels: int, n_numeric: int) -> int:
+    """Size of one co-located record: full vector + neighbor IDs + attributes.
+
+    Mirrors the paper's layout: the attributes ride in the record's final-page
+    slack, so verification costs no extra I/O beyond the re-rank fetch.
+    """
+    vec = dim * vec_dtype_size
+    nbrs = 4 + n_neighbors * 4          # count + ids
+    attrs = 4 + max_labels * 4 + n_numeric * 4
+    return vec + nbrs + attrs
+
+
+def record_pages(dim: int, vec_dtype_size: int, n_neighbors: int,
+                 max_labels: int, n_numeric: int,
+                 page_bytes: int = PAGE_BYTES) -> int:
+    return max(1, math.ceil(
+        record_bytes(dim, vec_dtype_size, n_neighbors, max_labels, n_numeric)
+        / page_bytes))

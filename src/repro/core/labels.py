@@ -1,0 +1,112 @@
+"""Label attribute store: CSR per-vector labels + on-"SSD" inverted indexes.
+
+Layout (paper §4.3.1):
+  - on-SSD: one posting list per label (vector IDs ascending, contiguous)
+    -> scanned by pre_filter_approx, I/O counted in 4 KB pages;
+  - in-memory: per-label offsets + counts (selectivity estimation) and the
+    per-vector Bloom words (bloom.py).
+
+Vectors additionally carry a row-wise copy of their labels inside the record
+store (records.py) for exact verification — the paper's duplicated layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import bloom
+from repro.core.io_sim import PAGE_BYTES
+
+
+@dataclasses.dataclass
+class LabelStore:
+    n_vectors: int
+    n_labels: int
+    # CSR over vectors (row-wise copy; "in the records")
+    vec_offsets: np.ndarray        # (N+1,) int64
+    vec_labels: np.ndarray         # (nnz,) int32
+    # CSR over labels (inverted index; "on SSD")
+    inv_offsets: np.ndarray        # (n_labels+1,) int64
+    inv_postings: np.ndarray       # (nnz,) int32 vector ids, ascending per label
+    # in-memory summaries
+    label_counts: np.ndarray       # (n_labels,) int64
+    blooms: np.ndarray             # (N,) uint32
+    k_hashes: int = 2
+
+    @property
+    def avg_labels_per_vec(self) -> float:
+        return float(self.vec_labels.size) / max(1, self.n_vectors)
+
+    def selectivity(self, label: int) -> float:
+        return float(self.label_counts[label]) / max(1, self.n_vectors)
+
+    def posting_pages(self, label: int, page_bytes: int = PAGE_BYTES) -> int:
+        """Pages read to scan one label's posting list from SSD."""
+        nbytes = int(self.label_counts[label]) * 4
+        return max(1, -(-nbytes // page_bytes))
+
+    def postings(self, label: int) -> np.ndarray:
+        s, e = int(self.inv_offsets[label]), int(self.inv_offsets[label + 1])
+        return self.inv_postings[s:e]
+
+    def labels_of(self, vec_id: int) -> np.ndarray:
+        s, e = int(self.vec_offsets[vec_id]), int(self.vec_offsets[vec_id + 1])
+        return self.vec_labels[s:e]
+
+    def memory_bytes(self) -> dict:
+        """Table-3 style accounting: in-memory filter size vs on-SSD index."""
+        return {
+            "bloom_bytes": int(self.blooms.nbytes),
+            "counts_bytes": int(self.label_counts.nbytes + self.inv_offsets.nbytes),
+            "ssd_inverted_index_bytes": int(self.inv_postings.nbytes),
+        }
+
+
+def build_label_store(vec_offsets: np.ndarray, vec_labels: np.ndarray,
+                      n_labels: int, k_hashes: int = 2) -> LabelStore:
+    n = vec_offsets.size - 1
+    vec_offsets = vec_offsets.astype(np.int64)
+    vec_labels = vec_labels.astype(np.int32)
+
+    # dedupe (vector, label) pairs: repeated labels would inflate posting
+    # lists and push selectivity estimates past 1.0
+    vec_ids0 = np.repeat(np.arange(n, dtype=np.int64), np.diff(vec_offsets))
+    pair = vec_ids0 * (n_labels + 1) + vec_labels
+    keep = np.zeros(pair.size, bool)
+    uniq_idx = np.unique(pair, return_index=True)[1]
+    keep[uniq_idx] = True
+    if not keep.all():
+        vec_labels = vec_labels[keep]
+        counts = np.bincount(vec_ids0[keep], minlength=n)
+        vec_offsets = np.zeros(n + 1, np.int64)
+        np.cumsum(counts, out=vec_offsets[1:])
+
+    # invert: sort (label, vec) pairs by label then vec id
+    vec_ids = np.repeat(np.arange(n, dtype=np.int32), np.diff(vec_offsets))
+    order = np.lexsort((vec_ids, vec_labels))
+    inv_postings = vec_ids[order]
+    sorted_labels = vec_labels[order]
+    label_counts = np.bincount(sorted_labels, minlength=n_labels).astype(np.int64)
+    inv_offsets = np.zeros(n_labels + 1, dtype=np.int64)
+    np.cumsum(label_counts, out=inv_offsets[1:])
+
+    blooms = bloom.build_blooms(vec_offsets, vec_labels, n, k_hashes)
+    return LabelStore(
+        n_vectors=n, n_labels=n_labels,
+        vec_offsets=vec_offsets, vec_labels=vec_labels,
+        inv_offsets=inv_offsets, inv_postings=inv_postings,
+        label_counts=label_counts, blooms=blooms, k_hashes=k_hashes,
+    )
+
+
+def padded_vec_labels(store: LabelStore, max_labels: int,
+                      pad_value: int = -1) -> np.ndarray:
+    """Dense (N, max_labels) int32 copy for the record store (exact verify)."""
+    out = np.full((store.n_vectors, max_labels), pad_value, dtype=np.int32)
+    counts = np.diff(store.vec_offsets)
+    rows = np.repeat(np.arange(store.n_vectors), counts)
+    pos = np.arange(store.vec_labels.size) - np.repeat(store.vec_offsets[:-1], counts)
+    keep = pos < max_labels
+    out[rows[keep], pos[keep]] = store.vec_labels[keep]
+    return out

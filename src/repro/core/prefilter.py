@@ -1,0 +1,157 @@
+"""Speculative pre-filtering (paper §3 Fig. 3a): attribute-index scan →
+in-memory PQ brute force over the superset → exact re-rank + verification.
+
+The superset comes from ``Selector.pre_filter_approx`` (host side, pages
+accounted): exact posting merges for labels, sequential sorted-index scans
+for ranges, heavy-branch pruning for ANDs. The PQ scan runs on device in
+fixed-size chunks (a ``lax.scan`` carrying a running top-(L+δ)) so any
+selectivity fits a static shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pq as pq_mod
+from repro.core.records import RecordStore
+from repro.core.selectors import QueryFilter, Selector, is_member
+
+BIG = jnp.float32(1e30)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefilterParams:
+    l_rerank: int            # L + δ: vectors fetched from SSD for re-ranking
+    k: int = 10
+    chunk: int = 8192        # PQ-scan chunk size (static)
+    max_candidates: int = 1 << 20   # superset hard cap
+
+
+class PrefilterResult(NamedTuple):
+    ids: jax.Array           # (B, k) verified-valid top-k (-1 pad)
+    dists: jax.Array         # (B, k)
+    io_pages: jax.Array      # (B,) scan + re-rank pages
+    dist_comps: jax.Array    # (B,)
+    n_valid: jax.Array       # (B,)
+
+
+@functools.partial(jax.jit, static_argnames=("l_rerank", "chunk", "distance_fn"))
+def _pq_topl(codes, codebook, query, cand_ids, cand_len, l_rerank: int,
+             chunk: int, distance_fn: Callable = pq_mod.adc_lookup):
+    """Running top-l over a padded candidate id array, chunked scan.
+
+    cand_ids: (C,) int32 padded with -1 (C divisible by chunk).
+    Returns (top_ids (l,), top_dists (l,)).
+    """
+    table = pq_mod.distance_table(codebook, query)
+    n_chunks = cand_ids.shape[0] // chunk
+
+    def step(carry, ids_chunk):
+        top_ids, top_d = carry
+        live = ids_chunk >= 0
+        d = distance_fn(codes[jnp.where(live, ids_chunk, 0)], table)
+        d = jnp.where(live, d, BIG)
+        all_ids = jnp.concatenate([top_ids, ids_chunk])
+        all_d = jnp.concatenate([top_d, d])
+        neg_d, idx = jax.lax.top_k(-all_d, l_rerank)
+        return (all_ids[idx], -neg_d), None
+
+    init = (jnp.full((l_rerank,), -1, jnp.int32),
+            jnp.full((l_rerank,), BIG, jnp.float32))
+    (top_ids, top_d), _ = jax.lax.scan(
+        step, init, cand_ids.reshape(n_chunks, chunk))
+    return top_ids, top_d
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def _rerank_verify(store: RecordStore, qf: QueryFilter, query,
+                   top_ids, params: PrefilterParams):
+    """Fetch top-(L+δ) records, exact distance + exact verification."""
+    live = top_ids >= 0
+    safe = jnp.where(live, top_ids, 0)
+    vecs = store.vectors[safe]
+    rl = store.rec_labels[safe]
+    rv = store.rec_values[safe]
+    d = vecs - query[None, :]
+    ex_d = jnp.where(live, jnp.sum(d * d, axis=-1), BIG)
+    ok = is_member(qf, rl, rv) & live
+    key = jnp.where(ok, ex_d, BIG)
+    order = jnp.argsort(key)[:params.k]
+    ids = jnp.where(ok[order], top_ids[order], -1)
+    dists = jnp.where(ok[order], ex_d[order], jnp.inf)
+    io = jnp.sum(live) * store.pages_std
+    return ids, dists, io, jnp.sum(ok)
+
+
+def prefilter_search(store: RecordStore, codes, codebook, selectors, qfilters,
+                     queries, params: PrefilterParams,
+                     distance_fn: Callable = pq_mod.adc_lookup,
+                     speculative: bool = True) -> PrefilterResult:
+    """Host-driven pre-filtering for a query batch.
+
+    ``speculative=True`` uses Selector.pre_filter_approx (partial scans,
+    heavy-branch pruning); ``False`` forces exact full-constraint scans
+    (the strict baseline — implemented as evaluating every branch).
+    """
+    B = queries.shape[0]
+    out_ids, out_d = [], []
+    io_pages = np.zeros(B, np.int64)
+    dist_comps = np.zeros(B, np.int64)
+    n_valid = np.zeros(B, np.int64)
+
+    for b in range(B):
+        sel: Selector = selectors[b]
+        if speculative:
+            cand, pages = sel.pre_filter_approx()
+        else:
+            cand, pages = _strict_scan(sel)
+        cand = cand[:params.max_candidates]
+        pad = -(-max(cand.size, 1) // params.chunk) * params.chunk
+        cand_padded = np.full(pad, -1, np.int32)
+        cand_padded[:cand.size] = cand
+        qf = jax.tree_util.tree_map(lambda x: jnp.asarray(x)[b], qfilters)
+        top_ids, _ = _pq_topl(codes, codebook, queries[b],
+                              jnp.asarray(cand_padded), cand.size,
+                              params.l_rerank, params.chunk, distance_fn)
+        ids, dists, io, nv = _rerank_verify(store, qf, queries[b], top_ids,
+                                            params)
+        out_ids.append(ids)
+        out_d.append(dists)
+        io_pages[b] = pages + int(io)
+        dist_comps[b] = cand.size
+        n_valid[b] = int(nv)
+
+    return PrefilterResult(
+        ids=jnp.stack(out_ids), dists=jnp.stack(out_d),
+        io_pages=jnp.asarray(io_pages), dist_comps=jnp.asarray(dist_comps),
+        n_valid=jnp.asarray(n_valid))
+
+
+def _strict_scan(sel: Selector) -> tuple[np.ndarray, int]:
+    """Exact pre-filter: evaluate every branch (no pruning/speculation)."""
+    from repro.core.selectors import (AndSelector, LabelAndSelector,
+                                      LabelOrSelector, OrSelector,
+                                      RangeSelector)
+    if isinstance(sel, LabelAndSelector):
+        merged, pages = sel._fetch_merged(sel.labels, "and")
+        return merged.astype(np.int32), pages
+    if isinstance(sel, LabelOrSelector):
+        merged, pages = sel._fetch_merged(sel.labels, "or")
+        return merged.astype(np.int32), pages
+    if isinstance(sel, RangeSelector):
+        ids, pages = sel.store.scan(sel.lo, sel.hi)
+        return ids.astype(np.int32), pages
+    if isinstance(sel, AndSelector):
+        a, pa = _strict_scan(sel.label_sel)
+        b, pb = _strict_scan(sel.range_sel)
+        return np.intersect1d(a, b).astype(np.int32), pa + pb
+    if isinstance(sel, OrSelector):
+        a, pa = _strict_scan(sel.label_sel)
+        b, pb = _strict_scan(sel.range_sel)
+        return np.union1d(a, b).astype(np.int32), pa + pb
+    return sel.pre_filter_approx()

@@ -1,0 +1,95 @@
+"""Range attribute store: on-"SSD" sorted index + in-memory quantized summaries.
+
+Layout (paper §4.3.2):
+  - on-SSD: flat array of <vector_id, value> pairs sorted by value; a range
+    query scans one contiguous chunk (sequential reads, counted in pages);
+  - in-memory: (a) 1-byte bucket code per vector against 256 global quantile
+    bucket boundaries (drives is_member_approx), (b) a 1000-quantile summary
+    for selectivity estimation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.io_sim import PAGE_BYTES
+
+N_BUCKETS = 256
+N_QUANTILES = 1000
+
+
+@dataclasses.dataclass
+class RangeStore:
+    n_vectors: int
+    values: np.ndarray           # (N,) float32 — row-wise copy (in records)
+    # on-SSD sorted index
+    sorted_values: np.ndarray    # (N,) float32
+    sorted_ids: np.ndarray       # (N,) int32
+    # in-memory summaries
+    bucket_bounds: np.ndarray    # (N_BUCKETS+1,) float32 — global boundaries
+    bucket_codes: np.ndarray     # (N,) uint8 — per-vector 1-byte code
+    quantiles: np.ndarray        # (N_QUANTILES,) float32 — for selectivity
+
+    def selectivity(self, lo: float, hi: float) -> float:
+        """Estimated fraction of vectors with value in [lo, hi)."""
+        q = self.quantiles
+        f_lo = np.searchsorted(q, lo, side="left") / q.size
+        f_hi = np.searchsorted(q, hi, side="left") / q.size
+        return float(max(0.0, f_hi - f_lo))
+
+    def precision(self, lo: float, hi: float) -> float:
+        """Estimated precision of the bucket-code is_member_approx (paper:
+        true positives from quantiles ÷ positives from coarse buckets)."""
+        true_pos = self.selectivity(lo, hi)
+        blo, bhi = self.bucket_range(lo, hi)
+        # fraction of vectors in overlapping coarse buckets, from quantiles
+        cov_lo = float(self.bucket_bounds[blo])
+        cov_hi = float(self.bucket_bounds[min(bhi + 1, N_BUCKETS)])
+        total_pos = self.selectivity(cov_lo, np.nextafter(cov_hi, np.inf))
+        return float(true_pos / max(total_pos, 1e-12))
+
+    def bucket_range(self, lo: float, hi: float) -> tuple[int, int]:
+        """Inclusive coarse-bucket id range overlapping [lo, hi)."""
+        blo = int(np.clip(np.searchsorted(self.bucket_bounds, lo, side="right") - 1,
+                          0, N_BUCKETS - 1))
+        bhi = int(np.clip(np.searchsorted(self.bucket_bounds, hi, side="left") - 1,
+                          0, N_BUCKETS - 1))
+        return blo, max(blo, bhi)
+
+    def scan(self, lo: float, hi: float) -> tuple[np.ndarray, int]:
+        """Exact on-SSD scan: valid ids + pages read (sequential)."""
+        s = int(np.searchsorted(self.sorted_values, lo, side="left"))
+        e = int(np.searchsorted(self.sorted_values, hi, side="left"))
+        pages = max(1, -(-max(e - s, 0) * 8 // PAGE_BYTES))
+        return self.sorted_ids[s:e], pages
+
+    def memory_bytes(self) -> dict:
+        return {
+            "bucket_codes_bytes": int(self.bucket_codes.nbytes),
+            "bounds_bytes": int(self.bucket_bounds.nbytes + self.quantiles.nbytes),
+            "ssd_sorted_index_bytes": int(self.sorted_values.nbytes
+                                          + self.sorted_ids.nbytes),
+        }
+
+
+def build_range_store(values: np.ndarray) -> RangeStore:
+    values = np.asarray(values, dtype=np.float32)
+    n = values.size
+    order = np.argsort(values, kind="stable")
+    sorted_values = values[order]
+    sorted_ids = order.astype(np.int32)
+
+    qs = np.quantile(values, np.linspace(0.0, 1.0, N_BUCKETS + 1))
+    # strictly increasing boundaries (dedupe plateaus)
+    qs = np.maximum.accumulate(qs)
+    bucket_bounds = qs.astype(np.float32)
+    bucket_bounds[0] = -np.inf if n == 0 else np.nextafter(bucket_bounds[0], -np.inf)
+    codes = np.clip(np.searchsorted(bucket_bounds, values, side="right") - 1,
+                    0, N_BUCKETS - 1).astype(np.uint8)
+    quantiles = np.quantile(values, np.linspace(0.0, 1.0, N_QUANTILES)) \
+        .astype(np.float32)
+    return RangeStore(n_vectors=n, values=values,
+                      sorted_values=sorted_values, sorted_ids=sorted_ids,
+                      bucket_bounds=bucket_bounds, bucket_codes=codes,
+                      quantiles=quantiles)

@@ -1,0 +1,67 @@
+"""Record store: the on-"SSD" tier (see DESIGN.md §2).
+
+Each logical record co-locates (paper Fig. 1 + §4.1):
+    full-precision vector | out-neighbor IDs | [2-hop neighbor IDs] | attributes
+
+Attributes ride in the record's final-page slack, so exact verification during
+re-ranking costs no extra I/O. ``pages_std`` / ``pages_dense`` give the page
+cost of one record fetch without / with the densified 2-hop list; in-filtering
+reads the dense record, pre-/post-filtering the standard one.
+
+On a TPU pod the arrays are sharded over the `model` mesh axis (see
+core/distributed.py); here they are plain device arrays.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import io_sim
+
+
+class RecordStore(NamedTuple):
+    vectors: jax.Array        # (N, D) float32 — full precision
+    neighbors: jax.Array      # (N, R) int32, padded -1
+    dense_neighbors: jax.Array  # (N, R_d) int32, padded -1 (2-hop sample)
+    rec_labels: jax.Array     # (N, ML) int32, padded -1
+    rec_values: jax.Array     # (N,) float32
+    pages_std: int            # pages per standard-record fetch
+    pages_dense: int          # pages per densified-record fetch
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def degree(self) -> int:
+        return self.neighbors.shape[1]
+
+    @property
+    def dense_degree(self) -> int:
+        return self.dense_neighbors.shape[1]
+
+
+def make_record_store(vectors: np.ndarray, neighbors: np.ndarray,
+                      dense_neighbors: np.ndarray, rec_labels: np.ndarray,
+                      rec_values: np.ndarray,
+                      vec_dtype_size: int = 4) -> RecordStore:
+    n, d = vectors.shape
+    ml = rec_labels.shape[1]
+    pages_std = io_sim.record_pages(d, vec_dtype_size, neighbors.shape[1],
+                                    ml, 1)
+    pages_dense = io_sim.record_pages(
+        d, vec_dtype_size, neighbors.shape[1] + dense_neighbors.shape[1], ml, 1)
+    return RecordStore(
+        vectors=jnp.asarray(vectors, jnp.float32),
+        neighbors=jnp.asarray(neighbors, jnp.int32),
+        dense_neighbors=jnp.asarray(dense_neighbors, jnp.int32),
+        rec_labels=jnp.asarray(rec_labels, jnp.int32),
+        rec_values=jnp.asarray(rec_values, jnp.float32),
+        pages_std=pages_std, pages_dense=pages_dense)

@@ -1,0 +1,261 @@
+"""Batched best-first graph search with speculative / strict / post filtering.
+
+This is the paper's §3–§4 search engine expressed as a shape-static JAX
+program: a ``lax.while_loop`` advances every query's beam one hop per step,
+so the record fetches of a whole query batch coalesce into one gather — the
+TPU-native analogue of PipeANN's pipelined SSD reads (DESIGN.md §2).
+
+Modes
+-----
+* ``post``      — plain traversal, dummy approx filter (always true); validity
+                  checked only at verification (the loose extreme of §3).
+* ``spec_in``   — speculative in-filtering: neighbors (direct + 2-hop) are
+                  screened by ``is_member_approx`` against in-memory Bloom
+                  words / bucket codes; up to R approx-valid neighbors are
+                  kept per hop, back-filled with invalid *direct* neighbors
+                  (bridge nodes). Exploration prefers possibly-valid nodes
+                  even when invalid ones are geometrically closer.
+* ``strict_in`` — the strict baseline (Filtered-DiskANN-like): every neighbor's
+                  exact attributes are read from the record store before it may
+                  enter the pool (+1 page per neighbor — the I/O bottleneck the
+                  paper eliminates).
+
+Exact verification piggybacks on the re-rank fetch: every explored record's
+full vector *and* attributes arrive in the same (already-counted) pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pq as pq_mod
+from repro.core.records import RecordStore
+from repro.core.selectors import InMemory, QueryFilter, is_member, is_member_approx
+
+INVALID_PENALTY = jnp.float32(1e12)
+BIG = jnp.float32(1e30)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    l_search: int           # candidate pool length L
+    k: int = 10
+    beam_width: int = 1     # W records fetched per hop (pipelined I/O analogue)
+    max_hops: int = 256
+    mode: str = "spec_in"   # 'post' | 'spec_in' | 'strict_in'
+    l_valid: int = 0        # early-exit once this many verified-valid found
+                            # (0 -> defaults to l_search)
+
+    def __post_init__(self):
+        assert self.mode in ("post", "spec_in", "strict_in")
+
+
+class SearchResult(NamedTuple):
+    ids: jax.Array          # (B, k) int32 — verified-valid top-k (-1 pad)
+    dists: jax.Array        # (B, k) float32 exact distances
+    io_pages: jax.Array     # (B,) int32 pages fetched
+    hops: jax.Array         # (B,) int32 explored records
+    dist_comps: jax.Array   # (B,) int32 PQ distance computations
+    approx_checks: jax.Array  # (B,) int32 is_member_approx evaluations
+    n_valid: jax.Array      # (B,) int32 verified-valid results found
+    fp_explored: jax.Array  # (B,) int32 explored records that verified invalid
+
+
+def _exact_sq_dist(vecs, q):
+    d = vecs - q[None, :]
+    return jnp.sum(d * d, axis=-1)
+
+
+def local_fetch(store: RecordStore, ids: jax.Array) -> dict:
+    """Single-host record fetch: plain gathers. The distributed engine
+    (core/distributed.py) swaps in a psum-combined sharded fetch."""
+    return {
+        "vectors": store.vectors[ids],
+        "neighbors": store.neighbors[ids],
+        "dense_neighbors": store.dense_neighbors[ids],
+        "rec_labels": store.rec_labels[ids],
+        "rec_values": store.rec_values[ids],
+    }
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "distance_fn", "fetch_fn"))
+def filtered_search(store: RecordStore, codes: jax.Array,
+                    codebook: pq_mod.PQCodebook, mem: InMemory,
+                    qfilters: QueryFilter, queries: jax.Array, entry: int,
+                    params: SearchParams,
+                    distance_fn: Callable = pq_mod.adc_lookup,
+                    fetch_fn: Callable = local_fetch) -> SearchResult:
+    """Run the filtered beam search for a batch of queries.
+
+    codes: (N, M) uint8 PQ codes (the replicated in-memory tier).
+    qfilters: batched QueryFilter (leading dim B).
+    """
+    p = params
+    l_valid = p.l_valid or p.l_search
+    P, W = p.l_search, p.beam_width
+    R = store.degree
+    Rd = store.dense_degree if p.mode == "spec_in" else 0
+    res_cap = p.max_hops * W                     # explored-record buffer
+    rec_pages = store.pages_dense if p.mode == "spec_in" else store.pages_std
+
+    def one(q, qf):
+        table = pq_mod.distance_table(codebook, q)            # (M, ksub)
+
+        entry_d = distance_fn(codes[jnp.array([entry])], table)[0]
+        entry_ok = is_member_approx(qf, jnp.full((1,), entry, jnp.int32),
+                                    mem)[0]
+        entry_key = entry_d + jnp.where(entry_ok, 0.0, INVALID_PENALTY)
+
+        pool_ids = jnp.full((P,), -1, jnp.int32).at[0].set(entry)
+        pool_key = jnp.full((P,), BIG, jnp.float32).at[0].set(entry_key)
+        explored = jnp.ones((P,), jnp.bool_).at[0].set(False)
+
+        res_ids = jnp.full((res_cap,), -1, jnp.int32)
+        res_d = jnp.full((res_cap,), BIG, jnp.float32)
+        res_valid = jnp.zeros((res_cap,), jnp.bool_)
+
+        counters = jnp.zeros((4,), jnp.int32)    # io, dist_comps, approx, hops
+
+        def cond(state):
+            pool_ids, pool_key, explored, res_ids, res_d, res_valid, counters = state
+            hops = counters[3]
+            frontier = jnp.any(~explored[:P] & (pool_key[:P] < BIG))
+            # paper early termination: top-l_valid verified & no closer frontier
+            n_ok = jnp.sum(res_valid)
+            kth = jnp.sort(jnp.where(res_valid, res_d, BIG))[
+                jnp.minimum(l_valid, res_cap) - 1]
+            best_unexp = jnp.min(jnp.where(explored, BIG, pool_key))
+            settled = (n_ok >= l_valid) & (best_unexp > kth)
+            return (hops < p.max_hops) & frontier & ~settled
+
+        def body(state):
+            pool_ids, pool_key, explored, res_ids, res_d, res_valid, counters = state
+            # ---- 1. pick best-W unexplored (by priority key) ----
+            masked = jnp.where(explored, BIG, pool_key)
+            _, sel = jax.lax.top_k(-masked, W)
+            cur_ids = pool_ids[sel]                            # (W,)
+            cur_live = masked[sel] < BIG
+            explored = explored.at[sel].set(True)
+            safe_cur = jnp.where(cur_live, cur_ids, 0)
+
+            # ---- 2. fetch records (vector + neighbors + attrs: one I/O) ----
+            rec = fetch_fn(store, safe_cur)
+            vecs = rec["vectors"]                              # (W, D)
+            nbrs = rec["neighbors"]                            # (W, R)
+            rl = rec["rec_labels"]                             # (W, ML)
+            rv = rec["rec_values"]                             # (W,)
+            io = counters[0] + jnp.sum(cur_live) * rec_pages
+
+            # ---- 3. re-rank + piggybacked exact verification ----
+            ex_d = jnp.where(cur_live, _exact_sq_dist(vecs, q), BIG)
+            ex_ok = is_member(qf, rl, rv) & cur_live
+            hops = counters[3]
+            start = hops * W
+            res_ids = jax.lax.dynamic_update_slice(
+                res_ids, jnp.where(cur_live, cur_ids, -1), (start,))
+            res_d = jax.lax.dynamic_update_slice(res_d, ex_d, (start,))
+            res_valid = jax.lax.dynamic_update_slice(res_valid, ex_ok, (start,))
+
+            # ---- 4. candidate generation per mode ----
+            if p.mode == "spec_in":
+                dn = rec["dense_neighbors"]                    # (W, Rd)
+                cand = jnp.concatenate([nbrs, dn], axis=1)     # (W, R+Rd)
+                is_direct = jnp.concatenate(
+                    [jnp.ones((W, R), bool), jnp.zeros((W, Rd), bool)], axis=1)
+            else:
+                cand = nbrs
+                is_direct = jnp.ones((W, R), bool)
+            cand = jnp.where(cur_live[:, None], cand, -1)
+            live = cand >= 0
+            safe_cand = jnp.where(live, cand, 0)
+
+            # dedup vs pool, explored buffer, and within the row (the 2-hop
+            # sample may repeat ids)
+            dup_pool = jnp.any(cand[:, :, None] == pool_ids[None, None, :], -1)
+            dup_res = jnp.any(cand[:, :, None] == res_ids[None, None, :], -1)
+            c = cand.shape[1]
+            tri = jnp.tril(jnp.ones((c, c), bool), -1)
+            dup_row = jnp.any((cand[:, :, None] == cand[:, None, :]) & tri, -1)
+            fresh = live & ~dup_pool & ~dup_res & ~dup_row
+
+            approx_n = jnp.sum(live)
+            if p.mode == "post":
+                ok = fresh
+                counters_approx = counters[2]
+            elif p.mode == "spec_in":
+                ok = is_member_approx(qf, safe_cand, mem) & fresh
+                counters_approx = counters[2] + approx_n
+            else:  # strict_in: read every fresh neighbor's attrs from "SSD"
+                nrec = fetch_fn(store, safe_cand.reshape(-1))
+                n_rl = nrec["rec_labels"].reshape(W, R, -1)    # (W, R, ML)
+                n_rv = nrec["rec_values"].reshape(W, R)
+                ok = is_member(qf, n_rl, n_rv) & fresh
+                io = io + jnp.sum(fresh)                       # 1 page / neighbor
+                counters_approx = counters[2]
+
+            # ---- 5. slot selection: up to R approx-valid, bridge back-fill ----
+            if p.mode == "spec_in":
+                # first-come order (cheap, matches Table-1 compute accounting)
+                rank_ok = jnp.cumsum(ok.astype(jnp.int32), axis=1) - 1
+                fill = fresh & ~ok & is_direct
+                rank_fill = jnp.cumsum(fill.astype(jnp.int32), axis=1) - 1
+                n_ok_row = jnp.sum(ok, axis=1, keepdims=True)
+                order_key = jnp.where(
+                    ok, rank_ok.astype(jnp.float32),
+                    jnp.where(fill, (n_ok_row + rank_fill).astype(jnp.float32),
+                              BIG))
+                _, take = jax.lax.top_k(-order_key, R)          # (W, R)
+                sel_ids = jnp.take_along_axis(cand, take, axis=1)
+                sel_ok = jnp.take_along_axis(ok, take, axis=1)
+                sel_fill = jnp.take_along_axis(fill, take, axis=1)
+                sel_live = sel_ok | sel_fill
+            else:
+                sel_ids, sel_ok, sel_live = cand, ok, ok
+
+            # ---- 6. PQ distances for selected candidates only ----
+            flat_ids = sel_ids.reshape(-1)
+            flat_live = sel_live.reshape(-1)
+            flat_ok = sel_ok.reshape(-1)
+            # cross-row dedup of the selected set (W > 1 beams may collide)
+            nf = flat_ids.shape[0]
+            trif = jnp.tril(jnp.ones((nf, nf), bool), -1)
+            dupf = jnp.any((flat_ids[:, None] == flat_ids[None, :]) & trif, -1)
+            flat_live = flat_live & ~dupf
+            flat_ok = flat_ok & ~dupf
+            pq_d = distance_fn(codes[jnp.where(flat_live, flat_ids, 0)], table)
+            key = pq_d + jnp.where(flat_ok, 0.0, INVALID_PENALTY)
+            key = jnp.where(flat_live, key, BIG)
+            dist_comps = counters[1] + jnp.sum(flat_live)
+
+            # ---- 7. merge into pool (sorted ascending by key) ----
+            all_ids = jnp.concatenate([pool_ids, jnp.where(flat_live, flat_ids, -1)])
+            all_key = jnp.concatenate([pool_key, key])
+            all_exp = jnp.concatenate([explored,
+                                       jnp.zeros_like(flat_live)])
+            order = jnp.argsort(all_key)[:P]
+            new_counters = jnp.stack([io, dist_comps, counters_approx, hops + 1])
+            return (all_ids[order], all_key[order], all_exp[order],
+                    res_ids, res_d, res_valid, new_counters)
+
+        state = (pool_ids, pool_key, explored, res_ids, res_d, res_valid, counters)
+        state = jax.lax.while_loop(cond, body, state)
+        pool_ids, pool_key, explored, res_ids, res_d, res_valid, counters = state
+
+        # ---- final: top-k verified-valid by exact distance ----
+        final_key = jnp.where(res_valid, res_d, BIG)
+        order = jnp.argsort(final_key)[:p.k]
+        out_ids = jnp.where(res_valid[order], res_ids[order], -1)
+        out_d = jnp.where(res_valid[order], res_d[order], jnp.inf)
+        n_valid = jnp.sum(res_valid)
+        fp = jnp.sum((res_ids >= 0) & ~res_valid)
+        return (out_ids, out_d, counters[0], counters[3], counters[1],
+                counters[2], n_valid, fp)
+
+    outs = jax.vmap(one)(queries, qfilters)
+    return SearchResult(*outs)

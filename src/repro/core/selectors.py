@@ -1,0 +1,418 @@
+"""Selector abstraction (paper §4.1/§4.3): composable filtering rules.
+
+A Selector has two halves:
+
+* **host half** (planning, per query): estimates selectivity & precision,
+  decides which on-SSD attribute indexes to touch (rare-label posting lists,
+  range scans), accounts the pages read, and emits a ``QueryFilter`` — a flat
+  pytree of per-query device arrays.
+* **device half** (module-level pure functions): ``is_member_approx`` (probes
+  only in-memory structures: Bloom words, bucket codes, the pre-merged rare
+  list) and ``is_member`` (exact, reads the record's co-located attributes).
+  Both are shape-static, vmap-able over a query batch, and usable inside
+  ``lax.while_loop`` search kernels.
+
+``is_member_approx`` guarantees no false negatives; built-ins follow the
+paper's hybrid design (rare labels resolved exactly from fetched postings,
+frequent labels via Bloom filters; ranges via 1-byte bucket codes).
+User-defined constraints subclass ``Selector`` and emit their own masks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bloom
+from repro.core.labels import LabelStore
+from repro.core.ranges import RangeStore
+
+INT_PAD = np.iinfo(np.int32).max
+
+# label_mode / merged_mode values
+L_NONE, L_AND, L_OR = 0, 1, 2
+M_NONE, M_OR, M_AND = 0, 1, 2
+C_AND, C_OR = 0, 1
+
+
+class QueryFilter(NamedTuple):
+    """Per-query device data for the built-in selector algebra.
+
+    Shapes: QL = max query labels (static per batch), CAP = merged-list cap.
+    All fields are stackable along a leading batch dimension.
+    """
+    # --- approximate (in-memory) half ---
+    merged_ids: jax.Array     # (CAP,) int32, sorted, padded with INT_PAD
+    merged_len: jax.Array     # ()  int32
+    merged_mode: jax.Array    # ()  int32: M_NONE / M_OR / M_AND
+    bloom_or_masks: jax.Array # (QL,) uint32 per-frequent-label masks (0 = pad)
+    bloom_and_mask: jax.Array # ()  uint32 union mask of frequent labels (0 = none)
+    bucket_lo: jax.Array      # ()  int32 (range approx; 0..255)
+    bucket_hi: jax.Array      # ()  int32
+    # --- exact half (verification against record attributes) ---
+    q_labels: jax.Array       # (QL,) int32, padded with -1
+    label_mode: jax.Array     # ()  int32: L_NONE / L_AND / L_OR
+    range_lo: jax.Array       # ()  float32
+    range_hi: jax.Array       # ()  float32
+    range_on: jax.Array       # ()  int32 (0/1)
+    combine: jax.Array        # ()  int32: C_AND / C_OR over (label, range) parts
+
+
+class InMemory(NamedTuple):
+    """The replicated in-memory tier probed by is_member_approx."""
+    blooms: jax.Array         # (N,) uint32
+    bucket_codes: jax.Array   # (N,) uint8/int32
+
+
+def is_member_approx(qf: QueryFilter, ids: jax.Array, mem: InMemory) -> jax.Array:
+    """No-false-negative superset predicate. ids: (...,) int32 -> bool (...,)."""
+    g_bloom = mem.blooms[ids]
+    # pre-merged rare-label list membership (binary search)
+    pos = jnp.searchsorted(qf.merged_ids, ids)
+    pos = jnp.clip(pos, 0, qf.merged_ids.shape[-1] - 1)
+    in_merged = (jnp.take(qf.merged_ids, pos) == ids) & (pos < qf.merged_len)
+    # frequent-label Bloom probes
+    masks = qf.bloom_or_masks                              # (QL,)
+    hit_any = jnp.any((masks[None, :] != 0)
+                      & ((g_bloom[..., None] & masks[None, :]) == masks[None, :]),
+                      axis=-1)
+    has_or_masks = jnp.any(masks != 0)
+    and_ok = (g_bloom & qf.bloom_and_mask) == qf.bloom_and_mask
+
+    label_or = jnp.where(qf.merged_mode == M_OR, in_merged | hit_any,
+                         jnp.where(has_or_masks, hit_any, False))
+    label_and = jnp.where(qf.merged_mode == M_AND, in_merged & and_ok, and_ok)
+    label_ok = jnp.where(qf.label_mode == L_AND, label_and,
+                         jnp.where(qf.label_mode == L_OR, label_or, True))
+    label_present = qf.label_mode != L_NONE
+
+    code = mem.bucket_codes[ids].astype(jnp.int32)
+    range_ok = (code >= qf.bucket_lo) & (code <= qf.bucket_hi)
+    range_present = qf.range_on == 1
+
+    ok_and = (label_ok | ~label_present) & (range_ok | ~range_present)
+    ok_or = (label_ok & label_present) | (range_ok & range_present)
+    any_present = label_present | range_present
+    return jnp.where(any_present,
+                     jnp.where(qf.combine == C_OR, ok_or, ok_and), True)
+
+
+def is_member(qf: QueryFilter, rec_labels: jax.Array,
+              rec_values: jax.Array) -> jax.Array:
+    """Exact verification against record-resident attributes.
+
+    rec_labels: (..., ML) int32 padded -1; rec_values: (...,) float32.
+    """
+    ql = qf.q_labels                                       # (QL,)
+    present = (rec_labels[..., None, :] == ql[:, None]) & (ql[:, None] >= 0)
+    contains = jnp.any(present, axis=-1)                   # (..., QL)
+    is_pad = ql < 0
+    lab_and = jnp.all(contains | is_pad, axis=-1)
+    lab_or = jnp.any(contains & ~is_pad, axis=-1)
+    label_ok = jnp.where(qf.label_mode == L_AND, lab_and,
+                         jnp.where(qf.label_mode == L_OR, lab_or, True))
+    label_present = qf.label_mode != L_NONE
+
+    range_ok = (rec_values >= qf.range_lo) & (rec_values < qf.range_hi)
+    range_present = qf.range_on == 1
+
+    ok_and = (label_ok | ~label_present) & (range_ok | ~range_present)
+    ok_or = (label_ok & label_present) | (range_ok & range_present)
+    any_present = label_present | range_present
+    return jnp.where(any_present,
+                     jnp.where(qf.combine == C_OR, ok_or, ok_and), True)
+
+
+def always_true_filter(ql: int, cap: int) -> QueryFilter:
+    """The post-filtering extreme: is_member_approx ≡ True (paper §3)."""
+    return QueryFilter(
+        merged_ids=np.full(cap, INT_PAD, np.int32), merged_len=np.int32(0),
+        merged_mode=np.int32(M_NONE),
+        bloom_or_masks=np.zeros(ql, np.uint32), bloom_and_mask=np.uint32(0),
+        bucket_lo=np.int32(0), bucket_hi=np.int32(255),
+        q_labels=np.full(ql, -1, np.int32), label_mode=np.int32(L_NONE),
+        range_lo=np.float32(-np.inf), range_hi=np.float32(np.inf),
+        range_on=np.int32(0), combine=np.int32(C_AND))
+
+
+def stack_filters(filters: Sequence[QueryFilter]) -> QueryFilter:
+    """Stack per-query filters into a batched pytree (leading dim = batch)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+                                  *filters)
+
+
+# ---------------------------------------------------------------------------
+# Host-side planning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Plan:
+    """Result of Selector.plan(): device data + planning statistics."""
+    qfilter: QueryFilter
+    selectivity: float
+    precision_in: float     # precision of is_member_approx during in-filtering
+    precision_pre: float    # precision of the pre-filter superset
+    pages_prefetch: int     # X_in: pages read before traversal (rare postings)
+    pages_prescan: int      # X_pre: pages a speculative pre-filter scan reads
+
+
+class Selector:
+    """Base class. Subclasses implement plan()/pre_filter_approx()."""
+
+    def plan(self, ql: int, cap: int) -> Plan:
+        raise NotImplementedError
+
+    def pre_filter_approx(self) -> tuple[np.ndarray, int]:
+        """Batched superset scan: (superset vector ids, pages read)."""
+        raise NotImplementedError
+
+    def selectivity(self) -> float:
+        raise NotImplementedError
+
+
+def _fill_label_fields(base: QueryFilter, **kw) -> QueryFilter:
+    return base._replace(**kw)
+
+
+class LabelSelectorBase(Selector):
+    def __init__(self, store: LabelStore, labels: Sequence[int],
+                 rare_fetch_cap: int = 2048):
+        self.store = store
+        self.labels = [int(l) for l in labels]
+        self.rare_fetch_cap = int(rare_fetch_cap)
+        self._counts = np.array([store.label_counts[l] for l in self.labels],
+                                dtype=np.int64)
+
+    def _split_rare(self, cap: int):
+        """Greedily mark labels rare (fetch their postings) within the cap."""
+        order = np.argsort(self._counts, kind="stable")
+        rare, freq, budget = [], [], min(cap, self.rare_fetch_cap)
+        for i in order:
+            c = int(self._counts[i])
+            if c <= budget:
+                rare.append(self.labels[i])
+                budget -= c
+            else:
+                freq.append(self.labels[i])
+        return rare, freq
+
+    def _fetch_merged(self, rare, op: str):
+        pages = 0
+        merged = None
+        for l in rare:
+            post = self.store.postings(l)
+            pages += self.store.posting_pages(l)
+            if merged is None:
+                merged = post
+            elif op == "or":
+                merged = np.union1d(merged, post)
+            else:
+                merged = np.intersect1d(merged, post, assume_unique=True)
+        return (np.array([], np.int32) if merged is None else merged), pages
+
+    def _bloom_fp1(self) -> float:
+        return bloom.bloom_fp_rate(self.store.avg_labels_per_vec,
+                                   self.store.k_hashes)
+
+
+class LabelOrSelector(LabelSelectorBase):
+    """Vector passes if it contains at least one query label."""
+
+    def selectivity(self) -> float:
+        s = 1.0
+        for c in self._counts:
+            s *= 1.0 - float(c) / max(1, self.store.n_vectors)
+        return 1.0 - s
+
+    def plan(self, ql: int, cap: int) -> Plan:
+        rare, freq = self._split_rare(cap)
+        merged, pages = self._fetch_merged(rare, "or")
+        merged = merged[:cap]
+        qf = always_true_filter(ql, cap)
+        ids = np.full(cap, INT_PAD, np.int32)
+        ids[:merged.size] = np.sort(merged)
+        or_masks = np.zeros(ql, np.uint32)
+        for j, l in enumerate(freq[:ql]):
+            or_masks[j] = bloom.label_bits(l, self.store.k_hashes)
+        q_labels = np.full(ql, -1, np.int32)
+        q_labels[:min(len(self.labels), ql)] = self.labels[:ql]
+        qf = qf._replace(
+            merged_ids=ids, merged_len=np.int32(merged.size),
+            merged_mode=np.int32(M_OR if rare else M_NONE),
+            bloom_or_masks=or_masks,
+            q_labels=q_labels, label_mode=np.int32(L_OR))
+
+        s = self.selectivity()
+        fp1 = self._bloom_fp1()
+        # P(pass) ≈ P(in rare union) + P(not) * P(any frequent bloom hit)
+        s_rare = 1.0 - np.prod([1.0 - self.store.selectivity(l) for l in rare]) \
+            if rare else 0.0
+        p_freq_hit = 1.0 - np.prod(
+            [1.0 - (self.store.selectivity(l) + (1 - self.store.selectivity(l)) * fp1)
+             for l in freq]) if freq else 0.0
+        p_pass = s_rare + (1.0 - s_rare) * p_freq_hit
+        prec = s / max(p_pass, 1e-12)
+        return Plan(qf, s, min(1.0, prec), 1.0, pages, self._prescan_pages())
+
+    def _prescan_pages(self) -> int:
+        # OR pre-filtering must scan every label's postings.
+        return sum(self.store.posting_pages(l) for l in self.labels)
+
+    def pre_filter_approx(self) -> tuple[np.ndarray, int]:
+        merged, pages = self._fetch_merged(self.labels, "or")
+        return merged.astype(np.int32), pages
+
+
+class LabelAndSelector(LabelSelectorBase):
+    """Vector passes if it contains all query labels."""
+
+    def selectivity(self) -> float:
+        s = 1.0
+        for c in self._counts:
+            s *= float(c) / max(1, self.store.n_vectors)
+        return s
+
+    def plan(self, ql: int, cap: int) -> Plan:
+        rare, freq = self._split_rare(cap)
+        merged, pages = self._fetch_merged(rare, "and")
+        merged = merged[:cap]
+        qf = always_true_filter(ql, cap)
+        ids = np.full(cap, INT_PAD, np.int32)
+        ids[:merged.size] = np.sort(merged)
+        and_mask = np.uint32(0)
+        for l in freq:
+            and_mask |= bloom.label_bits(l, self.store.k_hashes)
+        q_labels = np.full(ql, -1, np.int32)
+        q_labels[:min(len(self.labels), ql)] = self.labels[:ql]
+        qf = qf._replace(
+            merged_ids=ids, merged_len=np.int32(merged.size),
+            merged_mode=np.int32(M_AND if rare else M_NONE),
+            bloom_and_mask=and_mask,
+            q_labels=q_labels, label_mode=np.int32(L_AND))
+
+        s = self.selectivity()
+        fp1 = self._bloom_fp1()
+        p_pass = 1.0
+        if rare:
+            p_pass *= np.prod([self.store.selectivity(l) for l in rare])
+        for l in freq:
+            sl = self.store.selectivity(l)
+            p_pass *= sl + (1.0 - sl) * fp1
+        prec_in = s / max(p_pass, 1e-12)
+        # speculative pre-filter scans only rare labels (paper: skip frequent)
+        p_pre_pass = np.prod([self.store.selectivity(l) for l in rare]) if rare \
+            else 1.0
+        prec_pre = s / max(float(p_pre_pass), 1e-12)
+        return Plan(qf, s, min(1.0, float(prec_in)), min(1.0, float(prec_pre)),
+                    pages, self._prescan_pages())
+
+    def _prescan_pages(self) -> int:
+        rare, _ = self._split_rare(self.rare_fetch_cap)
+        labels = rare if rare else [self.labels[int(np.argmin(self._counts))]]
+        return sum(self.store.posting_pages(l) for l in labels)
+
+    def pre_filter_approx(self) -> tuple[np.ndarray, int]:
+        # paper §4.3.1: intersect rare labels only, defer frequent to verify
+        rare, _ = self._split_rare(self.rare_fetch_cap)
+        if not rare:
+            rare = [self.labels[int(np.argmin(self._counts))]]
+        merged, pages = self._fetch_merged(rare, "and")
+        return merged.astype(np.int32), pages
+
+
+class RangeSelector(Selector):
+    """Vector passes if its numeric attribute falls in [lo, hi)."""
+
+    def __init__(self, store: RangeStore, lo: float, hi: float):
+        self.store, self.lo, self.hi = store, float(lo), float(hi)
+
+    def selectivity(self) -> float:
+        return self.store.selectivity(self.lo, self.hi)
+
+    def plan(self, ql: int, cap: int) -> Plan:
+        qf = always_true_filter(ql, cap)
+        blo, bhi = self.store.bucket_range(self.lo, self.hi)
+        qf = qf._replace(bucket_lo=np.int32(blo), bucket_hi=np.int32(bhi),
+                         range_lo=np.float32(self.lo), range_hi=np.float32(self.hi),
+                         range_on=np.int32(1))
+        s = self.selectivity()
+        prec = self.store.precision(self.lo, self.hi)
+        _, pages = self.store.scan(self.lo, self.hi)
+        return Plan(qf, s, prec, 1.0, 0, pages)
+
+    def pre_filter_approx(self) -> tuple[np.ndarray, int]:
+        ids, pages = self.store.scan(self.lo, self.hi)
+        return ids.astype(np.int32), pages
+
+
+class _Combinator(Selector):
+    def __init__(self, children: Sequence[Selector]):
+        assert len(children) == 2, "built-in combinators take (label, range)"
+        self.children = list(children)
+        lab = [c for c in self.children if isinstance(c, LabelSelectorBase)]
+        rng = [c for c in self.children if isinstance(c, RangeSelector)]
+        assert len(lab) == 1 and len(rng) == 1, \
+            "built-in combinators compose one label + one range selector; " \
+            "fuse or subclass Selector for other trees"
+        self.label_sel: LabelSelectorBase = lab[0]
+        self.range_sel: RangeSelector = rng[0]
+
+    def _merge_plans(self, ql, cap, combine_code) -> Plan:
+        lp = self.label_sel.plan(ql, cap)
+        rp = self.range_sel.plan(ql, cap)
+        qf = lp.qfilter._replace(
+            bucket_lo=rp.qfilter.bucket_lo, bucket_hi=rp.qfilter.bucket_hi,
+            range_lo=rp.qfilter.range_lo, range_hi=rp.qfilter.range_hi,
+            range_on=np.int32(1), combine=np.int32(combine_code))
+        return lp, rp, qf
+
+
+class AndSelector(_Combinator):
+    """AND of children; pre-filtering prunes the heavy branch (paper §4.3.3)."""
+
+    def selectivity(self) -> float:
+        return self.label_sel.selectivity() * self.range_sel.selectivity()
+
+    def plan(self, ql: int, cap: int) -> Plan:
+        lp, rp, qf = self._merge_plans(ql, cap, C_AND)
+        s = self.selectivity()
+        p_pass = (lp.selectivity / max(lp.precision_in, 1e-12)) * \
+                 (rp.selectivity / max(rp.precision_in, 1e-12))
+        prec_in = s / max(p_pass, 1e-12)
+        # pre-filter: scan only the lower-selectivity child
+        cheap = lp if lp.selectivity <= rp.selectivity else rp
+        prec_pre = s / max(cheap.selectivity / max(cheap.precision_pre, 1e-12), 1e-12)
+        return Plan(qf, s, min(1.0, prec_in), min(1.0, prec_pre),
+                    lp.pages_prefetch, cheap.pages_prescan)
+
+    def pre_filter_approx(self) -> tuple[np.ndarray, int]:
+        if self.label_sel.selectivity() <= self.range_sel.selectivity():
+            return self.label_sel.pre_filter_approx()
+        return self.range_sel.pre_filter_approx()
+
+
+class OrSelector(_Combinator):
+    """OR of children; pre-filtering must evaluate every branch."""
+
+    def selectivity(self) -> float:
+        sl = self.label_sel.selectivity()
+        sr = self.range_sel.selectivity()
+        return 1.0 - (1.0 - sl) * (1.0 - sr)
+
+    def plan(self, ql: int, cap: int) -> Plan:
+        lp, rp, qf = self._merge_plans(ql, cap, C_OR)
+        s = self.selectivity()
+        pl = lp.selectivity / max(lp.precision_in, 1e-12)
+        pr = rp.selectivity / max(rp.precision_in, 1e-12)
+        p_pass = 1.0 - (1.0 - pl) * (1.0 - pr)
+        prec_in = s / max(p_pass, 1e-12)
+        return Plan(qf, s, min(1.0, prec_in), 1.0,
+                    lp.pages_prefetch, lp.pages_prescan + rp.pages_prescan)
+
+    def pre_filter_approx(self) -> tuple[np.ndarray, int]:
+        a, pa = self.label_sel.pre_filter_approx()
+        b, pb = self.range_sel.pre_filter_approx()
+        return np.union1d(a, b).astype(np.int32), pa + pb

@@ -1,0 +1,1 @@
+from repro.data.synth import SynthFilteredDataset, make_filtered_dataset

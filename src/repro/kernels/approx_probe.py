@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: fused ``is_member_approx`` probe (Bloom ∧/∨ bucket).
+
+Fuses the two in-memory probes of the paper's speculative filter —
+32-bit Bloom word check and 1-byte range-bucket check — over a tile of
+candidate vectors, with the query's masks/bounds passed as a small scalar
+parameter block. This is the per-neighbor hot path of speculative
+in-filtering (≈ R + R_d evaluations per hop).
+
+Scalar params layout (int32[8], bitwise-compatible with uint32 masks):
+  0: and_mask   1: n_or_masks  2: bucket_lo  3: bucket_hi
+  4: label_mode (0 none / 1 and / 2 or)      5: range_on
+  6: combine    (0 and / 1 or)               7: unused
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 1024
+MAX_OR_MASKS = 8
+
+
+def _probe_kernel(blooms_ref, buckets_ref, or_masks_ref, params_ref, out_ref):
+    blooms = blooms_ref[...]                           # (TN,) int32 bits
+    buckets = buckets_ref[...].astype(jnp.int32)       # (TN,)
+    or_masks = or_masks_ref[...]                       # (QL,) int32 bits
+    prm = params_ref[...]                              # (8,) int32
+
+    and_mask = prm[0]
+    and_ok = (blooms & and_mask) == and_mask           # (TN,)
+
+    hit_any = jnp.zeros(blooms.shape, jnp.bool_)
+    for j in range(or_masks.shape[0]):                 # QL static: unrolled
+        mask = or_masks[j]
+        hit = (mask != 0) & ((blooms & mask) == mask)
+        hit_any = hit_any | hit
+
+    label_mode = prm[4]
+    label_ok = jnp.where(label_mode == 1, and_ok,
+                         jnp.where(label_mode == 2, hit_any, True))
+    label_present = label_mode != 0
+
+    range_ok = (buckets >= prm[2]) & (buckets <= prm[3])
+    range_present = prm[5] == 1
+
+    ok_and = (label_ok | ~label_present) & (range_ok | ~range_present)
+    ok_or = (label_ok & label_present) | (range_ok & range_present)
+    any_present = label_present | range_present
+    out = jnp.where(any_present,
+                    jnp.where(prm[6] == 1, ok_or, ok_and), True)
+    out_ref[...] = out.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_n"))
+def approx_probe(blooms: jax.Array, buckets: jax.Array, or_masks: jax.Array,
+                 params: jax.Array, *, interpret: bool = False,
+                 tile_n: int = TILE_N) -> jax.Array:
+    """Fused approx-filter probe over N candidates.
+
+    blooms (N,) uint32|int32; buckets (N,) uint8|int32;
+    or_masks (QL<=8,) uint32|int32; params (8,) int32. Returns (N,) bool.
+    """
+    n = blooms.shape[0]
+    n_pad = -(-max(n, 1) // tile_n) * tile_n
+    bl = jnp.zeros((n_pad,), jnp.int32).at[:n].set(
+        blooms.astype(jnp.uint32).view(jnp.int32) if blooms.dtype == jnp.uint32
+        else blooms.astype(jnp.int32))
+    bk = jnp.zeros((n_pad,), jnp.int32).at[:n].set(buckets.astype(jnp.int32))
+    om = or_masks.astype(jnp.uint32).view(jnp.int32) \
+        if or_masks.dtype == jnp.uint32 else or_masks.astype(jnp.int32)
+
+    out = pl.pallas_call(
+        _probe_kernel,
+        grid=(n_pad // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+            pl.BlockSpec((om.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((8,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        interpret=interpret,
+    )(bl, bk, om, params.astype(jnp.int32))
+    return out[:n].astype(jnp.bool_)

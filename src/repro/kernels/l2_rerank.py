@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: exact L2 re-rank of fetched records.
+
+Computes squared distances between one query and a tile of full-precision
+vectors via the MXU-friendly decomposition |v|² − 2·v·q + |q|²: the dominant
+term is a (TILE_B × D) @ (D × 1)… reshaped to a lane-aligned (TILE_B × D) ⊙
+broadcast-q reduction, which Mosaic maps onto the VPU/MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 256
+
+
+def _l2_kernel(vecs_ref, q_ref, out_ref):
+    vecs = vecs_ref[...]                      # (TB, D)
+    q = q_ref[...]                            # (1, D)
+    diff_dot = jnp.sum(vecs * q, axis=1)      # (TB,)
+    vv = jnp.sum(vecs * vecs, axis=1)
+    qq = jnp.sum(q * q)
+    out_ref[...] = vv - 2.0 * diff_dot + qq
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_b"))
+def l2_rerank(vecs: jax.Array, query: jax.Array, *, interpret: bool = False,
+              tile_b: int = TILE_B) -> jax.Array:
+    """Squared L2 distances. vecs (B, D) f32; query (D,) f32 -> (B,) f32."""
+    b, d = vecs.shape
+    b_pad = -(-max(b, 1) // tile_b) * tile_b
+    vp = jnp.zeros((b_pad, d), vecs.dtype).at[:b].set(vecs)
+    out = pl.pallas_call(
+        _l2_kernel,
+        grid=(b_pad // tile_b,),
+        in_specs=[
+            pl.BlockSpec((tile_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b_pad,), jnp.float32),
+        interpret=interpret,
+    )(vp.astype(jnp.float32), query.astype(jnp.float32)[None, :])
+    return out[:b]

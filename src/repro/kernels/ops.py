@@ -1,0 +1,55 @@
+"""Jit'd dispatch wrappers: compiled Pallas on TPU, interpret-mode on CPU.
+
+The search engine takes ``distance_fn=ops.adc_distance`` so the hot PQ scan
+runs through the Pallas kernel on TPU; on CPU the default stays the fused
+XLA reference (interpret-mode Pallas is a correctness tool, not a fast path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import approx_probe as _probe
+from repro.kernels import l2_rerank as _l2
+from repro.kernels import pq_scan as _pq
+from repro.kernels import ref
+
+
+@functools.cache
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pq_scan(codes, table):
+    """ADC distances (N, M) x (M, K) -> (N,)."""
+    if on_tpu():
+        return _pq.pq_scan(codes, table, interpret=False)
+    return ref.pq_scan_ref(codes, table)
+
+
+def pq_scan_interpret(codes, table):
+    """Force the Pallas kernel in interpret mode (tests)."""
+    return _pq.pq_scan(codes, table, interpret=True)
+
+
+def approx_probe(blooms, buckets, or_masks, params):
+    if on_tpu():
+        return _probe.approx_probe(blooms, buckets, or_masks, params,
+                                   interpret=False)
+    return ref.approx_probe_ref(blooms, buckets, or_masks, params)
+
+
+def approx_probe_interpret(blooms, buckets, or_masks, params):
+    return _probe.approx_probe(blooms, buckets, or_masks, params,
+                               interpret=True)
+
+
+def l2_rerank(vecs, query):
+    if on_tpu():
+        return _l2.l2_rerank(vecs, query, interpret=False)
+    return ref.l2_rerank_ref(vecs, query)
+
+
+def l2_rerank_interpret(vecs, query):
+    return _l2.l2_rerank(vecs, query, interpret=True)

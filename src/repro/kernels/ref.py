@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pq_scan_ref(codes: jax.Array, table: jax.Array) -> jax.Array:
+    """sum_m table[m, codes[:, m]] — gather formulation."""
+    idx = codes.astype(jnp.int32)
+    cols = jnp.arange(table.shape[0])[None, :]
+    return jnp.sum(table[cols, idx], axis=1).astype(jnp.float32)
+
+
+def approx_probe_ref(blooms: jax.Array, buckets: jax.Array,
+                     or_masks: jax.Array, params: jax.Array) -> jax.Array:
+    blooms = blooms.astype(jnp.uint32)
+    om = or_masks.astype(jnp.uint32)
+    prm = params.astype(jnp.int32)
+    and_mask = prm[0].astype(jnp.uint32)
+    and_ok = (blooms & and_mask) == and_mask
+    hit_any = jnp.any((om[None, :] != 0)
+                      & ((blooms[:, None] & om[None, :]) == om[None, :]),
+                      axis=1)
+    label_mode = prm[4]
+    label_ok = jnp.where(label_mode == 1, and_ok,
+                         jnp.where(label_mode == 2, hit_any, True))
+    label_present = label_mode != 0
+    bk = buckets.astype(jnp.int32)
+    range_ok = (bk >= prm[2]) & (bk <= prm[3])
+    range_present = prm[5] == 1
+    ok_and = (label_ok | ~label_present) & (range_ok | ~range_present)
+    ok_or = (label_ok & label_present) | (range_ok & range_present)
+    any_present = label_present | range_present
+    return jnp.where(any_present,
+                     jnp.where(prm[6] == 1, ok_or, ok_and), True)
+
+
+def l2_rerank_ref(vecs: jax.Array, query: jax.Array) -> jax.Array:
+    d = vecs.astype(jnp.float32) - query.astype(jnp.float32)[None, :]
+    return jnp.sum(d * d, axis=1)

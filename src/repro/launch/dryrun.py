@@ -1,0 +1,296 @@
+"""Multi-pod dry-run (DESIGN.md §5): .lower().compile() every
+(architecture × input shape) cell on the production mesh, dump
+memory/cost/collective analysis to experiments/dryrun/*.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+      --shape train_4k --mesh single [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config, input_specs, list_archs, runnable
+from repro.launch import roofline, shardings
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import lm
+from repro.models.common import ModelConfig, set_activation_sharding
+from repro.train import optim, train_loop
+
+# archs whose training state needs int8 moments + FSDP to fit 16 GB/chip
+BIG_TRAIN = {"arctic-480b", "mixtral-8x22b", "jamba-v0.1-52b"}
+# sequence parallelism conflicts with the MoE token reshape in backward
+# (XLA involuntary full remat) -> MoE archs use batch-only sharding with
+# more microbatches instead
+MOE_ARCHS = {"arctic-480b", "mixtral-8x22b", "jamba-v0.1-52b"}
+
+
+def build_cfg(arch: str, kind: str) -> ModelConfig:
+    cfg = get_config(arch)
+    if kind == "train":
+        # bf16 params + int8 moments for the biggest configs
+        if arch in BIG_TRAIN:
+            cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+        return cfg
+    # serving: bf16 weights, no remat
+    return dataclasses.replace(cfg, param_dtype="bfloat16", remat=False)
+
+
+def _specs_train(cfg, arch, shape, mesh):
+    # FSDP everywhere: at 256+ chips, sharding params/opt over the data
+    # axis is strictly better (non-divisible dims fall back to replication)
+    rules = shardings.Rules(mesh=mesh, fsdp=True)
+    params_sh = jax.eval_shape(lambda k: lm.init_lm(cfg, k),
+                               jax.random.PRNGKey(0))
+    ocfg = optim.OptConfig(int8_moments=arch in BIG_TRAIN)
+    opt_sh = jax.eval_shape(lambda p: optim.init_opt_state(p, ocfg), params_sh)
+    pspec = shardings.param_specs(rules, params_sh)
+    ospec = shardings.opt_specs(rules, opt_sh, params_sh)
+    dspec = shardings.data_specs(rules, input_specs(cfg, shape),
+                                 shape.global_batch)
+    return rules, params_sh, opt_sh, ocfg, pspec, ospec, dspec
+
+
+def lower_train(arch: str, shape, mesh):
+    cfg = build_cfg(arch, "train")
+    # sequence parallelism: residual stream sharded (dp, model) between
+    # blocks -> remat-saved layer inputs shrink by the TP degree
+    seq_axis = None if arch in MOE_ARCHS else "model"
+    set_activation_sharding(mesh, dp_axes(mesh), seq_axis=seq_axis)
+    rules, params_sh, opt_sh, ocfg, pspec, ospec, dspec = _specs_train(
+        cfg, arch, shape, mesh)
+    # microbatching bounds activation temps; XLA overlaps the per-
+    # microbatch grad reduction with the next microbatch's compute
+    micro = 8 if arch in MOE_ARCHS else 4
+    # bf16 grad accumulation for the largest states (arctic: the f32
+    # accumulator alone is 7.3 GB/chip)
+    acc_dt = jnp.bfloat16 if arch in BIG_TRAIN else jnp.float32
+    step_fn = train_loop.make_train_step(cfg, ocfg, microbatches=micro,
+                                         mesh=mesh, param_specs=pspec,
+                                         acc_dtype=acc_dt)
+    in_sh = (shardings.named(mesh, pspec), shardings.named(mesh, ospec),
+             {k: jax.NamedSharding(mesh, s) for k, s in dspec.items()})
+    out_sh = (shardings.named(mesh, pspec), shardings.named(mesh, ospec),
+              None)
+    jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0, 1))
+    batch_specs = {k: v for k, v in input_specs(cfg, shape).items()}
+    return jitted.lower(params_sh, opt_sh, batch_specs), cfg, params_sh
+
+
+def lower_prefill(arch: str, shape, mesh):
+    cfg = build_cfg(arch, "serve")
+    if shape.global_batch % np.prod([mesh.shape[a] for a in dp_axes(mesh)]) \
+            == 0:
+        set_activation_sharding(mesh, dp_axes(mesh))
+    # weights shard over the data axis too (an all-gather per layer beats
+    # 16x-replicated expert weights: arctic serve was 177 GiB/chip without)
+    rules = shardings.Rules(mesh=mesh, fsdp=True)
+    params_sh = jax.eval_shape(lambda k: lm.init_lm(cfg, k),
+                               jax.random.PRNGKey(0))
+    pspec = shardings.param_specs(rules, params_sh)
+    dspec = shardings.data_specs(rules, input_specs(cfg, shape),
+                                 shape.global_batch)
+
+    def prefill_fn(params, batch):
+        logits, caches = lm.lm_prefill(params, cfg, batch, max_t=shape.seq_len)
+        return logits, caches
+
+    cache_sh = jax.eval_shape(
+        lambda: lm.init_caches(cfg, shape.global_batch, shape.seq_len))
+    cspec = [shardings.cache_specs(rules, c, shape.global_batch)
+             for c in cache_sh]
+    in_sh = (shardings.named(mesh, pspec),
+             {k: jax.NamedSharding(mesh, s) for k, s in dspec.items()})
+    out_sh = (None, [shardings.named(mesh, c) for c in cspec])
+    jitted = jax.jit(prefill_fn, in_shardings=in_sh, out_shardings=out_sh)
+    return jitted.lower(params_sh, input_specs(cfg, shape)), cfg, params_sh
+
+
+def lower_decode(arch: str, shape, mesh):
+    cfg = build_cfg(arch, "serve")
+    if os.environ.get("REPRO_SP_DECODE"):        # §Perf split-K variant
+        cfg = dataclasses.replace(cfg, sp_decode=True)
+        set_activation_sharding(mesh, dp_axes(mesh))
+    elif os.environ.get("REPRO_DECODE_UNROLL"):  # §Perf unroll variant
+        cfg = dataclasses.replace(cfg, decode_unroll=True)
+        set_activation_sharding(mesh, dp_axes(mesh))
+    elif shape.global_batch % np.prod(
+            [mesh.shape[a] for a in dp_axes(mesh)]) == 0:
+        set_activation_sharding(mesh, dp_axes(mesh))
+    rules = shardings.Rules(mesh=mesh, fsdp=True)
+    params_sh = jax.eval_shape(lambda k: lm.init_lm(cfg, k),
+                               jax.random.PRNGKey(0))
+    pspec = shardings.param_specs(rules, params_sh)
+    cache_sh = jax.eval_shape(
+        lambda: lm.init_caches(cfg, shape.global_batch, shape.seq_len))
+    cspec = [shardings.cache_specs(rules, c, shape.global_batch)
+             for c in cache_sh]
+
+    def decode_fn(params, caches, tokens):
+        return lm.lm_decode_step(params, caches, cfg, tokens)
+
+    tok_spec = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    b_ax = rules.ax(shape.global_batch, rules.dp)
+    in_sh = (shardings.named(mesh, pspec),
+             [shardings.named(mesh, c) for c in cspec],
+             jax.NamedSharding(mesh, jax.sharding.PartitionSpec(b_ax, None)))
+    out_sh = (None, [shardings.named(mesh, c) for c in cspec])
+    jitted = jax.jit(decode_fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(1,))
+    return jitted.lower(params_sh, cache_sh, tok_spec), cfg, params_sh
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str) -> dict:
+    shape = SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "kind": shape.kind, "status": "skipped"}
+    if not runnable(cfg0, shape):
+        result["reason"] = "full-attention arch: long_500k not sub-quadratic"
+        _dump(result, out_dir)
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            lowered, cfg, params_sh = lower_train(arch, shape, mesh)
+        elif shape.kind == "prefill":
+            lowered, cfg, params_sh = lower_prefill(arch, shape, mesh)
+        else:
+            lowered, cfg, params_sh = lower_decode(arch, shape, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        stats = roofline.analyze_hlo(hlo)
+
+        n_params = sum(int(np.prod(l.shape)) for l in
+                       jax.tree_util.tree_leaves(params_sh))
+        n_active = _active_params(cfg, n_params)
+        mflops = roofline.model_flops(cfg, n_params, n_active, shape)
+
+        coll_bytes = roofline.weighted_collective_bytes(
+            stats.collective_bytes)
+        hlo_flops = stats.dot_flops          # per chip, trip-count weighted
+        hbm_bytes = float(ca.get("bytes accessed", 0.0))
+        terms = roofline.roofline_terms(hlo_flops, hbm_bytes, coll_bytes)
+
+        result.update({
+            "status": "ok",
+            "n_chips": n_chips,
+            "n_params": n_params,
+            "n_active_params": n_active,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_estimate_bytes": ma.argument_size_in_bytes
+                + ma.temp_size_in_bytes + ma.output_size_in_bytes
+                - ma.alias_size_in_bytes,
+            },
+            "cost_analysis": {
+                "flops_raw": float(ca.get("flops", 0.0)),
+                "bytes_accessed": hbm_bytes,
+            },
+            "hlo": {
+                "dot_flops_per_chip": hlo_flops,
+                "collective_bytes": stats.collective_bytes,
+                "collective_bytes_weighted": coll_bytes,
+                "n_collectives": stats.n_collectives,
+                "loop_trip_counts": stats.loop_trip_counts,
+            },
+            "model_flops_global": mflops,
+            "model_flops_per_chip": mflops / n_chips,
+            "useful_flops_ratio": (mflops / n_chips) / hlo_flops
+            if hlo_flops else 0.0,
+            "roofline": terms,
+        })
+    except Exception as e:                                 # noqa: BLE001
+        result.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]})
+    finally:
+        from repro.models.common import clear_activation_sharding
+        clear_activation_sharding()
+    _dump(result, out_dir)
+    return result
+
+
+def _active_params(cfg: ModelConfig, n_params: int) -> int:
+    """Active params per token (MoE: only top-k experts count)."""
+    if cfg.moe is None:
+        return n_params
+    shapes = jax.eval_shape(lambda k: lm.init_lm(cfg, k),
+                            jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    expert_total = 0
+    for path, leaf in flat:
+        ks = jax.tree_util.keystr(path)
+        if any(t in ks for t in (".w_gate", ".w_up", ".w_down")) \
+                and "moe" in ks:
+            expert_total += int(np.prod(leaf.shape))
+    active = n_params - expert_total \
+        + expert_total * cfg.moe.top_k // cfg.moe.n_experts
+    return active
+
+
+def _dump(result: dict, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{result['arch']}_{result['shape']}_{result['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                t0 = time.time()
+                r = run_cell(arch, shape, mesh_kind, args.out)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    peak = r["memory"]["peak_estimate_bytes"] / 2**30
+                    extra = (f" peak={peak:.2f}GiB "
+                             f"dom={r['roofline']['bottleneck']}")
+                elif status == "error":
+                    extra = " " + r["error"][:120]
+                print(f"[{arch} × {shape} × {mesh_kind}] {status}"
+                      f" ({time.time()-t0:.0f}s){extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Dry-run of the paper's distributed filtered-search step at LAION100M
+scale on the production mesh (DESIGN.md §2 tier mapping).
+
+  PYTHONPATH=src python -m repro.launch.dryrun_ann [--mesh single|multi|both]
+
+Record store (the "SSD" tier) is ShapeDtypeStruct-sharded over all mesh
+axes; PQ codes / Bloom words / bucket codes (the "DRAM" tier) replicate.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed as D
+from repro.core import pq as pq_mod
+from repro.core import search as S
+from repro.core.records import RecordStore
+from repro.core.selectors import QueryFilter, InMemory
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+
+# LAION100M-scale parameters (paper §5.1)
+N = 100_000_000
+DIM = 192
+R = 96
+R_DENSE = 1100
+PQ_M = 32
+MAX_LABELS = 16
+QL, CAP = 8, 4096
+BATCH = int(os.environ.get("REPRO_ANN_BATCH", "64"))  # coalesced queries
+L_SEARCH = 128
+
+
+def specs(n_shards: int):
+    n = -(-N // n_shards) * n_shards
+    f32, i32 = jnp.float32, jnp.int32
+    store = RecordStore(
+        vectors=jax.ShapeDtypeStruct((n, DIM), f32),
+        neighbors=jax.ShapeDtypeStruct((n, R), i32),
+        dense_neighbors=jax.ShapeDtypeStruct((n, R_DENSE), i32),
+        rec_labels=jax.ShapeDtypeStruct((n, MAX_LABELS), i32),
+        rec_values=jax.ShapeDtypeStruct((n,), f32),
+        pages_std=1, pages_dense=2)
+    codes = jax.ShapeDtypeStruct((n, PQ_M), jnp.uint8)
+    codebook = pq_mod.PQCodebook(
+        centroids=jax.ShapeDtypeStruct((PQ_M, 256, DIM // PQ_M), f32),
+        dim=DIM)
+    mem = InMemory(blooms=jax.ShapeDtypeStruct((n,), jnp.uint32),
+                   bucket_codes=jax.ShapeDtypeStruct((n,), jnp.uint8))
+    qf = QueryFilter(
+        merged_ids=jax.ShapeDtypeStruct((BATCH, CAP), i32),
+        merged_len=jax.ShapeDtypeStruct((BATCH,), i32),
+        merged_mode=jax.ShapeDtypeStruct((BATCH,), i32),
+        bloom_or_masks=jax.ShapeDtypeStruct((BATCH, QL), jnp.uint32),
+        bloom_and_mask=jax.ShapeDtypeStruct((BATCH,), jnp.uint32),
+        bucket_lo=jax.ShapeDtypeStruct((BATCH,), i32),
+        bucket_hi=jax.ShapeDtypeStruct((BATCH,), i32),
+        q_labels=jax.ShapeDtypeStruct((BATCH, QL), i32),
+        label_mode=jax.ShapeDtypeStruct((BATCH,), i32),
+        range_lo=jax.ShapeDtypeStruct((BATCH,), f32),
+        range_hi=jax.ShapeDtypeStruct((BATCH,), f32),
+        range_on=jax.ShapeDtypeStruct((BATCH,), i32),
+        combine=jax.ShapeDtypeStruct((BATCH,), i32))
+    queries = jax.ShapeDtypeStruct((BATCH, DIM), f32)
+    return store, codes, codebook, mem, qf, queries
+
+
+def run(mesh_kind: str, out_dir: str) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    plan = D.ShardPlan(mesh=mesh, shard_axes=tuple(mesh.axis_names))
+    store, codes, codebook, mem, qf, queries = specs(plan.n_shards)
+    params = S.SearchParams(l_search=L_SEARCH, k=10, max_hops=192,
+                            mode="spec_in")
+    result = {"arch": "pipeann-filter-100m", "shape": f"search_b{BATCH}",
+              "mesh": mesh_kind, "kind": "ann_search", "status": "error",
+              "n_chips": n_chips}
+    t0 = time.time()
+    try:
+        def step(vecs, nbrs, dense, rlab, rval, codes_a, cents, mem_a, qf_a,
+                 q_a):
+            st = RecordStore(vecs, nbrs, dense, rlab, rval, 1, 2)
+            cb = pq_mod.PQCodebook(centroids=cents, dim=DIM)
+            return D.distributed_filtered_search(
+                plan, st, codes_a, cb, mem_a, qf_a, q_a, 0, params)
+
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ax = plan.shard_axes
+        shard1 = lambda spec: NamedSharding(mesh, spec)
+        in_sh = (shard1(P(ax, None)), shard1(P(ax, None)),
+                 shard1(P(ax, None)), shard1(P(ax, None)), shard1(P(ax)),
+                 shard1(P(None, None)), shard1(P(None, None, None)),
+                 jax.tree_util.tree_map(lambda _: shard1(P(None)), mem),
+                 jax.tree_util.tree_map(
+                     lambda l: shard1(P(*([None] * len(l.shape)))), qf),
+                 shard1(P(None, None)))
+        lowered = jax.jit(step, in_shardings=in_sh).lower(
+            store.vectors, store.neighbors, store.dense_neighbors,
+            store.rec_labels, store.rec_values, codes, codebook.centroids,
+            mem, qf, queries)
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        stats = roofline.analyze_hlo(hlo)
+        coll = roofline.weighted_collective_bytes(stats.collective_bytes)
+        terms = roofline.roofline_terms(stats.dot_flops,
+                                        float(ca.get("bytes accessed", 0)),
+                                        coll)
+        result.update({
+            "status": "ok",
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "peak_estimate_bytes": ma.argument_size_in_bytes
+                + ma.temp_size_in_bytes + ma.output_size_in_bytes
+                - ma.alias_size_in_bytes,
+            },
+            "cost_analysis": {"flops_raw": float(ca.get("flops", 0)),
+                              "bytes_accessed": float(
+                                  ca.get("bytes accessed", 0))},
+            "hlo": {"dot_flops_per_chip": stats.dot_flops,
+                    "collective_bytes": stats.collective_bytes,
+                    "collective_bytes_weighted": coll,
+                    "loop_trip_counts": stats.loop_trip_counts},
+            "roofline": terms,
+        })
+    except Exception as e:                                 # noqa: BLE001
+        result.update({"error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-3000:]})
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir,
+                           f"ann_search_{mesh_kind}.json"), "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    for mk in (["single", "multi"] if args.mesh == "both" else [args.mesh]):
+        r = run(mk, args.out)
+        extra = ""
+        if r["status"] == "ok":
+            extra = (f" peak={r['memory']['peak_estimate_bytes']/2**30:.2f}GiB"
+                     f" dom={r['roofline']['bottleneck']}")
+        else:
+            extra = " " + r.get("error", "")[:150]
+        print(f"[ann-search × {mk}] {r['status']}"
+              f" ({r.get('compile_s', 0)}s){extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,241 @@
+"""Sharding rules: map parameter/optimizer/cache/data pytrees to
+PartitionSpecs on the production mesh.
+
+Conventions (DESIGN.md §3):
+  * DP: batch over ('pod','data');
+  * TP: attention heads / d_ff / SSM inner dim over 'model';
+  * EP: expert dim over 'model' when n_experts divides the axis
+    (arctic 128e, jamba 16e), d_ff TP fallback otherwise (mixtral 8e);
+  * FSDP: parameter dim-0 (d_model) + optimizer moments over 'data' when
+    enabled (required for arctic-480b training);
+  * vocab over 'model' for embed/lm_head;
+  * decode KV caches shard their sequence dim over 'model' (split-K
+    attention); mamba states shard heads over 'model'.
+
+Every sharded dim is divisibility-checked; non-divisible dims fall back to
+replication, so any (arch × mesh) combination lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, dp_size
+from repro.models.common import ModelConfig
+from repro.train.optim import Q8
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mesh: object
+    fsdp: bool = False
+
+    @property
+    def dp(self):
+        return dp_axes(self.mesh)
+
+    @property
+    def mp(self):
+        return "model" if "model" in self.mesh.axis_names else None
+
+    def ax(self, dim: int, axis):
+        """axis if dim divides the axis size, else None (replicate)."""
+        if axis is None:
+            return None
+        size = 1
+        for a in (axis if isinstance(axis, tuple) else (axis,)):
+            size *= self.mesh.shape[a]
+        return axis if dim % size == 0 else None
+
+    def fsdp_ax(self, dim: int):
+        if not self.fsdp:
+            return None
+        return self.ax(dim, "data" if "data" in self.mesh.axis_names else None)
+
+
+def _param_spec(rules: Rules, keystr: str, shape: tuple) -> P:
+    r = rules
+    mp = r.mp
+    stacked = "['segments']" in keystr        # leading scan/repeat dim
+    lead = (None,) if stacked else ()
+    s = shape[1:] if stacked else shape
+
+    def out(*axes):
+        return P(*(lead + tuple(axes)))
+
+    name = keystr.split(".")[-1] if "." in keystr else keystr
+    if name.endswith("']"):                   # dict key like ['embed']
+        name = keystr.rsplit("['", 1)[-1].rstrip("']")
+
+    if name == "embed":
+        return P(r.ax(s[0], mp), r.fsdp_ax(s[1]))
+    if name == "lm_head":
+        return P(r.fsdp_ax(s[0]), r.ax(s[1], mp))
+    if name == "final_norm":
+        return P(None)
+    if name in ("wq", "wk", "wv"):
+        return out(r.fsdp_ax(s[0]), r.ax(s[1], mp))
+    if name == "wo":
+        return out(r.ax(s[0], mp), r.fsdp_ax(s[1]))
+    if name in ("bq", "bk", "bv"):
+        return out(r.ax(s[0], mp))
+    if name in ("w_gate", "w_up"):
+        if len(s) == 3:                        # (E, D, F) expert weights
+            if r.ax(s[0], mp):
+                return out(mp, r.fsdp_ax(s[1]), None)
+            return out(None, r.fsdp_ax(s[1]), r.ax(s[2], mp))
+        return out(r.fsdp_ax(s[0]), r.ax(s[1], mp))
+    if name == "w_down":
+        if len(s) == 3:                        # (E, F, D)
+            if r.ax(s[0], mp):
+                return out(mp, None, r.fsdp_ax(s[2]))
+            return out(None, r.ax(s[1], mp), r.fsdp_ax(s[2]))
+        return out(r.ax(s[0], mp), r.fsdp_ax(s[1]))
+    if name == "w_router":
+        return out(None, None)
+    if name in ("w_z", "w_x"):
+        return out(r.fsdp_ax(s[0]), r.ax(s[1], mp))
+    if name in ("w_b", "w_c"):
+        return out(r.fsdp_ax(s[0]), None)
+    if name == "w_dt":
+        return out(r.fsdp_ax(s[0]), r.ax(s[1], mp))
+    if name == "conv_x":
+        return out(None, r.ax(s[1], mp))
+    if name in ("conv_x_b", "norm_scale"):
+        return out(r.ax(s[0], mp))
+    if name in ("conv_bc", "conv_bc_b"):
+        return out(*([None] * len(s)))
+    if name in ("a_log", "dt_bias", "d_skip"):
+        return out(r.ax(s[0], mp))
+    if name == "w_out":
+        return out(r.ax(s[0], mp), r.fsdp_ax(s[1]))
+    if name in ("ln1", "ln2"):
+        return out(None)
+    # default: replicate
+    return P(*([None] * len(shape)))
+
+
+def param_specs(rules: Rules, params_shapes) -> object:
+    """PartitionSpec pytree matching a params shape tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for path, leaf in flat:
+        ks = jax.tree_util.keystr(path)
+        specs.append(_param_spec(rules, ks, tuple(leaf.shape)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_specs(rules: Rules, opt_shapes, params_shapes) -> object:
+    """Optimizer-state specs: float moments follow their parameter's spec;
+    Q8 moment blocks shard over all mesh axes combined (pure FSDP-style)."""
+    all_axes = tuple(rules.mesh.axis_names)
+    pflat, _ = jax.tree_util.tree_flatten_with_path(params_shapes)
+    by_key = {jax.tree_util.keystr(p): tuple(l.shape) for p, l in pflat}
+
+    def spec_for(path, leaf):
+        ks = jax.tree_util.keystr(path)
+        if ks.startswith(".step") or ks == "[0]":
+            return P()
+        # strip the leading ".m" / ".v" OptState field
+        base = ks
+        for prefix in (".m", ".v"):
+            if base.startswith(prefix):
+                base = base[len(prefix):]
+                break
+        # shape-preserving Q8: q/scale inherit the parameter's spec (the
+        # scale's block-count last dim replicates unless divisible)
+        q8_field = None
+        for suffix in (".q", ".scale"):
+            if base.endswith(suffix):
+                q8_field = suffix
+                base = base[:-len(suffix)]
+                break
+        pshape = by_key.get(base)
+        if pshape is None:
+            return P(*([None] * len(leaf.shape)))
+        spec = _param_spec(rules, base, pshape)
+        if q8_field is None:
+            return spec
+        axes = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        axes = axes[:len(leaf.shape)]
+        last = axes[-1]
+        if last is not None and leaf.shape[-1] % _axis_size(rules.mesh, last):
+            axes[-1] = None
+        return P(*axes)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def data_specs(rules: Rules, specs: dict, global_batch: int) -> dict:
+    """Batch inputs: dim 0 over DP axes when divisible."""
+    b_ax = rules.ax(global_batch, rules.dp)
+    out = {}
+    for k, v in specs.items():
+        out[k] = P(*((b_ax,) + (None,) * (len(v.shape) - 1)))
+    return out
+
+
+def cache_specs(rules: Rules, cache_shapes, batch: int) -> object:
+    """Decode caches: KV seq over 'model', batch over DP, SSM heads over
+    'model'. Leaves carry a leading stacked-repeat dim."""
+    b_ax = rules.ax(batch, rules.dp)
+    mp = rules.mp
+
+    def spec_for(path, leaf):
+        ks = jax.tree_util.keystr(path)
+        s = tuple(leaf.shape)
+        if ".k" in ks or ".v" in ks:          # (R, B, T, Hkv, Dh)
+            return P(None, b_ax, rules.ax(s[2], mp), None, None)
+        if ".pos" in ks:
+            return P(*([None] * len(s)))
+        if ks.endswith(".s"):                  # (R, B, G, HG, P, N)
+            return P(None, b_ax, None, rules.ax(s[3], mp), None, None)
+        if ".conv_x" in ks:                    # (R, B, W-1, di)
+            return P(None, b_ax, None, rules.ax(s[3], mp))
+        if ".conv_bc" in ks:
+            return P(None, b_ax, None, None)
+        return P(*([None] * len(s)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def _axis_size(mesh, axis) -> int:
+    s = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        s *= mesh.shape[a]
+    return s
+
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def sharded_bytes(shapes, specs, mesh) -> int:
+    """Static per-device bytes of a sharded pytree (memory sanity)."""
+    flat_s = jax.tree_util.tree_leaves(shapes)
+    flat_p = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    total = 0
+    for sh, sp in zip(flat_s, flat_p):
+        n = int(np.prod(sh.shape)) if sh.shape else 1
+        denom = 1
+        for axis in sp:
+            if axis is None:
+                continue
+            for a in (axis if isinstance(axis, tuple) else (axis,)):
+                denom *= mesh.shape[a]
+        total += n * jnp_dtype_size(sh.dtype) // denom
+    return total
+
+
+def jnp_dtype_size(dt) -> int:
+    return int(np.dtype(dt).itemsize)

@@ -1,0 +1,131 @@
+"""Block composition: pre-norm residual blocks of each kind.
+
+Kinds:
+  attn_mlp   — attention + dense FFN (llama/qwen/starcoder/musicgen/internlm)
+  attn_moe   — attention + MoE FFN (mixtral)
+  mamba      — pure Mamba-2 (mamba2 arch: no separate FFN)
+  mamba_mlp  — Mamba-2 + dense FFN (jamba non-MoE layers)
+  mamba_moe  — Mamba-2 + MoE FFN (jamba MoE layers)
+  arctic     — attention + (dense FFN ∥ MoE) residual (snowflake-arctic)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import mlp as M
+from repro.models import moe as MOE
+from repro.models import ssm as S
+from repro.models.common import ModelConfig, pdtype, rms_norm
+
+KINDS = ("attn_mlp", "attn_moe", "mamba", "mamba_mlp", "mamba_moe", "arctic")
+
+
+def zero_aux():
+    return {"lb_loss": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32),
+            "drop_frac": jnp.zeros((), jnp.float32)}
+
+
+def _add_aux(a, b):
+    return {k: a[k] + b[k] for k in a}
+
+
+def init_block(key, kind: str, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.ones((d,), dt)}
+    if kind in ("attn_mlp", "attn_moe", "arctic"):
+        p["attn"] = A.init_attn(ks[0], cfg)
+    else:
+        p["ssm"] = S.init_ssm(ks[0], cfg)
+    if kind in ("attn_mlp", "mamba_mlp", "arctic"):
+        p["ln2"] = jnp.ones((d,), dt)
+        p["mlp"] = M.init_mlp(ks[1], cfg)
+    if kind in ("attn_moe", "mamba_moe", "arctic"):
+        p["ln2"] = jnp.ones((d,), dt)
+        p["moe"] = MOE.init_moe(ks[2], cfg)
+    return p
+
+
+def block_forward(kind: str, p: dict, x, cfg: ModelConfig):
+    """Train/prefill forward without cache. Returns (x, aux)."""
+    aux = zero_aux()
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn_mlp", "attn_moe", "arctic"):
+        out, _ = A.attention_forward(p["attn"], h, cfg)
+    else:
+        out = S.ssm_forward(p["ssm"], h, cfg)
+    x = x + out
+    if kind in ("attn_mlp", "mamba_mlp"):
+        x = x + M.mlp_forward(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    elif kind in ("attn_moe", "mamba_moe"):
+        mo, maux = MOE.moe_forward(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                                   cfg)
+        x = x + mo
+        aux = _add_aux(aux, maux)
+    elif kind == "arctic":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        mo, maux = MOE.moe_forward(p["moe"], h2, cfg)
+        x = x + M.mlp_forward(p["mlp"], h2, cfg) + mo
+        aux = _add_aux(aux, maux)
+    return x, aux
+
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_t: int,
+                     dtype) -> dict:
+    if kind in ("attn_mlp", "attn_moe", "arctic"):
+        return {"attn": A.init_kv_cache(cfg, batch, max_t, dtype)}
+    return {"ssm": S.init_ssm_state(cfg, batch, dtype)}
+
+
+def block_prefill(kind: str, p: dict, x, cfg: ModelConfig, max_t: int, dtype):
+    """Prefill: forward + produce the decode cache. Returns (x, aux, cache)."""
+    aux = zero_aux()
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn_mlp", "attn_moe", "arctic"):
+        cache0 = A.init_kv_cache(cfg, x.shape[0], max_t, dtype)
+        out, cache_kv = A.attention_forward(p["attn"], h, cfg, cache=cache0)
+        cache = {"attn": cache_kv}
+    else:
+        out, st = S.ssm_forward(p["ssm"], h, cfg, return_state=True)
+        cache = {"ssm": st}
+    x = x + out
+    if kind in ("attn_mlp", "mamba_mlp"):
+        x = x + M.mlp_forward(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    elif kind in ("attn_moe", "mamba_moe"):
+        mo, maux = MOE.moe_forward(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                                   cfg)
+        x = x + mo
+        aux = _add_aux(aux, maux)
+    elif kind == "arctic":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        mo, maux = MOE.moe_forward(p["moe"], h2, cfg)
+        x = x + M.mlp_forward(p["mlp"], h2, cfg) + mo
+        aux = _add_aux(aux, maux)
+    return x, aux, cache
+
+
+def block_decode(kind: str, p: dict, x, cache: dict, cfg: ModelConfig):
+    """One-token decode. Returns (x, new_cache)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn_mlp", "attn_moe", "arctic"):
+        out, new_kv = A.decode_attention(p["attn"], h, cache["attn"], cfg)
+        new_cache = {"attn": new_kv}
+    else:
+        out, new_st = S.ssm_decode(p["ssm"], h, cache["ssm"], cfg)
+        new_cache = {"ssm": new_st}
+    x = x + out
+    if kind in ("attn_mlp", "mamba_mlp"):
+        x = x + M.mlp_forward(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    elif kind in ("attn_moe", "mamba_moe"):
+        mo, _ = MOE.moe_forward(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                                cfg)
+        x = x + mo
+    elif kind == "arctic":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        mo, _ = MOE.moe_forward(p["moe"], h2, cfg)
+        x = x + M.mlp_forward(p["mlp"], h2, cfg) + mo
+    return x, new_cache

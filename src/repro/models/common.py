@@ -1,0 +1,195 @@
+"""Model configuration + shared building blocks (norms, rotary, init)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    group_size: int = 1024          # dispatch group (memory bound)
+    dispatch: str = "dense"         # 'dense' (GShard einsum) | 'sort' (ragged)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 128
+    conv_width: int = 4
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # layer pattern: segments of (repeat, (block kinds...)) — scanned over
+    # `repeat` with the heterogeneous period unrolled inside the scan body.
+    # kinds: 'attn' | 'moe' (attn+moe ffn) | 'mamba' | 'mamba_moe' | 'arctic'
+    segments: tuple = ()
+    mlp_type: str = "swiglu"        # 'swiglu' | 'gelu'
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: int = 0                 # sliding-window size (0 = full attention)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    frontend: str = "none"          # 'none' | 'audio' | 'vision'
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    # attention execution knobs
+    attn_chunk_q: int = 1024        # blockwise (flash-style) prefill chunks
+    attn_chunk_kv: int = 1024
+    attn_chunk_threshold: int = 2048   # use blockwise above this seq len
+    vision_prefix: int = 0          # vlm: number of patch-embedding positions
+    sp_decode: bool = False         # split-K decode attention over 'model'
+    decode_unroll: bool = False     # unroll decode layer loop (alias-friendly)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if long-context decode is feasible (SSM/hybrid/SWA ring).
+
+        Hybrids (jamba) count as sub-quadratic: their few full-attention
+        layers keep an O(T) KV cache but no O(T²) compute at decode."""
+        kinds = [k for _, period in self.segments for k in period]
+        has_attn = any(k.startswith("attn") or k == "arctic" for k in kinds)
+        all_attn = all(k.startswith("attn") or k == "arctic" for k in kinds)
+        if not has_attn:
+            return True                      # pure SSM
+        if self.window > 0:
+            return True                      # SWA ring cache
+        return not all_attn                  # hybrid: attn minority
+
+    @property
+    def layer_kinds(self) -> list:
+        out = []
+        for repeat, period in self.segments:
+            out.extend(list(period) * repeat)
+        return out
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# shared ops
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    # f32 accumulation without materializing an f32 copy of x (XLA hoists a
+    # whole-tensor convert of the remat-saved residual out of the backward
+    # loop otherwise — a 2× stacked-activation copy on the dry-run)
+    dt = x.dtype
+    var = (jnp.einsum("...d,...d->...", x, x,
+                      preferred_element_type=jnp.float32)[..., None]
+           / x.shape[-1])
+    inv = jax.lax.rsqrt(var + eps).astype(dt)
+    return x * inv * scale.astype(dt)
+
+
+def rotary_embed(x, positions, theta: float):
+    """Apply RoPE. x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                         # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# activation-sharding context (set by the launcher before tracing)
+# ---------------------------------------------------------------------------
+
+_ACT_CTX = {"mesh": None, "dp": None, "sp": None}
+
+
+def set_activation_sharding(mesh, dp_axes, seq_axis=None):
+    """Install the mesh used for activation sharding constraints. XLA's
+    propagation otherwise drops batch sharding around MoE token reshapes
+    (verified: 16× replicated dispatch on the mixtral dry-run).
+    ``seq_axis`` enables Megatron-style sequence parallelism: the residual
+    stream between blocks shards its sequence dim over the model axis, so
+    remat-saved layer inputs shrink by the TP degree."""
+    _ACT_CTX["mesh"] = mesh
+    _ACT_CTX["dp"] = dp_axes
+    _ACT_CTX["sp"] = seq_axis
+
+
+def clear_activation_sharding():
+    _ACT_CTX["mesh"] = None
+    _ACT_CTX["dp"] = None
+    _ACT_CTX["sp"] = None
+
+
+def _resolve(mesh, axis_kind):
+    if axis_kind == "dp":
+        return _ACT_CTX["dp"]
+    if axis_kind == "mp":
+        return "model" if "model" in mesh.axis_names else None
+    if axis_kind == "sp":
+        return _ACT_CTX["sp"]
+    if axis_kind == "all":      # fully-sharded token dims (dp × model)
+        dp = _ACT_CTX["dp"] or ()
+        mp = ("model",) if "model" in mesh.axis_names else ()
+        return tuple(dp) + mp if (dp or mp) else None
+    return None
+
+
+def constrain_dims(x, *axis_kinds):
+    """with_sharding_constraint by per-dim kind ('dp'|'mp'|'sp'|None);
+    non-divisible dims fall back to replication; no-op without context."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None:
+        return x
+    spec = []
+    for dim, kind in enumerate(axis_kinds[:x.ndim]):
+        axes = _resolve(mesh, kind)
+        if axes is None:
+            spec.append(None)
+            continue
+        size = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            size *= mesh.shape[a]
+        spec.append(axes if x.shape[dim] % size == 0 else None)
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh,
+                                      jax.sharding.PartitionSpec(*spec)))
+
+
+def shard_batch_dim(x, dim: int = 0):
+    """Constrain dim 0 to DP (and, when enabled, the next dim to SP)."""
+    kinds = [None] * x.ndim
+    kinds[dim] = "dp"
+    if dim + 1 < x.ndim and _ACT_CTX["sp"] is not None and x.ndim >= 3:
+        kinds[dim + 1] = "sp"
+    return constrain_dims(x, *kinds)

@@ -1,0 +1,230 @@
+"""TransformerLM: segment-scanned decoder with heterogeneous layer periods.
+
+Layers are organized as ``cfg.segments = ((repeat, (kind, ...)), ...)``:
+homogeneous models are one segment of a 1-kind period; hybrids (jamba) scan
+over a multi-kind period. The scan keeps HLO size O(period) instead of
+O(n_layers) — essential for 512-device SPMD compile times — and the scan
+body is rematerialized (``jax.checkpoint``) during training.
+
+Frontends (DESIGN.md §4): ``audio`` consumes precomputed frame embeddings;
+``vision`` prepends precomputed patch embeddings to the token embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.common import (ModelConfig, cdtype, dense_init, pdtype,
+                                 rms_norm, shard_batch_dim)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_lm(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, len(cfg.segments) + 3)
+    dt = pdtype(cfg)
+    params = {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "segments": [],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab), dt)
+    for i, (repeat, period) in enumerate(cfg.segments):
+        seg_key = ks[2 + i]
+        layers = []
+        for r in range(repeat):
+            rk = jax.random.fold_in(seg_key, r)
+            pks = jax.random.split(rk, len(period))
+            layers.append(tuple(
+                blocks.init_block(pks[j], kind, cfg)
+                for j, kind in enumerate(period)))
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+        params["segments"].append(stacked)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict):
+    dt = cdtype(cfg)
+    emb = params["embed"].astype(dt)
+    if cfg.frontend == "audio":
+        x = batch["frame_embeds"].astype(dt)          # (B, S, D) stub frontend
+    else:
+        x = emb[batch["tokens"]]
+        if cfg.frontend == "vision" and "patch_embeds" in batch:
+            x = jnp.concatenate(
+                [batch["patch_embeds"].astype(dt), x], axis=1)
+    return x
+
+
+def lm_forward(params, cfg: ModelConfig, batch: dict):
+    """Full-sequence forward. Returns (logits (B,S,V), aux)."""
+    x = _embed_inputs(params, cfg, batch)
+    aux_total = blocks.zero_aux()
+
+    for seg_idx, (repeat, period) in enumerate(cfg.segments):
+        stacked = params["segments"][seg_idx]
+
+        def body(x, layer_params, period=period):
+            aux = blocks.zero_aux()
+            for j, kind in enumerate(period):
+                x, a = blocks.block_forward(kind, layer_params[j], x, cfg)
+                x = shard_batch_dim(x)        # keep batch on the DP axes
+                aux = blocks._add_aux(aux, a)
+            return x, aux
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, auxs = jax.lax.scan(body, x, stacked)
+        aux_total = {k: aux_total[k] + auxs[k].sum() for k in aux_total}
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    w_out = head if head is not None else params["embed"].T
+    logits = x @ w_out.astype(x.dtype)
+    return logits, aux_total
+
+
+def lm_loss(params, cfg: ModelConfig, batch: dict,
+            lb_weight: float = 0.01, z_weight: float = 1e-3):
+    """Cross-entropy (+ MoE aux) loss. batch: tokens/targets/(mask)."""
+    logits, aux = lm_forward(params, cfg, batch)
+    targets = batch["targets"]
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        # loss only over the text region (prefix positions carry no targets)
+        prefix = batch["patch_embeds"].shape[1]
+        logits = logits[:, prefix:]
+    # one-hot contraction instead of take_along_axis: keeps the vocab dim
+    # sharded (no f32 logit all-gather/transpose buffers on the mesh)
+    logits32 = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits32, axis=-1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(logits32 - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot).astype(jnp.float32)
+    nll = logz - gold
+    mask = batch.get("mask", jnp.ones_like(nll))
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + lb_weight * aux["lb_loss"] + z_weight * aux["z_loss"]
+    metrics = {"nll": loss, **aux}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_t: int, dtype=None):
+    dtype = dtype or cdtype(cfg)
+    caches = []
+    for repeat, period in cfg.segments:
+        single = tuple(blocks.init_block_cache(k, cfg, batch, max_t, dtype)
+                       for k in period)
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((repeat,) + a.shape, a.dtype), single)
+        caches.append(stacked)
+    return caches
+
+
+def lm_prefill(params, cfg: ModelConfig, batch: dict, max_t: int):
+    """Process the prompt, build decode caches. Returns (logits, caches)."""
+    x = _embed_inputs(params, cfg, batch)
+    dtype = cdtype(cfg)
+    caches = []
+    for seg_idx, (repeat, period) in enumerate(cfg.segments):
+        stacked = params["segments"][seg_idx]
+
+        def body(x, layer_params, period=period):
+            cs = []
+            for j, kind in enumerate(period):
+                x, _, c = blocks.block_prefill(kind, layer_params[j], x, cfg,
+                                               max_t, dtype)
+                cs.append(c)
+            return x, tuple(cs)
+
+        x, seg_caches = jax.lax.scan(body, x, stacked)
+        caches.append(seg_caches)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    w_out = head if head is not None else params["embed"].T
+    logits = x[:, -1:] @ w_out.astype(x.dtype)
+    return logits, caches
+
+
+def lm_decode_step(params, caches, cfg: ModelConfig, tokens):
+    """One decode step. tokens: (B, 1) int32. Returns (logits, new caches).
+
+    Caches thread through the scan *carry* (updated in place by layer
+    index) rather than as xs→ys streams: a while-loop carry aliases its
+    buffers across iterations, so the multi-GB KV store is read once and
+    written one token-slice per layer — scan ys would double-buffer the
+    whole cache every step (8× HBM traffic on the deepseek decode_32k
+    dry-run; see EXPERIMENTS.md §Perf)."""
+    dt = cdtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+    new_caches = []
+    for seg_idx, (repeat, period) in enumerate(cfg.segments):
+        stacked = params["segments"][seg_idx]
+
+        if cfg.decode_unroll:
+            # python-unrolled layers: every cache update is a trivially
+            # aliasable DUS (larger HLO, less cache traffic)
+            cache_stk = caches[seg_idx]
+            for i in range(repeat):
+                lp = jax.tree_util.tree_map(lambda a: a[i], stacked)
+                lc = jax.tree_util.tree_map(lambda c: c[i], cache_stk)
+                new_cs = []
+                for j, kind in enumerate(period):
+                    x, nc = blocks.block_decode(kind, lp[j], x, lc[j], cfg)
+                    new_cs.append(nc)
+                cache_stk = jax.tree_util.tree_map(
+                    lambda stk, nc: jax.lax.dynamic_update_index_in_dim(
+                        stk, nc.astype(stk.dtype), i, 0),
+                    cache_stk, tuple(new_cs))
+            new_caches.append(cache_stk)
+            continue
+
+        def body(carry, layer_params, period=period):
+            x, cache_stk, i = carry
+            layer_cache = jax.tree_util.tree_map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, i, 0,
+                                                       keepdims=False),
+                cache_stk)
+            new_cs = []
+            for j, kind in enumerate(period):
+                x, nc = blocks.block_decode(kind, layer_params[j], x,
+                                            layer_cache[j], cfg)
+                new_cs.append(nc)
+            cache_stk = jax.tree_util.tree_map(
+                lambda stk, nc: jax.lax.dynamic_update_index_in_dim(
+                    stk, nc.astype(stk.dtype), i, 0),
+                cache_stk, tuple(new_cs))
+            return (x, cache_stk, i + 1), None
+
+        (x, seg_new, _), _ = jax.lax.scan(
+            body, (x, caches[seg_idx], jnp.int32(0)), stacked)
+        new_caches.append(seg_new)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    w_out = head if head is not None else params["embed"].T
+    logits = x @ w_out.astype(x.dtype)
+    return logits, new_caches
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count via eval_shape (no allocation)."""
+    shapes = jax.eval_shape(functools.partial(init_lm, cfg),
+                            jax.random.PRNGKey(0))
+    import numpy as np
+    return sum(int(np.prod(l.shape))
+               for l in jax.tree_util.tree_leaves(shapes))

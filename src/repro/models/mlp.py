@@ -1,0 +1,36 @@
+"""Dense FFN blocks: SwiGLU (llama-family) and GELU (starcoder2-style)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, cdtype, dense_init, pdtype
+
+
+class MLPParams(NamedTuple):
+    w_gate: Optional[jax.Array]   # (D, F) — None for non-gated
+    w_up: jax.Array               # (D, F)
+    w_down: jax.Array             # (F, D)
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> MLPParams:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    gated = cfg.mlp_type == "swiglu"
+    return MLPParams(
+        w_gate=dense_init(ks[0], (d, f), dt) if gated else None,
+        w_up=dense_init(ks[1], (d, f), dt),
+        w_down=dense_init(ks[2], (f, d), dt))
+
+
+def mlp_forward(p: MLPParams, x, cfg: ModelConfig):
+    dt = x.dtype
+    up = x @ p.w_up.astype(dt)
+    if p.w_gate is not None:
+        h = jax.nn.silu(x @ p.w_gate.astype(dt)) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ p.w_down.astype(dt)

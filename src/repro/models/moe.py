@@ -1,0 +1,174 @@
+"""Mixture-of-experts FFN: top-k routing, GShard-style capacity dispatch.
+
+Dispatch strategy 'dense' (default, robust under SPMD partitioning):
+tokens are processed in fixed-size groups (a lax.scan bounds the
+(S, E, C) dispatch tensor); within each group, one-hot dispatch/combine
+einsums move tokens to per-expert capacity slots. Expert weights carry an
+explicit leading E dim so expert parallelism shards them over the `model`
+mesh axis when E divides the axis (configs fall back to d_ff tensor
+parallelism otherwise — see launch/shardings.py).
+
+Aux losses: load-balancing (Switch) + router z-loss, returned to the caller.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, MoEConfig, constrain_dims,
+                                 dense_init, pdtype)
+
+
+class MoEParams(NamedTuple):
+    w_router: jax.Array    # (D, E)
+    w_gate: jax.Array      # (E, D, F)
+    w_up: jax.Array        # (E, D, F)
+    w_down: jax.Array      # (E, F, D)
+
+
+def init_moe(key, cfg: ModelConfig) -> MoEParams:
+    assert cfg.moe is not None
+    e, d, f = cfg.moe.n_experts, cfg.d_model, cfg.d_ff
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    return MoEParams(
+        w_router=dense_init(ks[0], (d, e), jnp.float32),
+        w_gate=dense_init(ks[1], (e, d, f), dt),
+        w_up=dense_init(ks[2], (e, d, f), dt),
+        w_down=dense_init(ks[3], (e, f, d), dt))
+
+
+def _capacity(mcfg: MoEConfig, group: int) -> int:
+    c = int(group * mcfg.top_k * mcfg.capacity_factor / mcfg.n_experts)
+    return max(4, -(-c // 4) * 4)
+
+
+def _f_split(e: int, f: int) -> int:
+    """Smallest s with (e·s) divisible by the model axis and f % s == 0.
+
+    Gated OFF by default: splitting inside the layer scan re-shards the
+    expert weights on every layer execution (measured 48 TB/chip/step on
+    mixtral train_4k — see EXPERIMENTS.md §Perf, refuted iteration 5).
+    The validated follow-up is to store the weights pre-split; enable via
+    REPRO_MOE_FSPLIT=1 to reproduce the refutation."""
+    import os
+    if not os.environ.get("REPRO_MOE_FSPLIT"):
+        return 1
+    from repro.models import common
+    mesh = common._ACT_CTX["mesh"]
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    mp = mesh.shape["model"]
+    if e % mp == 0:
+        return 1
+    for s in range(2, mp + 1):
+        if (e * s) % mp == 0 and f % s == 0:
+            return s
+    return 1
+
+
+def _group_moe(p: MoEParams, x, mcfg: MoEConfig, compute_dtype):
+    """One dispatch group. x: (B, S, D) -> (out (B, S, D), aux dict).
+
+    The batch dim is never merged with other dims (XLA SPMD falls back to
+    involuntary full rematerialization on reshapes that regroup a sharded
+    dim — a 10×-memory regression on the MoE dry-runs). Only small int32
+    routing tensors flatten (B·S·k·E ints; replication harmless).
+
+    Sharding: B over DP, capacity C over DP, expert dim E over the model
+    axis when divisible (EP) else d_ff over model (TP). Dispatch/combine
+    einsums contract the sharded B -> psum, the TPU-native stand-in for
+    GShard's all-to-all."""
+    b, s, d = x.shape
+    e, k = mcfg.n_experts, mcfg.top_k
+    c = _capacity(mcfg, b * s)
+
+    # f32 router accumulation without an f32 copy of x (avoids a hoisted
+    # whole-buffer convert of the remat-saved residual)
+    logits = jnp.einsum("bsd,de->bse", x, p.w_router.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                 # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # per-slot one-hot and capacity positions (priority: slot-major, then
+    # token order) — computed on a small flattened int tensor
+    oh = jax.nn.one_hot(idx, e, dtype=jnp.int32)             # (B, S, k, E)
+    prio = oh.transpose(2, 0, 1, 3).reshape(k * b * s, e)
+    pos_prio = jnp.cumsum(prio, axis=0) - prio
+    pos = pos_prio.reshape(k, b, s, e).transpose(1, 2, 0, 3)  # (B, S, k, E)
+    within = (pos < c) & (oh > 0)
+    pos_c = jnp.where(within, pos, 0)
+
+    disp = (jax.nn.one_hot(pos_c, c, dtype=compute_dtype)
+            * within[..., None].astype(compute_dtype))       # (B, S, k, E, C)
+    disp = constrain_dims(disp, "dp", None, None, None, None)
+    dispatch = disp.sum(2)                                   # (B, S, E, C)
+    combine = (disp * gate_vals[..., None, None].astype(compute_dtype)).sum(2)
+
+    # expert f-splitting: when E doesn't divide the model axis, split each
+    # expert's d_ff into `split` halves so (E·split) does — exact for gated
+    # FFNs (f is elementwise in gate/up, summed in down) and it turns the
+    # dispatch psum broadcast into true EP sharding (16× fewer collective
+    # bytes on the mixtral train_4k dry-run; see EXPERIMENTS.md §Perf)
+    split = _f_split(e, p.w_gate.shape[-1])
+    wg, wu, wd = p.w_gate, p.w_up, p.w_down
+    if split > 1:
+        e2, f2 = e * split, p.w_gate.shape[-1] // split
+        d_model = wg.shape[1]
+        wg = wg.reshape(e, d_model, split, f2).transpose(0, 2, 1, 3) \
+            .reshape(e2, d_model, f2)
+        wu = wu.reshape(e, d_model, split, f2).transpose(0, 2, 1, 3) \
+            .reshape(e2, d_model, f2)
+        wd = wd.reshape(e, split, f2, d_model).reshape(e2, f2, d_model)
+        dispatch = jnp.repeat(dispatch, split, axis=2)       # (B, S, E2, C)
+        combine = jnp.repeat(combine, split, axis=2)
+
+    xin = jnp.einsum("bsec,bsd->ecd", dispatch, x.astype(compute_dtype))
+    xin = constrain_dims(xin, "mp", "dp", None)              # EP × capacity-DP
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, wg.astype(compute_dtype))) \
+        * jnp.einsum("ecd,edf->ecf", xin, wu.astype(compute_dtype))
+    hout = jnp.einsum("ecf,efd->ecd", h, wd.astype(compute_dtype))
+    hout = constrain_dims(hout, "mp", "dp", None)
+    out = jnp.einsum("bsec,ecd->bsd", combine, hout)
+    out = constrain_dims(out, "dp", None, None)
+
+    # aux: load-balance (mean prob * mean assignment) + z-loss
+    me = probs.reshape(-1, e).mean(0)                        # (E,)
+    ce = oh.reshape(-1, e).astype(jnp.float32).mean(0) * e / k
+    lb = jnp.sum(me * ce) * e
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - within.astype(jnp.float32).sum() / (b * s * k)
+    return out.astype(x.dtype), {"lb_loss": lb, "z_loss": z,
+                                 "drop_frac": dropped}
+
+
+def moe_forward(p: MoEParams, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (out, aux).
+
+    The sequence dim is chunked via lax.scan (bounds dispatch memory); the
+    batch dim stays intact and DP-sharded throughout."""
+    mcfg = cfg.moe
+    b, s, d = x.shape
+    s_c = max(1, min(s, mcfg.group_size // max(b, 1)))
+    while s % s_c:
+        s_c -= 1
+    n_chunks = s // s_c
+    compute_dtype = x.dtype
+
+    if n_chunks == 1:
+        return _group_moe(p, x, mcfg, compute_dtype)
+
+    chunks = x.reshape(b, n_chunks, s_c, d).transpose(1, 0, 2, 3)
+
+    def body(_, grp):
+        out, aux = _group_moe(p, grp, mcfg, compute_dtype)
+        return None, (out, aux["lb_loss"], aux["z_loss"], aux["drop_frac"])
+
+    _, (outs, lb, z, drop) = jax.lax.scan(body, None, chunks)
+    out = outs.transpose(1, 0, 2, 3).reshape(b, s, d)
+    aux = {"lb_loss": lb.mean(), "z_loss": z.mean(), "drop_frac": drop.mean()}
+    return out, aux

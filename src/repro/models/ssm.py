@@ -1,0 +1,229 @@
+"""Mamba-2 (SSD, state-space duality) block: chunked dual form for
+train/prefill, constant-state recurrence for decode.
+
+Follows the Mamba-2 formulation [arXiv:2405.21060]:
+    S_t = exp(dt_t · A_h) · S_{t-1} + dt_t · B_t ⊗ x_t
+    y_t = C_t · S_t + D_h · x_t
+with per-head scalar decay A_h, grouped B/C (G groups), depthwise causal
+conv on the (x, B, C) streams, and a gated RMSNorm before out-projection.
+
+The chunked dual form computes intra-chunk interactions as a masked
+attention-like matmul (MXU-friendly) and carries inter-chunk state through a
+``lax.scan`` — O(T·Q) live memory instead of O(T²).
+
+Projections are split (z/x/B/C/dt) instead of one fused in_proj so the inner
+dimension (heads) shards cleanly over the `model` mesh axis; B/C are small
+and stay replicated. The depthwise conv splits likewise (per-channel weights
+make the split exactly equivalent to the fused conv).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, pdtype, rms_norm
+
+
+class SSMParams(NamedTuple):
+    w_z: jax.Array        # (D, di) gate branch
+    w_x: jax.Array        # (D, di)
+    w_b: jax.Array        # (D, G*N)
+    w_c: jax.Array        # (D, G*N)
+    w_dt: jax.Array       # (D, H)
+    conv_x: jax.Array     # (W, di) depthwise
+    conv_x_b: jax.Array   # (di,)
+    conv_bc: jax.Array    # (W, 2*G*N)
+    conv_bc_b: jax.Array  # (2*G*N,)
+    a_log: jax.Array      # (H,)
+    dt_bias: jax.Array    # (H,)
+    d_skip: jax.Array     # (H,)
+    norm_scale: jax.Array # (di,)
+    w_out: jax.Array      # (di, D)
+
+
+class SSMState(NamedTuple):
+    s: jax.Array          # (B, G, HG, P, N) — ssm state
+    conv_x: jax.Array     # (B, W-1, di) pre-activation ring
+    conv_bc: jax.Array    # (B, W-1, 2*G*N)
+    pos: jax.Array        # ()
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    h = di // s.head_dim
+    return di, h, s.n_groups, s.d_state, s.head_dim
+
+
+def init_ssm(key, cfg: ModelConfig) -> SSMParams:
+    s = cfg.ssm
+    di, h, g, n, p = _dims(cfg)
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    a_init = jax.random.uniform(ks[5], (h,), minval=1.0, maxval=16.0)
+    dt_floor, dt_ceil = 1e-3, 1e-1
+    dt_init = jnp.exp(jax.random.uniform(ks[6], (h,))
+                      * (jnp.log(dt_ceil) - jnp.log(dt_floor))
+                      + jnp.log(dt_floor))
+    return SSMParams(
+        w_z=dense_init(ks[0], (cfg.d_model, di), dt),
+        w_x=dense_init(ks[1], (cfg.d_model, di), dt),
+        w_b=dense_init(ks[2], (cfg.d_model, g * n), dt),
+        w_c=dense_init(ks[3], (cfg.d_model, g * n), dt),
+        w_dt=dense_init(ks[4], (cfg.d_model, h), dt),
+        conv_x=dense_init(ks[7], (s.conv_width, di), dt, scale=0.3),
+        conv_x_b=jnp.zeros((di,), dt),
+        conv_bc=dense_init(jax.random.fold_in(key, 11),
+                           (s.conv_width, 2 * g * n), dt, scale=0.3),
+        conv_bc_b=jnp.zeros((2 * g * n,), dt),
+        a_log=jnp.log(a_init).astype(jnp.float32),
+        dt_bias=jnp.log(jnp.expm1(dt_init)).astype(jnp.float32),
+        d_skip=jnp.ones((h,), jnp.float32),
+        norm_scale=jnp.ones((di,), dt),
+        w_out=dense_init(jax.random.fold_in(key, 9), (di, cfg.d_model), dt))
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via shifted adds (width small & static).
+    x: (B, T, C); w: (W, C); b: (C,)."""
+    width = w.shape[0]
+    out = x * w[width - 1][None, None, :].astype(x.dtype)
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + shifted * w[width - 1 - i][None, None, :].astype(x.dtype)
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def ssm_forward(p: SSMParams, x, cfg: ModelConfig,
+                return_state: bool = False):
+    """Chunked SSD forward. x: (B, T, D) -> (B, T, D)."""
+    scfg = cfg.ssm
+    di, h, g, n, pp = _dims(cfg)
+    hg = h // g
+    b, t, _ = x.shape
+    q = min(scfg.chunk, t)
+    t_pad = -(-t // q) * q
+    nc = t_pad // q
+
+    dtc = x.dtype
+    z = x @ p.w_z.astype(dtc)
+    xs_raw = x @ p.w_x.astype(dtc)
+    bc_raw = jnp.concatenate([x @ p.w_b.astype(dtc), x @ p.w_c.astype(dtc)],
+                             axis=-1)
+    dt_raw = x @ p.w_dt.astype(dtc)
+
+    xs = _causal_conv(xs_raw, p.conv_x, p.conv_x_b)
+    bc = _causal_conv(bc_raw, p.conv_bc, p.conv_bc_b)
+    bs, cs = bc[..., :g * n], bc[..., g * n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p.dt_bias[None, None, :])          # (B, T, H)
+    a = -jnp.exp(p.a_log)                                     # (H,)
+
+    if t_pad != t:
+        # zero-pad to a chunk multiple; dt=0 at pad positions makes the
+        # state update an exact identity there (decay 1, contribution 0)
+        pad = ((0, 0), (0, t_pad - t), (0, 0))
+        xs, bs, cs, dt = (jnp.pad(arr, pad) for arr in (xs, bs, cs, dt))
+
+    # chunked views, scanned chunk-by-chunk (bounds live memory to one chunk)
+    xs_c = xs.reshape(b, nc, q, g, hg, pp).transpose(1, 0, 2, 3, 4, 5)
+    bs_c = bs.reshape(b, nc, q, g, n).transpose(1, 0, 2, 3, 4)
+    cs_c = cs.reshape(b, nc, q, g, n).transpose(1, 0, 2, 3, 4)
+    dt_c = dt.reshape(b, nc, q, g, hg).transpose(1, 0, 2, 3, 4)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_step(s_prev, inp):
+        x_k, b_k, c_k, d_k = inp                   # (B,Q,G,HG,P) (B,Q,G,N) ..
+        x_k = x_k.astype(jnp.float32)
+        b_k = b_k.astype(jnp.float32)
+        c_k = c_k.astype(jnp.float32)
+        la = d_k * a.reshape(g, hg)[None, None]    # (B,Q,G,HG) log-decay
+        cum = jnp.cumsum(la, axis=1)
+        # intra: scores[i,j] = (C_i·B_j)·exp(cum_i − cum_j)·dt_j, j<=i
+        cb = jnp.einsum("bign,bjgn->bijg", c_k, b_k)          # (B,Q,Q,G)
+        li = cum[:, :, None] - cum[:, None]                   # (B,Q,Q,G,HG)
+        decay = jnp.where(mask[None, :, :, None, None], jnp.exp(li), 0.0)
+        w_ij = cb[..., None] * decay * d_k[:, None]           # dt_j at axis 2
+        y_intra = jnp.einsum("bijgh,bjghp->bighp", w_ij, x_k)
+        # inter: y_i += exp(cum_i)·(C_i · S_prev)
+        y_inter = jnp.einsum("bign,bghpn->bighp", c_k, s_prev) \
+            * jnp.exp(cum)[..., None]
+        # state: S_new = exp(cum_Q)·S_prev + Σ_j exp(cum_Q − cum_j)·dt_j·B_j⊗x_j
+        dec_end = jnp.exp(cum[:, -1:] - cum)                  # (B,Q,G,HG)
+        s_loc = jnp.einsum("bjgn,bjghp,bjgh->bghpn", b_k, x_k, d_k * dec_end)
+        s_new = s_prev * jnp.exp(cum[:, -1])[..., None, None] + s_loc
+        return s_new, (y_intra + y_inter).astype(dtc)
+
+    s0 = jnp.zeros((b, g, hg, pp, n), jnp.float32)
+    s_final, y_chunks = jax.lax.scan(chunk_step, s0, (xs_c, bs_c, cs_c, dt_c))
+    y = y_chunks.transpose(1, 0, 2, 3, 4, 5).reshape(b, t_pad, g, hg, pp)[:, :t] \
+        .astype(jnp.float32)
+    y = y + xs[:, :t].reshape(b, t, g, hg, pp).astype(jnp.float32) \
+        * p.d_skip.reshape(g, hg)[None, None, :, :, None]
+    y = y.reshape(b, t, di).astype(dtc)
+
+    y = rms_norm(y * jax.nn.silu(z), p.norm_scale, cfg.norm_eps)
+    out = y @ p.w_out.astype(dtc)
+    if return_state:
+        w = p.conv_x.shape[0]
+        def tail(arr):
+            if t >= w - 1:
+                return arr[:, t - (w - 1):]
+            return jnp.pad(arr, ((0, 0), (w - 1 - t, 0), (0, 0)))
+        state = SSMState(s=s_final, conv_x=tail(xs_raw), conv_bc=tail(bc_raw),
+                         pos=jnp.asarray(t, jnp.int32))
+        return out, state
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> SSMState:
+    scfg = cfg.ssm
+    di, h, g, n, pp = _dims(cfg)
+    return SSMState(
+        s=jnp.zeros((batch, g, h // g, pp, n), jnp.float32),
+        conv_x=jnp.zeros((batch, scfg.conv_width - 1, di), dtype),
+        conv_bc=jnp.zeros((batch, scfg.conv_width - 1, 2 * g * n), dtype),
+        pos=jnp.zeros((), jnp.int32))
+
+
+def ssm_decode(p: SSMParams, x, state: SSMState, cfg: ModelConfig):
+    """One-token decode. x: (B, 1, D) -> (out (B,1,D), new state)."""
+    di, h, g, n, pp = _dims(cfg)
+    hg = h // g
+    b = x.shape[0]
+    dtc = x.dtype
+    xt = x[:, 0]
+    z = xt @ p.w_z.astype(dtc)
+    xs_raw = xt @ p.w_x.astype(dtc)
+    bc_raw = jnp.concatenate([xt @ p.w_b.astype(dtc), xt @ p.w_c.astype(dtc)],
+                             axis=-1)
+    dt_raw = xt @ p.w_dt.astype(dtc)
+
+    def ring_conv(ring, new, w, bias):
+        win = jnp.concatenate([ring, new[:, None]], axis=1)   # (B, W, C)
+        out = jnp.einsum("bwc,wc->bc", win.astype(jnp.float32),
+                         w.astype(jnp.float32))
+        return jax.nn.silu(out + bias.astype(jnp.float32)).astype(dtc), win[:, 1:]
+
+    xs, new_cx = ring_conv(state.conv_x, xs_raw, p.conv_x, p.conv_x_b)
+    bc, new_cbc = ring_conv(state.conv_bc, bc_raw, p.conv_bc, p.conv_bc_b)
+    bs = bc[..., :g * n].reshape(b, g, n).astype(jnp.float32)
+    cs = bc[..., g * n:].reshape(b, g, n).astype(jnp.float32)
+    xh = xs.reshape(b, g, hg, pp).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias[None, :]) \
+        .reshape(b, g, hg)
+    a = -jnp.exp(p.a_log).reshape(g, hg)
+
+    decay = jnp.exp(dt * a[None])                             # (B,G,HG)
+    s_new = state.s * decay[..., None, None] + jnp.einsum(
+        "bgn,bghp,bgh->bghpn", bs, xh, dt)
+    y = jnp.einsum("bgn,bghpn->bghp", cs, s_new) \
+        + xh * p.d_skip.reshape(g, hg)[None, :, :, None]
+    y = y.reshape(b, 1, di).astype(dtc)
+    y = rms_norm(y * jax.nn.silu(z[:, None]), p.norm_scale, cfg.norm_eps)
+    out = y @ p.w_out.astype(dtc)
+    return out, SSMState(s=s_new, conv_x=new_cx, conv_bc=new_cbc,
+                         pos=state.pos + 1)

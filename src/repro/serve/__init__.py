@@ -1,0 +1,1 @@
+from repro.serve.decode import generate, make_decode_step, make_prefill

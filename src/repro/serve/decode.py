@@ -1,0 +1,55 @@
+"""Serving entry points: prefill + decode step builders, generation loop."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.common import ModelConfig
+
+
+def make_prefill(cfg: ModelConfig, max_t: int):
+    @jax.jit
+    def prefill(params, batch):
+        return lm.lm_prefill(params, cfg, batch, max_t)
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    @jax.jit
+    def step(params, caches, tokens):
+        return lm.lm_decode_step(params, caches, cfg, tokens)
+    return step
+
+
+def sample_token(logits, key, temperature: float = 0.0):
+    """logits: (B, 1, V). Greedy when temperature == 0."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    scaled = logits[:, -1].astype(jnp.float32) / temperature
+    return jax.random.categorical(key, scaled, axis=-1) \
+        .astype(jnp.int32)[:, None]
+
+
+def generate(params, cfg: ModelConfig, prompt_tokens, n_new: int,
+             temperature: float = 0.0, seed: int = 0,
+             max_t: Optional[int] = None):
+    """Batched generation: prefill the prompt, decode n_new tokens."""
+    b, s = prompt_tokens.shape
+    max_t = max_t or (s + n_new + 8)
+    prefill = make_prefill(cfg, max_t)
+    step = make_decode_step(cfg)
+    logits, caches = prefill(params, {"tokens": prompt_tokens})
+    key = jax.random.PRNGKey(seed)
+    out = []
+    tok = sample_token(logits, key, temperature)
+    out.append(tok)
+    for i in range(n_new - 1):
+        key, sub = jax.random.split(key)
+        logits, caches = step(params, caches, tok)
+        tok = sample_token(logits, sub, temperature)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

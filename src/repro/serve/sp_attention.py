@@ -1,0 +1,87 @@
+"""Sequence-parallel (split-K / flash-decoding) decode attention.
+
+For decode shapes the KV cache dominates memory (e.g. qwen2-7b decode_32k:
+~240 GB of KV) and must shard its *sequence* dimension over the `model`
+mesh axis. A single softmax over a sharded axis is expressed explicitly:
+each shard computes a partial (max, sum-exp, weighted-V) over its KV slice,
+then a psum-based logsumexp merge combines them — 2 small collectives of
+O(B·Hq·Dh) instead of XLA's default all-gather of the O(B·T) score row.
+
+Used inside shard_map (launch/shardings.py builds the specs); the cache
+update (one token) lands on the owning shard only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sp_decode_attention_local(q, k_shard, v_shard, pos, n_kv: int,
+                              axis_name: str):
+    """Body to run inside shard_map, sharded over `axis_name` on the KV
+    sequence dim.
+
+    q: (B, 1, Hq, Dh) replicated over the axis.
+    k_shard/v_shard: (B, T_shard, Hkv, Dh) — this shard's KV slice.
+    pos: () int32 — current absolute position (k/v already updated).
+    Returns (B, 1, Hq, Dh), replicated (psum-combined).
+    """
+    b, _, hq, dh = q.shape
+    t_shard = k_shard.shape[1]
+    g = hq // n_kv
+    idx = jax.lax.axis_index(axis_name)
+    kpos = idx * t_shard + jnp.arange(t_shard)
+    valid = kpos <= pos                                     # (T_shard,)
+
+    qg = q.reshape(b, 1, n_kv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k_shard) / jnp.sqrt(dh)
+    scores = scores.astype(jnp.float32) + jnp.where(valid, 0.0, NEG_INF)[
+        None, None, None, None, :]
+    m_loc = scores.max(axis=-1)                             # (B,Hkv,G,1)
+    p = jnp.exp(scores - m_loc[..., None])
+    s_loc = p.sum(axis=-1)
+    o_loc = jnp.einsum("bkgst,btkd->bskgd", p.astype(q.dtype), v_shard) \
+        .astype(jnp.float32)                                # (B,1,Hkv,G,Dh)
+
+    m_glob = jax.lax.pmax(m_loc, axis_name)
+    alpha = jnp.exp(m_loc - m_glob)                         # (B,Hkv,G,1)
+    s_glob = jax.lax.psum(alpha * s_loc, axis_name)
+    o_glob = jax.lax.psum(o_loc * alpha.transpose(0, 3, 1, 2)[..., None],
+                          axis_name)
+    out = o_glob / jnp.maximum(s_glob, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+def sp_cache_update(k_cache, v_cache, k_new, v_new, pos, axis_name: str):
+    """Write the new token's K/V into the owning shard's slice.
+
+    k_cache: (B, T_shard, Hkv, Dh) local shard; k_new: (B, 1, Hkv, Dh)
+    replicated. Non-owners write nothing (masked update)."""
+    t_shard = k_cache.shape[1]
+    idx = jax.lax.axis_index(axis_name)
+    owner = pos // t_shard
+    local_slot = pos - owner * t_shard
+    is_mine = owner == idx
+    slot = jnp.where(is_mine, local_slot, 0)
+    upd_k = jax.lax.dynamic_update_slice(k_cache, k_new, (0, slot, 0, 0))
+    upd_v = jax.lax.dynamic_update_slice(v_cache, v_new, (0, slot, 0, 0))
+    k_out = jnp.where(is_mine, upd_k, k_cache)
+    v_out = jnp.where(is_mine, upd_v, v_cache)
+    return k_out, v_out
+
+
+def reference_decode_attention(q, k, v, pos, n_kv: int):
+    """Single-device oracle for the split-K path (tests)."""
+    b, _, hq, dh = q.shape
+    t = k.shape[1]
+    g = hq // n_kv
+    valid = jnp.arange(t) <= pos
+    qg = q.reshape(b, 1, n_kv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / jnp.sqrt(dh)
+    scores = scores.astype(jnp.float32) + jnp.where(valid, 0.0, NEG_INF)[
+        None, None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, 1, hq, dh)

@@ -1,0 +1,2 @@
+from repro.train.optim import OptConfig, OptState, adamw_update, init_opt_state
+from repro.train.train_loop import make_train_step, train_many

@@ -1,0 +1,1 @@
+from repro.utils.tree import tree_bytes, tree_cast, tree_zeros_like

@@ -1,0 +1,34 @@
+"""Small pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of all array leaves in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "dtype") and hasattr(leaf, "shape"):
+            total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_cast(tree, dtype):
+    """Cast all inexact (float) leaves of a pytree to ``dtype``."""
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "shape"))

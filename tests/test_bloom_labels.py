@@ -1,0 +1,51 @@
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bloom
+from repro.core.labels import build_label_store, padded_vec_labels
+
+
+def _toy_store():
+    # 5 vectors, labels: [0], [0,1], [2], [1,2,3], []
+    offsets = np.array([0, 1, 3, 4, 7, 7], np.int64)
+    flat = np.array([0, 0, 1, 2, 1, 2, 3], np.int32)
+    return build_label_store(offsets, flat, n_labels=4)
+
+
+def test_inverted_index():
+    s = _toy_store()
+    np.testing.assert_array_equal(s.postings(0), [0, 1])
+    np.testing.assert_array_equal(s.postings(1), [1, 3])
+    np.testing.assert_array_equal(s.postings(2), [2, 3])
+    np.testing.assert_array_equal(s.postings(3), [3])
+    assert s.label_counts.tolist() == [2, 2, 2, 1]
+
+
+def test_bloom_no_false_negatives():
+    s = _toy_store()
+    for vec in range(5):
+        for l in s.labels_of(vec):
+            req = bloom.label_bits(int(l), s.k_hashes)
+            assert bool(bloom.bloom_pass(jnp.asarray(s.blooms[vec:vec + 1]),
+                                         req)[0])
+
+
+def test_bloom_empty_vector_rejects():
+    s = _toy_store()
+    # vector 4 has no labels -> bloom word is 0; any nonzero mask fails
+    req = bloom.label_bits(0, s.k_hashes)
+    assert not bool(bloom.bloom_pass(jnp.asarray(s.blooms[4:5]), req)[0])
+
+
+def test_padded_labels():
+    s = _toy_store()
+    padded = padded_vec_labels(s, max_labels=4)
+    assert padded.shape == (5, 4)
+    assert set(padded[3].tolist()) == {1, 2, 3, -1}
+    assert padded[4].tolist() == [-1, -1, -1, -1]
+
+
+def test_fp_rate_monotone_in_labels():
+    lo = bloom.bloom_fp_rate(2.0)
+    hi = bloom.bloom_fp_rate(12.0)
+    assert 0.0 <= lo < hi < 1.0

@@ -1,0 +1,56 @@
+import numpy as np
+
+from repro.core import cost_model as CM
+
+
+def _inputs(**kw):
+    base = dict(n=1_000_000, l=32, s=0.1, p_pre=1.0, p_in=0.8,
+                x_pre=50, x_in=10, r=64, r_d=640, s_r=1, s_d=2)
+    base.update(kw)
+    return CM.CostInputs(**base)
+
+
+def test_router_prefers_pre_at_low_selectivity():
+    r = CM.route_query(_inputs(s=0.0005))
+    assert r.mechanism == "pre"
+
+
+def test_router_prefers_post_or_in_at_high_selectivity():
+    r = CM.route_query(_inputs(s=0.6))
+    assert r.mechanism in ("post", "in")
+
+
+def test_in_filter_regimes():
+    """Table 1: below s·R_d/p ≤ R false positives are free bridges (cost
+    follows 1/s); above, precision scaling takes over (cost follows 1/p)."""
+    lo = CM.in_filtering_cost(_inputs(s=0.01))      # 0.01*640/0.8 = 8 <= 64
+    lo2 = CM.in_filtering_cost(_inputs(s=0.005))
+    assert lo2.io_pages > lo.io_pages                # 1/s scaling
+
+    hi = CM.in_filtering_cost(_inputs(s=0.5, p_in=0.8))
+    hi2 = CM.in_filtering_cost(_inputs(s=0.5, p_in=0.4))
+    assert hi2.io_pages > hi.io_pages                # 1/p scaling
+    hi3 = CM.in_filtering_cost(_inputs(s=0.9, p_in=0.8))
+    assert abs(hi3.io_pages - hi.io_pages) < 1e-6    # s-independent regime
+
+
+def test_post_filter_matches_table1():
+    c = _inputs(s=0.25)
+    mc = CM.post_filtering_cost(c)
+    assert abs(mc.io_pages - (c.l / c.s) * c.s_r) < 1e-9
+    assert abs(mc.compute - (c.l / c.s) * c.r) < 1e-9
+
+
+def test_alpha_beta_weighting():
+    """Raising the I/O weight must never flip toward a higher-I/O plan."""
+    c = _inputs(s=0.02)
+    r1 = CM.route_query(c, alpha=1.0, beta=1.0)
+    r10 = CM.route_query(c, alpha=100.0, beta=1.0)
+    io1 = r1.costs[r1.mechanism].io_pages
+    io10 = r10.costs[r10.mechanism].io_pages
+    assert io10 <= io1 + 1e-9
+
+
+def test_effective_l_bounded():
+    r = CM.route_query(_inputs(s=1e-6), max_pool=512)
+    assert r.effective_l <= 512

@@ -1,0 +1,157 @@
+"""Multi-device correctness: runs subprocesses with 8 fake CPU devices
+(XLA_FLAGS can't change after jax init, so each scenario is a script)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str, devices: int = 8, timeout: int = 420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={devices}").strip()
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sp_decode_attention_matches_reference():
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_local_mesh
+from repro.serve import sp_attention as SP
+
+mesh = make_local_mesh(1, 8)
+b, t, hq, hkv, dh = 2, 64, 8, 4, 16
+rng = np.random.default_rng(0)
+q = jnp.asarray(rng.normal(0, 1, (b, 1, hq, dh)).astype(np.float32))
+k = jnp.asarray(rng.normal(0, 1, (b, t, hkv, dh)).astype(np.float32))
+v = jnp.asarray(rng.normal(0, 1, (b, t, hkv, dh)).astype(np.float32))
+pos = jnp.asarray(40, jnp.int32)
+
+def body(q, k, v, pos):
+    return SP.sp_decode_attention_local(q, k, v, pos, n_kv=hkv,
+                                        axis_name="model")
+
+f = jax.jit(jax.shard_map(
+    body, mesh=mesh,
+    in_specs=(P(), P(None, "model", None, None), P(None, "model", None, None),
+              P()),
+    out_specs=P(), check_vma=False))
+got = f(q, k, v, pos)
+want = SP.reference_decode_attention(q, k, v, pos, n_kv=hkv)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                           rtol=2e-5, atol=2e-5)
+print("SP-ATTN-OK")
+""")
+
+
+def test_sp_cache_update_owner_only():
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_local_mesh
+from repro.serve import sp_attention as SP
+
+mesh = make_local_mesh(1, 8)
+b, t, hkv, dh = 1, 32, 2, 4
+k_cache = jnp.zeros((b, t, hkv, dh))
+v_cache = jnp.zeros((b, t, hkv, dh))
+k_new = jnp.ones((b, 1, hkv, dh))
+v_new = jnp.full((b, 1, hkv, dh), 2.0)
+pos = jnp.asarray(13, jnp.int32)
+
+def body(kc, vc, kn, vn, pos):
+    return SP.sp_cache_update(kc, vc, kn, vn, pos, axis_name="model")
+
+f = jax.jit(jax.shard_map(
+    body, mesh=mesh,
+    in_specs=(P(None, "model", None, None), P(None, "model", None, None),
+              P(), P(), P()),
+    out_specs=(P(None, "model", None, None), P(None, "model", None, None)),
+    check_vma=False))
+k_out, v_out = f(k_cache, v_cache, k_new, v_new, pos)
+k_np = np.asarray(k_out)
+assert np.all(k_np[0, 13] == 1.0)
+mask = np.ones(t, bool); mask[13] = False
+assert np.all(k_np[0, mask] == 0.0)
+assert np.all(np.asarray(v_out)[0, 13] == 2.0)
+print("SP-CACHE-OK")
+""")
+
+
+def test_distributed_search_matches_local():
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import engine as eng
+from repro.core import distributed as D
+from repro.core import search as S
+from repro.core.selectors import stack_filters
+from repro.data.synth import make_filtered_dataset, make_selectors
+from repro.launch.mesh import make_local_mesh
+
+ds = make_filtered_dataset(n=2048, d=16, n_queries=4, n_labels=30, seed=0)
+cfg = eng.IndexConfig(r=12, r_dense=96, l_build=24, pq_m=8, max_labels=16)
+e = eng.FilteredANNEngine.build(ds.vectors, ds.label_offsets, ds.label_flat,
+                                ds.n_labels, ds.values, cfg)
+sels = make_selectors(ds, e, "label_or")
+plans = [s.plan(cfg.ql, cfg.cap) for s in sels]
+qf = stack_filters([p.qfilter for p in plans])
+queries = jnp.asarray(np.pad(ds.queries, ((0, 0), (0, 0))))
+params = S.SearchParams(l_search=32, k=10, max_hops=128, mode="spec_in")
+
+local = S.filtered_search(e.store, e.codes, e.codebook, e.mem, qf,
+                          queries, e.medoid, params)
+
+mesh = make_local_mesh(2, 4)
+plan = D.ShardPlan(mesh=mesh, shard_axes=("data", "model"))
+store = D.pad_store(e.store, plan.n_shards)
+dist = D.distributed_filtered_search(plan, store, e.codes, e.codebook,
+                                     e.mem, qf, queries, e.medoid, params)
+np.testing.assert_array_equal(np.asarray(local.ids), np.asarray(dist.ids))
+np.testing.assert_allclose(np.asarray(local.dists), np.asarray(dist.dists),
+                           rtol=1e-5)
+np.testing.assert_array_equal(np.asarray(local.io_pages),
+                              np.asarray(dist.io_pages))
+print("DIST-SEARCH-OK")
+""", timeout=600)
+
+
+def test_compressed_psum_matches_mean():
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_local_mesh
+from repro.train import grad_compress as GC
+
+mesh = make_local_mesh(8, 1)
+rng = np.random.default_rng(0)
+grads = {"w": jnp.asarray(rng.normal(0, 1, (8, 64, 40)).astype(np.float32))}
+err = {"w": jnp.zeros((64, 40), jnp.float32)}
+
+def body(g, e):
+    mean, new_e = GC.compressed_psum_grads(
+        {"w": g["w"][0]}, {"w": e["w"]}, "data")
+    return mean, {"w": new_e["w"][None]}     # stack per-device error states
+
+f = jax.jit(jax.shard_map(
+    body, mesh=mesh,
+    in_specs=({"w": P("data", None, None)}, {"w": P()}),
+    out_specs=({"w": P()}, {"w": P("data", None, None)}),
+    check_vma=False))
+mean, new_e = f(grads, err)
+want = np.asarray(grads["w"]).mean(0)
+got = np.asarray(mean["w"])
+# int8-quantized mean within block-scale tolerance
+tol = np.abs(np.asarray(grads["w"])).max() / 127 * 1.5
+assert np.abs(got - want).max() < tol, np.abs(got - want).max()
+# error feedback carries the residual
+assert np.asarray(new_e["w"]).shape == (8, 64, 40)
+print("GC-OK")
+""")

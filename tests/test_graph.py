@@ -1,0 +1,62 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import graph
+
+
+@pytest.fixture(scope="module")
+def built():
+    rng = np.random.default_rng(0)
+    data = rng.normal(0, 1, (1500, 24)).astype(np.float32)
+    adj, medoid = graph.build_vamana(data, r=24, ell=40, alpha=1.2, seed=0)
+    return data, adj, medoid
+
+
+def test_adjacency_valid(built):
+    data, adj, medoid = built
+    n, r = adj.shape
+    assert r == 24
+    valid = adj >= 0
+    assert np.all(adj[valid] < n)
+    # no self loops
+    self_loop = adj == np.arange(n)[:, None]
+    assert not np.any(self_loop)
+    stats = graph.graph_stats(adj)
+    assert stats["avg_degree"] > 4
+
+
+def test_unfiltered_search_recall(built):
+    """Greedy search over the built graph must find near-exact neighbors."""
+    data, adj, medoid = built
+    rng = np.random.default_rng(1)
+    queries = data[rng.integers(0, len(data), 20)] + \
+        rng.normal(0, 0.01, (20, data.shape[1])).astype(np.float32)
+    ids, dists = graph.greedy_search(jnp.asarray(data), jnp.asarray(adj),
+                                     medoid, jnp.asarray(queries),
+                                     ell=40, max_hops=200)
+    ids = np.asarray(ids)
+    recalls = []
+    for i, q in enumerate(queries):
+        exact = np.argsort(np.sum((data - q[None]) ** 2, 1))[:10]
+        got = set(ids[i, :10].tolist())
+        recalls.append(len(got & set(exact.tolist())) / 10)
+    assert np.mean(recalls) >= 0.9, f"mean recall {np.mean(recalls)}"
+
+
+def test_densify_2hop(built):
+    data, adj, medoid = built
+    dense = graph.densify_2hop(adj, r_dense=200, seed=3)
+    assert dense.shape == (len(data), 200)
+    valid = dense >= 0
+    assert valid.mean() > 0.5
+    # 2-hop entries must actually be reachable in <= 2 hops
+    n_check = 50
+    rng = np.random.default_rng(0)
+    for i in rng.integers(0, len(data), n_check):
+        one_hop = set(adj[i][adj[i] >= 0].tolist())
+        two_hop = set()
+        for j in one_hop:
+            two_hop |= set(adj[j][adj[j] >= 0].tolist())
+        cand = set(dense[i][dense[i] >= 0].tolist())
+        assert cand <= (one_hop | two_hop | {int(i)})

@@ -1,0 +1,125 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.pq_scan import pq_scan
+from repro.kernels.approx_probe import approx_probe
+from repro.kernels.l2_rerank import l2_rerank
+
+
+# ---------------------------------------------------------------------------
+# pq_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 5, 128, 700, 1024])
+@pytest.mark.parametrize("m,k", [(8, 256), (16, 256), (32, 16)])
+@pytest.mark.parametrize("codes_dtype", [jnp.uint8, jnp.int32])
+def test_pq_scan_matches_ref(n, m, k, codes_dtype):
+    rng = np.random.default_rng(n * m + k)
+    codes = jnp.asarray(rng.integers(0, k, (n, m)), dtype=codes_dtype)
+    table = jnp.asarray(rng.normal(0, 1, (m, k)).astype(np.float32))
+    got = pq_scan(codes, table, interpret=True, tile_n=256)
+    want = ref.pq_scan_ref(codes, table)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_pq_scan_tile_invariance():
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 256, (1000, 16)), dtype=jnp.uint8)
+    table = jnp.asarray(rng.normal(0, 1, (16, 256)).astype(np.float32))
+    a = pq_scan(codes, table, interpret=True, tile_n=128)
+    b = pq_scan(codes, table, interpret=True, tile_n=512)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# approx_probe
+# ---------------------------------------------------------------------------
+
+def _rand_probe_inputs(rng, n, ql=8):
+    blooms = jnp.asarray(rng.integers(0, 2 ** 31, n, dtype=np.int64)
+                         .astype(np.uint32))
+    buckets = jnp.asarray(rng.integers(0, 256, n).astype(np.uint8))
+    or_masks = jnp.asarray(rng.integers(0, 2 ** 16, ql).astype(np.uint32))
+    params = jnp.asarray(np.array([
+        int(rng.integers(0, 2 ** 16)),   # and_mask
+        ql,                               # n_or_masks
+        int(rng.integers(0, 128)),        # lo
+        int(rng.integers(128, 256)),      # hi
+        int(rng.integers(0, 3)),          # label_mode
+        int(rng.integers(0, 2)),          # range_on
+        int(rng.integers(0, 2)),          # combine
+        0], np.int32))
+    return blooms, buckets, or_masks, params
+
+
+@pytest.mark.parametrize("n", [1, 64, 999, 2048])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_approx_probe_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    blooms, buckets, or_masks, params = _rand_probe_inputs(rng, n)
+    got = approx_probe(blooms, buckets, or_masks, params,
+                       interpret=True, tile_n=256)
+    want = ref.approx_probe_ref(blooms, buckets, or_masks, params)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_approx_probe_all_mode_combos():
+    rng = np.random.default_rng(7)
+    n = 333
+    blooms = jnp.asarray(rng.integers(0, 2 ** 31, n, dtype=np.int64)
+                         .astype(np.uint32))
+    buckets = jnp.asarray(rng.integers(0, 256, n).astype(np.uint8))
+    or_masks = jnp.asarray(rng.integers(0, 2 ** 12, 8).astype(np.uint32))
+    for label_mode in (0, 1, 2):
+        for range_on in (0, 1):
+            for combine in (0, 1):
+                params = jnp.asarray(np.array(
+                    [0b1010, 8, 50, 200, label_mode, range_on, combine, 0],
+                    np.int32))
+                got = approx_probe(blooms, buckets, or_masks, params,
+                                   interpret=True, tile_n=128)
+                want = ref.approx_probe_ref(blooms, buckets, or_masks, params)
+                np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# l2_rerank
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,d", [(1, 8), (17, 64), (300, 128), (256, 48)])
+def test_l2_rerank_matches_ref(b, d):
+    rng = np.random.default_rng(b * d)
+    vecs = jnp.asarray(rng.normal(0, 1, (b, d)).astype(np.float32))
+    q = jnp.asarray(rng.normal(0, 1, d).astype(np.float32))
+    got = l2_rerank(vecs, q, interpret=True, tile_b=64)
+    want = ref.l2_rerank_ref(vecs, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# oracles agree with the production (core) implementations
+# ---------------------------------------------------------------------------
+
+def test_refs_match_core_pq():
+    from repro.core import pq as core_pq
+    rng = np.random.default_rng(3)
+    codes = jnp.asarray(rng.integers(0, 256, (500, 8)), dtype=jnp.uint8)
+    table = jnp.asarray(rng.normal(0, 1, (8, 256)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(ref.pq_scan_ref(codes, table)),
+        np.asarray(core_pq.adc_lookup(codes, table)), rtol=1e-6)
+
+
+def test_ops_dispatch_cpu():
+    rng = np.random.default_rng(4)
+    codes = jnp.asarray(rng.integers(0, 256, (100, 8)), dtype=jnp.uint8)
+    table = jnp.asarray(rng.normal(0, 1, (8, 256)).astype(np.float32))
+    got = ops.pq_scan(codes, table)            # CPU -> XLA reference path
+    want = ops.pq_scan_interpret(codes, table) # Pallas interpret path
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)

@@ -1,0 +1,81 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import optim
+
+
+def _toy_params(key):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (32, 48)),
+            "b": jnp.zeros((48,)),
+            "nested": {"u": jax.random.normal(k2, (17, 5))}}
+
+
+def _quad_loss(params, x):
+    y = jnp.tanh(x @ params["w"]) + params["b"]
+    z = y[:, :5] @ params["nested"]["u"].T
+    return jnp.mean(z ** 2)
+
+
+@pytest.mark.parametrize("int8", [False, True])
+def test_adamw_converges(int8):
+    cfg = optim.OptConfig(lr=3e-2, warmup_steps=5, total_steps=200,
+                          weight_decay=0.0, int8_moments=int8)
+    params = _toy_params(jax.random.PRNGKey(0))
+    state = optim.init_opt_state(params, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+
+    @jax.jit
+    def step(params, state):
+        loss, grads = jax.value_and_grad(_quad_loss)(params, x)
+        params, state, m = optim.adamw_update(grads, params, state, cfg)
+        return params, state, loss
+
+    losses = []
+    for _ in range(100):
+        params, state, loss = step(params, state)
+        losses.append(float(loss))
+    assert losses[-1] < 0.2 * losses[0], (losses[0], losses[-1])
+
+
+def test_q8_roundtrip_accuracy():
+    rng = np.random.default_rng(0)
+    for shape in [(128,), (7, 130), (3, 4, 257), (100,)]:
+        x = jnp.asarray(rng.normal(0, 2.0, shape).astype(np.float32))
+        q = optim.q8_quantize(x)
+        back = optim.q8_dequantize(q)
+        assert back.shape == x.shape
+        err = np.abs(np.asarray(back) - np.asarray(x))
+        tol = np.abs(np.asarray(x)).max() / 127 * 1.01
+        assert err.max() <= tol + 1e-6
+
+
+def test_q8_preserves_leading_shape():
+    x = jnp.ones((5, 6, 200))
+    q = optim.q8_quantize(x)
+    assert q.q.shape[:2] == (5, 6)
+    assert q.q.shape[-1] % optim.QBLOCK == 0
+    assert q.scale.shape == (5, 6, q.q.shape[-1] // optim.QBLOCK)
+
+
+def test_grad_clip():
+    cfg = optim.OptConfig(lr=1e-3, clip_norm=1.0)
+    params = {"w": jnp.zeros((4,))}
+    state = optim.init_opt_state(params, cfg)
+    grads = {"w": jnp.full((4,), 100.0)}
+    new_params, state, metrics = optim.adamw_update(grads, params, state, cfg)
+    assert float(metrics["grad_norm"]) > 1.0
+    # post-clip effective step is bounded by ~lr
+    assert np.all(np.abs(np.asarray(new_params["w"])) < 2 * cfg.lr)
+
+
+def test_lr_schedule_shape():
+    cfg = optim.OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+    lrs = [float(optim.lr_at(jnp.asarray(s), cfg)) for s in range(0, 100, 5)]
+    assert lrs[0] < 0.2                      # warmup starts low
+    assert max(lrs) <= 1.0 + 1e-6
+    assert lrs[-1] < 0.35                    # decays toward min_lr_frac
+    assert abs(lrs[2] - 1.0) < 0.1           # peak after warmup

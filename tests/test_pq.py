@@ -1,0 +1,52 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pq
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    return rng.normal(0, 1, (2000, 32)).astype(np.float32)
+
+
+def test_train_encode_shapes(data):
+    cb = pq.train_pq(jax.random.PRNGKey(0), jnp.asarray(data), m=8)
+    assert cb.centroids.shape == (8, 256, 4)
+    codes = pq.encode_pq(cb, jnp.asarray(data))
+    assert codes.shape == (2000, 8)
+    assert codes.dtype == jnp.uint8
+
+
+def test_reconstruction_reduces_error(data):
+    cb = pq.train_pq(jax.random.PRNGKey(0), jnp.asarray(data), m=8, iters=10)
+    codes = pq.encode_pq(cb, jnp.asarray(data))
+    recon = np.asarray(pq.decode_pq(cb, codes))
+    err = np.mean(np.sum((recon - data) ** 2, 1))
+    base = np.mean(np.sum(data ** 2, 1))
+    assert err < 0.7 * base  # quantization must beat the zero predictor
+
+
+def test_adc_matches_reconstructed_distance(data):
+    cb = pq.train_pq(jax.random.PRNGKey(0), jnp.asarray(data), m=8)
+    codes = pq.encode_pq(cb, jnp.asarray(data))
+    q = data[0]
+    table = pq.distance_table(cb, jnp.asarray(q))
+    adc = np.asarray(pq.adc_lookup(codes, table))
+    recon = np.asarray(pq.decode_pq(cb, codes))
+    exact = np.sum((recon - q[None, :]) ** 2, 1)
+    np.testing.assert_allclose(adc, exact, rtol=1e-4, atol=1e-3)
+
+
+def test_adc_ranks_near_neighbors_first(data):
+    cb = pq.train_pq(jax.random.PRNGKey(1), jnp.asarray(data), m=8, iters=10)
+    codes = pq.encode_pq(cb, jnp.asarray(data))
+    q = data[123] + 0.01
+    table = pq.distance_table(cb, jnp.asarray(q))
+    adc = np.asarray(pq.adc_lookup(codes, table))
+    exact = np.sum((data - q[None, :]) ** 2, 1)
+    top_adc = set(np.argsort(adc)[:50].tolist())
+    top_exact = set(np.argsort(exact)[:10].tolist())
+    assert len(top_adc & top_exact) >= 5  # coarse agreement

@@ -1,0 +1,99 @@
+"""Hypothesis property tests for the system's core invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bloom, pq
+from repro.core.labels import build_label_store
+from repro.core.ranges import build_range_store
+from repro.core import selectors as S
+from repro.core import cost_model as CM
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 30), min_size=0, max_size=6),
+                min_size=3, max_size=40),
+       st.lists(st.integers(0, 30), min_size=1, max_size=3))
+def test_bloom_never_false_negative(vec_labels, query_labels):
+    """INVARIANT (paper §3): is_member_approx has no false negatives."""
+    counts = np.array([len(v) for v in vec_labels])
+    offsets = np.zeros(len(vec_labels) + 1, np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    flat = np.array([l for v in vec_labels for l in v], np.int32)
+    store = build_label_store(offsets, flat, n_labels=31)
+    for v, labels in enumerate(vec_labels):
+        mine = set(labels)
+        if set(query_labels) <= mine:        # AND-query true member
+            req = bloom.label_bits(np.array(query_labels, np.int64),
+                                   store.k_hashes)
+            mask = np.uint32(0)
+            for m in req:
+                mask |= m
+            assert bool(bloom.bloom_pass(
+                jnp.asarray(store.blooms[v:v + 1]), mask)[0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=8,
+                max_size=200),
+       st.floats(-1e4, 1e4, allow_nan=False),
+       st.floats(0.01, 1e4, allow_nan=False))
+def test_range_bucket_superset(values, lo, width):
+    """INVARIANT: bucket-code approx check is a superset of the true range."""
+    rs = build_range_store(np.array(values, np.float32))
+    hi = lo + width
+    blo, bhi = rs.bucket_range(lo, hi)
+    codes = rs.bucket_codes.astype(int)
+    approx = (codes >= blo) & (codes <= bhi)
+    truth = (rs.values >= lo) & (rs.values < hi)
+    assert np.all(approx[truth]), "false negative in bucket approx"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 400), st.integers(1, 8))
+def test_pq_adc_is_exact_for_codebook_points(n, m):
+    """ADC distance of an encoded centroid to itself decomposes exactly."""
+    rng = np.random.default_rng(n * 13 + m)
+    d = m * 4
+    data = rng.normal(0, 1, (max(n, 4), d)).astype(np.float32)
+    import jax
+    cb = pq.train_pq(jax.random.PRNGKey(0), jnp.asarray(data), m=m, iters=2)
+    codes = pq.encode_pq(cb, jnp.asarray(data))
+    recon = np.asarray(pq.decode_pq(cb, codes))
+    q = data[0]
+    table = pq.distance_table(cb, jnp.asarray(q))
+    adc = np.asarray(pq.adc_lookup(codes, table))
+    exact = np.sum((recon - q[None]) ** 2, axis=1)
+    np.testing.assert_allclose(adc, exact, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1e-6, 1.0), st.floats(1e-3, 1.0), st.floats(1e-3, 1.0),
+       st.integers(8, 256))
+def test_cost_model_unifies_extremes(s, p_pre, p_in, l):
+    """Paper §3: strict filtering and post-filtering are the two extremes of
+    speculative filtering; costs must be finite, positive, and post-filter
+    I/O must scale 1/s."""
+    c = CM.CostInputs(n=1_000_000, l=l, s=s, p_pre=p_pre, p_in=p_in,
+                      x_pre=10, x_in=5, r=64, r_d=640, s_r=1, s_d=2)
+    for mech in (CM.pre_filtering_cost, CM.in_filtering_cost,
+                 CM.post_filtering_cost):
+        mc = mech(c)
+        assert np.isfinite(mc.io_pages) and mc.io_pages > 0
+        assert np.isfinite(mc.compute) and mc.compute > 0
+    post = CM.post_filtering_cost(c)
+    post_half = CM.post_filtering_cost(
+        CM.CostInputs(**{**c.__dict__, "s": s / 2}))
+    assert post_half.io_pages >= post.io_pages
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 5))
+def test_q8_roundtrip_bounded_error(rows, cols_blocks):
+    from repro.train import optim
+    rng = np.random.default_rng(rows)
+    x = jnp.asarray(rng.normal(0, 3, (rows, cols_blocks * 37))
+                    .astype(np.float32))
+    back = optim.q8_dequantize(optim.q8_quantize(x))
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert err.max() <= np.abs(np.asarray(x)).max() / 127 + 1e-6

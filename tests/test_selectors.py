@@ -1,0 +1,123 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.labels import build_label_store, padded_vec_labels
+from repro.core.ranges import build_range_store
+from repro.core import selectors as S
+
+
+@pytest.fixture(scope="module")
+def stores():
+    rng = np.random.default_rng(0)
+    n, n_labels = 800, 20
+    counts = rng.integers(1, 5, n)
+    flat = rng.integers(0, n_labels, counts.sum()).astype(np.int32)
+    offsets = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    ls = build_label_store(offsets, flat, n_labels)
+    values = rng.uniform(0, 100, n).astype(np.float32)
+    rs = build_range_store(values)
+    mem = S.InMemory(blooms=jnp.asarray(ls.blooms),
+                     bucket_codes=jnp.asarray(rs.bucket_codes))
+    rec_labels = jnp.asarray(padded_vec_labels(ls, 8))
+    rec_values = jnp.asarray(values)
+    return ls, rs, mem, rec_labels, rec_values
+
+
+def _exact_label_or(ls, labels, vec):
+    mine = set(ls.labels_of(vec).tolist())
+    return bool(mine & set(labels))
+
+
+def _exact_label_and(ls, labels, vec):
+    mine = set(ls.labels_of(vec).tolist())
+    return set(labels) <= mine
+
+
+def test_label_or_no_false_negatives(stores):
+    ls, rs, mem, rec_labels, rec_values = stores
+    sel = S.LabelOrSelector(ls, [3, 7])
+    plan = sel.plan(ql=8, cap=2048)
+    ids = jnp.arange(ls.n_vectors)
+    approx = np.asarray(S.is_member_approx(plan.qfilter, ids, mem))
+    exact = np.asarray(S.is_member(plan.qfilter, rec_labels, rec_values))
+    for v in range(ls.n_vectors):
+        truth = _exact_label_or(ls, [3, 7], v)
+        assert exact[v] == truth
+        if truth:
+            assert approx[v], f"false negative at {v}"
+
+
+def test_label_and_no_false_negatives(stores):
+    ls, rs, mem, rec_labels, rec_values = stores
+    sel = S.LabelAndSelector(ls, [1, 2])
+    plan = sel.plan(ql=8, cap=2048)
+    ids = jnp.arange(ls.n_vectors)
+    approx = np.asarray(S.is_member_approx(plan.qfilter, ids, mem))
+    exact = np.asarray(S.is_member(plan.qfilter, rec_labels, rec_values))
+    for v in range(ls.n_vectors):
+        truth = _exact_label_and(ls, [1, 2], v)
+        assert exact[v] == truth
+        if truth:
+            assert approx[v]
+
+
+def test_range_no_false_negatives(stores):
+    ls, rs, mem, rec_labels, rec_values = stores
+    sel = S.RangeSelector(rs, 20.0, 40.0)
+    plan = sel.plan(ql=8, cap=2048)
+    ids = jnp.arange(rs.n_vectors)
+    approx = np.asarray(S.is_member_approx(plan.qfilter, ids, mem))
+    exact = np.asarray(S.is_member(plan.qfilter, rec_labels, rec_values))
+    vals = np.asarray(rec_values)
+    truth = (vals >= 20.0) & (vals < 40.0)
+    np.testing.assert_array_equal(exact, truth)
+    assert np.all(approx[truth])
+    # approx must be a reasonably tight superset (bucket granularity)
+    assert approx.sum() <= truth.sum() + 2 * (rs.n_vectors / 256) + 16
+
+
+def test_selectivity_estimates(stores):
+    ls, rs, *_ = stores
+    sel = S.RangeSelector(rs, 20.0, 40.0)
+    est = sel.selectivity()
+    actual = float(np.mean((rs.values >= 20) & (rs.values < 40)))
+    assert abs(est - actual) < 0.05
+
+    lsel = S.LabelOrSelector(ls, [0, 1])
+    actual_l = np.mean([_exact_label_or(ls, [0, 1], v)
+                        for v in range(ls.n_vectors)])
+    assert abs(lsel.selectivity() - actual_l) < 0.12
+
+
+def test_combinators(stores):
+    ls, rs, mem, rec_labels, rec_values = stores
+    for comb, op in ((S.AndSelector, np.logical_and),
+                     (S.OrSelector, np.logical_or)):
+        sel = comb([S.LabelOrSelector(ls, [3]), S.RangeSelector(rs, 10., 60.)])
+        plan = sel.plan(ql=8, cap=2048)
+        exact = np.asarray(S.is_member(plan.qfilter, rec_labels, rec_values))
+        lab = np.array([_exact_label_or(ls, [3], v)
+                        for v in range(ls.n_vectors)])
+        vals = np.asarray(rec_values)
+        rng_ok = (vals >= 10) & (vals < 60)
+        np.testing.assert_array_equal(exact, op(lab, rng_ok))
+        approx = np.asarray(S.is_member_approx(
+            plan.qfilter, jnp.arange(ls.n_vectors), mem))
+        assert np.all(approx[op(lab, rng_ok)])   # no false negatives
+
+
+def test_prefilter_supersets(stores):
+    ls, rs, *_ = stores
+    sel = S.LabelAndSelector(ls, [0, 1])
+    ids, pages = sel.pre_filter_approx()
+    assert pages >= 1
+    truth = {v for v in range(ls.n_vectors) if _exact_label_and(ls, [0, 1], v)}
+    assert truth <= set(ids.tolist())   # superset guarantee
+
+    rsel = S.RangeSelector(rs, 20.0, 40.0)
+    ids, pages = rsel.pre_filter_approx()
+    vals = rs.values
+    truth_r = set(np.where((vals >= 20) & (vals < 40))[0].tolist())
+    assert truth_r == set(ids.tolist())   # range scan is exact
