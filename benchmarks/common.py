@@ -1,4 +1,4 @@
-"""Shared benchmark fixtures: dataset + engine build (cached), SSD model.
+"""Shared benchmark fixtures: dataset + index build (cached), SSD model.
 
 The container is CPU-only, so the paper's latency/throughput numbers are
 reproduced through (a) exact algorithmic counters (pages, hops, distance
@@ -6,6 +6,11 @@ comps — hardware-independent) and (b) a parameterized SSD model applied to
 them (Samsung PM9A3-class: ~100 µs 4 KB random read incl. queueing,
 ~800 K IOPS, 56 worker threads like the paper's testbed). Measured CPU time
 per query bounds the compute side.
+
+Benchmarks drive the engine through the ``repro.api`` request path
+(``Index.search_batch`` with per-request policy/L overrides); the returned
+``Index`` duck-types the old engine handle (label_store/range_store/store/
+config pass through), so workload generators keep working unchanged.
 """
 from __future__ import annotations
 
@@ -13,9 +18,9 @@ import dataclasses
 import functools
 import time
 
-import jax
 import numpy as np
 
+from repro.api import Index, SearchRequest
 from repro.core import engine as eng
 from repro.data.synth import make_filtered_dataset, make_selectors
 
@@ -38,16 +43,16 @@ class BenchResult:
 
 @functools.lru_cache(maxsize=2)
 def get_engine(n: int = 12000, seed: int = 0):
+    """Build the benchmark index (cached). Returns (ds, Index, build_s)."""
     ds = make_filtered_dataset(n=n, d=48, n_queries=32, n_labels=120,
                                avg_labels=4.0, seed=seed)
     cfg = eng.IndexConfig(r=24, r_dense=360, l_build=48, pq_m=8,
                           max_labels=16, ql=8, cap=4096)
     t0 = time.time()
-    e = eng.FilteredANNEngine.build(ds.vectors, ds.label_offsets,
-                                    ds.label_flat, ds.n_labels, ds.values,
-                                    cfg)
+    index = Index.build(ds.vectors, ds.metadata(), cfg,
+                        defaults=eng.SearchConfig(max_pool=1024))
     build_s = time.time() - t0
-    return ds, e, build_s
+    return ds, index, build_s
 
 
 def modeled_latency_us(mechanism: str, hops: float, io_pages: float,
@@ -71,29 +76,23 @@ def modeled_qps(io_pages_per_query: float, cpu_us_per_query: float) -> float:
     return min(qps_io, qps_cpu)
 
 
-def run_policy(ds, e, selectors, policy: str, l: int, k: int = 10,
+def run_policy(ds, index: Index, selectors, policy: str, l: int, k: int = 10,
                max_hops: int = 400):
-    """Execute one policy; returns (recall, io/query, hops/query, cpu_us)."""
-    scfg = eng.SearchConfig(k=k, l=l, max_hops=max_hops, policy=policy,
-                            max_pool=1024)
-    # warm up compile
-    e.search(ds.queries[:2], selectors[:2], scfg)
+    """Execute one policy through the api request path; returns aggregates."""
+    requests = [SearchRequest(query=ds.queries[i], filter=sel, k=k, l=l,
+                              policy=policy, max_hops=max_hops)
+                for i, sel in enumerate(selectors)]
+    # warm up compile; skip host-side metadata resolution in the timed
+    # region so cpu_us measures only the engine path
+    index.search_batch(requests[:2], with_metadata=False)
     t0 = time.time()
-    ids, dists, stats = e.search(ds.queries[:len(selectors)], selectors, scfg)
+    results, stats = index.search_batch(requests, with_stats=True,
+                                        with_metadata=False)
     wall = time.time() - t0
-    # ground truth
-    import jax.numpy as jnp
     recalls = []
-    vecs = np.asarray(e.store.vectors)
-    rl = np.asarray(e.store.rec_labels)
-    rv = np.asarray(e.store.rec_values)
-    for i, sel in enumerate(selectors):
-        plan = sel.plan(e.config.ql, e.config.cap)
-        q = ds.queries[i]
-        if q.shape[0] != vecs.shape[1]:
-            q = np.pad(q, (0, vecs.shape[1] - q.shape[0]))
-        gt = eng.brute_force_filtered(vecs, rl, rv, plan.qfilter, q, k)
-        recalls.append(eng.recall_at_k(ids[i], gt, k))
+    for req, res in zip(requests, results):
+        gt = index.ground_truth(req)
+        recalls.append(eng.recall_at_k(res.ids, gt, k))
     nq = len(selectors)
     return {
         "recall": float(np.mean(recalls)),
@@ -103,4 +102,5 @@ def run_policy(ds, e, selectors, policy: str, l: int, k: int = 10,
         "mech_counts": {m: stats.mechanism.count(m)
                         for m in set(stats.mechanism)},
         "stats": stats,
+        "results": results,
     }

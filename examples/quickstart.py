@@ -1,53 +1,53 @@
-"""Quickstart: build a filtered vector index and run the paper's three
-mechanisms on it.
+"""Quickstart: build a filtered vector index from plain metadata dicts and
+query it through the declarative ``repro.api`` surface.
+
+The index is built from per-record metadata (no CSR arrays, no Selector
+subclasses); filters are `Tag`/`Num` expressions compiled onto the
+paper's three mechanisms, routed per query by the cost model.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (FilteredANNEngine, IndexConfig, LabelOrSelector,
-                        RangeSelector, SearchConfig, brute_force_filtered,
-                        recall_at_k)
+from repro.api import (Index, IndexConfig, Num, SearchConfig, SearchRequest,
+                       Tag, recall_at_k)
 from repro.data.synth import make_filtered_dataset
 
 
 def main():
     print("== PipeANN-Filter quickstart ==")
     ds = make_filtered_dataset(n=4000, d=32, n_queries=8, n_labels=50, seed=1)
-    engine = FilteredANNEngine.build(
-        ds.vectors, ds.label_offsets, ds.label_flat, ds.n_labels, ds.values,
-        IndexConfig(r=20, r_dense=200, l_build=40, pq_m=8))
-    print(f"built index: N={engine.store.n} R={engine.store.degree} "
-          f"R_d={engine.store.dense_degree} "
-          f"pages/record std={engine.store.pages_std} "
-          f"dense={engine.store.pages_dense}")
 
-    # one label query + one range query per vector batch
-    selectors = []
+    # plain per-record metadata dicts: topic tags + a freshness value
+    metadata = ds.metadata(tag_field="topic", num_field="freshness")
+    index = Index.build(ds.vectors, metadata,
+                        IndexConfig(r=20, r_dense=200, l_build=40, pq_m=8),
+                        defaults=SearchConfig(k=10, l=32))
+    e = index.engine
+    print(f"built index: N={len(index)} R={e.store.degree} "
+          f"R_d={e.store.dense_degree} "
+          f"pages/record std={e.store.pages_std} "
+          f"dense={e.store.pages_dense}")
+
+    # one tag filter + one range filter per query, alternating
+    requests = []
     for i in range(8):
         if i % 2 == 0:
-            selectors.append(LabelOrSelector(engine.label_store,
-                                             ds.query_labels[i][:1]))
+            f = Tag("topic") == int(ds.query_labels[i][0])
         else:
             lo, hi = ds.query_ranges[i]
-            selectors.append(RangeSelector(engine.range_store,
-                                           float(lo), float(hi)))
+            f = Num("freshness").between(float(lo), float(hi))
+        requests.append(SearchRequest(query=ds.queries[i], filter=f))
 
-    ids, dists, stats = engine.search(ds.queries, selectors,
-                                      SearchConfig(k=10, l=32))
-    vecs = np.asarray(engine.store.vectors)
-    rl = np.asarray(engine.store.rec_labels)
-    rv = np.asarray(engine.store.rec_values)
-    for i, sel in enumerate(selectors):
-        plan = sel.plan(engine.config.ql, engine.config.cap)
-        q = np.pad(ds.queries[i], (0, vecs.shape[1] - ds.queries.shape[1]))
-        gt = brute_force_filtered(vecs, rl, rv, plan.qfilter, q, 10)
-        r = recall_at_k(ids[i], gt, 10)
-        print(f"query {i}: mech={stats.mechanism[i]:4s} "
-              f"sel={stats.selectivity[i]:.4f} io={stats.io_pages[i]:4d} "
+    results = index.search_batch(requests)
+    for i, (req, res) in enumerate(zip(requests, results)):
+        gt = index.ground_truth(req)
+        r = recall_at_k(res.ids, gt, 10)
+        print(f"query {i}: mech={res.stats.mechanism:4s} "
+              f"sel={res.stats.selectivity:.4f} io={res.stats.io_pages:4d} "
               f"recall@10={r:.2f}")
-    print("routes:", {m: stats.mechanism.count(m)
-                      for m in set(stats.mechanism)})
+    mechs = [r.stats.mechanism for r in results]
+    print("routes:", {m: mechs.count(m) for m in set(mechs)})
 
 
 if __name__ == "__main__":

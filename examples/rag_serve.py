@@ -1,10 +1,12 @@
 """RAG-style serving: filtered vector retrieval (the paper's engine) feeding
 a decoder-only LM — the integration path of DESIGN.md §4.
 
-A corpus of synthetic "documents" is embedded (stub projector), indexed with
-attributes (topic labels + a freshness value); each request runs a filtered
-top-k search (e.g. "topic X AND published in range") and the retrieved
-motifs are prepended to the prompt before generation.
+A corpus of synthetic "documents" is embedded (stub projector) and indexed
+through the ``repro.api`` facade from plain metadata dicts (topic label +
+freshness value). Requests are admitted one at a time to a batched
+retrieval frontend (``serve.retrieval``): the session groups them across
+callers and flushes once, so all four retrievals share one grouped engine
+call before generation.
 
     PYTHONPATH=src python examples/rag_serve.py
 """
@@ -14,11 +16,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import IndexConfig, Num, SearchConfig, Index, Tag
+from repro.api.session import SessionConfig
 from repro.configs import smoke_config
-from repro.core import (AndSelector, FilteredANNEngine, IndexConfig,
-                        LabelOrSelector, RangeSelector, SearchConfig)
 from repro.models import lm
 from repro.serve.decode import generate
+from repro.serve.retrieval import RetrievalFrontend
 
 
 def embed_docs(docs: np.ndarray, d_embed: int, seed: int = 0) -> np.ndarray:
@@ -39,12 +42,13 @@ def main():
     topics = rng.integers(0, 20, n_docs)                 # one topic label
     freshness = rng.uniform(0, 100, n_docs).astype(np.float32)
 
-    # index the corpus with attributes
+    # index the corpus from plain metadata dicts
     embeds = embed_docs(docs, d_embed=32)
-    offsets = np.arange(n_docs + 1, dtype=np.int64)
-    engine = FilteredANNEngine.build(
-        embeds, offsets, topics.astype(np.int32), 20, freshness,
-        IndexConfig(r=16, r_dense=160, l_build=32, pq_m=8))
+    metadata = [{"topic": int(t), "freshness": float(f)}
+                for t, f in zip(topics, freshness)]
+    index = Index.build(embeds, metadata,
+                        IndexConfig(r=16, r_dense=160, l_build=32, pq_m=8),
+                        defaults=SearchConfig(k=4, l=24))
     print(f"indexed {n_docs} docs")
 
     # a tiny LM as the generator
@@ -52,25 +56,34 @@ def main():
     cfg = dataclasses.replace(cfg, vocab=vocab)
     params = lm.init_lm(cfg, jax.random.PRNGKey(0))
 
-    # serve a batch of filtered retrieve->generate requests
+    # serve a batch of filtered retrieve->generate requests: admit all four
+    # to the frontend, then flush once — one grouped engine call
+    frontend = RetrievalFrontend(
+        index, SessionConfig(max_batch=8, max_delay_s=10.0))
     queries = embed_docs(docs[rng.integers(0, n_docs, 4)], 32, seed=1)
-    for i in range(4):
-        topic = int(rng.integers(0, 20))
-        sel = AndSelector([
-            LabelOrSelector(engine.label_store, [topic]),
-            RangeSelector(engine.range_store, 25.0, 90.0)])
-        ids, dists, stats = engine.search(
-            queries[i:i + 1], [sel], SearchConfig(k=4, l=24))
-        hit_ids = [int(x) for x in ids[0] if x >= 0]
-        # verify the filter held
-        assert all(topics[h] == topic and 25 <= freshness[h] < 90
-                   for h in hit_ids)
-        context = np.concatenate([docs[h][:8] for h in hit_ids]) \
-            if hit_ids else np.zeros(8, np.int64)
-        prompt = np.concatenate([context, docs[0][:8]])[None, :].astype(np.int32)
+    req_topics = [int(rng.integers(0, 20)) for _ in range(4)]
+    handles = [
+        frontend.submit(queries[i],
+                        (Tag("topic") == t) &
+                        Num("freshness").between(25.0, 90.0))
+        for i, t in enumerate(req_topics)]
+    n = frontend.flush()
+    print(f"flushed {n} requests in {frontend.session.n_batches} batch")
+
+    for i, (topic, h) in enumerate(zip(req_topics, handles)):
+        res = h.result()
+        # verify the filter held against the source arrays (ground truth,
+        # independent of the index's own metadata resolution)
+        assert all(topics[j] == topic and 25 <= freshness[j] < 90
+                   for j, _, _ in res.matches)
+        assert all(m["topic"] == topic for _, _, m in res.matches)
+        context = RetrievalFrontend.context_tokens(res, docs, per_doc=8)
+        prompt = np.concatenate([context, docs[0][:8]])[None, :] \
+            .astype(np.int32)
         out = generate(params, cfg, jnp.asarray(prompt), n_new=8)
-        print(f"req {i}: topic={topic} mech={stats.mechanism[0]} "
-              f"retrieved={hit_ids} io={int(stats.io_pages[0])} "
+        hit_ids = [j for j, _, _ in res.matches]
+        print(f"req {i}: topic={topic} mech={res.stats.mechanism} "
+              f"retrieved={hit_ids} io={res.stats.io_pages} "
               f"generated={np.asarray(out)[0].tolist()}")
     print("all retrievals satisfied their attribute constraints")
 

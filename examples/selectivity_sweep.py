@@ -5,7 +5,7 @@ routes queries as selectivity moves from 0.1% to 50%.
 """
 import numpy as np
 
-from repro.core import RangeSelector, SearchConfig
+from repro.api import Num
 from benchmarks.common import get_engine, modeled_qps, run_policy
 
 
@@ -19,8 +19,8 @@ def main():
     for frac in (0.001, 0.005, 0.02, 0.1, 0.3, 0.5):
         lo = int(0.2 * n)
         hi = min(n - 1, lo + max(1, int(frac * n)))
-        sels = [RangeSelector(e.range_store, float(values[lo]),
-                              float(values[hi])) for _ in range(8)]
+        sels = [Num("value").between(float(values[lo]), float(values[hi]))
+                for _ in range(8)]
         r = run_policy(ds, e, sels, "speculative", l=32)
         route = max(r["mech_counts"], key=r["mech_counts"].get)
         qps = modeled_qps(r["io_pages"], r["cpu_us"])

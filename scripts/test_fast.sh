@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Inner-loop test run: only tests marked `fast`, skipping the
+# Vamana-build-heavy suites. The tier-1 gate stays the full
+# `PYTHONPATH=src python -m pytest -x -q`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -q -m fast "$@"

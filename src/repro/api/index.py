@@ -1,0 +1,353 @@
+"""``Index`` — the public facade over the filtered-ANN engine.
+
+Callers hand over vectors plus one plain metadata dict per record;
+the facade owns the tag vocabulary, CSR label arrays, attribute stores,
+and the engine build. Categorical values (str/int/bool, or lists thereof)
+become labels in a per-field namespace; at most one float field becomes
+the numeric range attribute.
+
+The facade is also the DSL compiler's catalog: ``Tag``/``Num`` expressions
+resolve against its vocabulary, and results come back with metadata
+re-resolved from the attribute stores (so ``save``/``load`` round-trips
+need no sidecar record storage).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.filters import (FilterExpr, _check_numeric_field,
+                               compile_expr, eval_mask)
+from repro.api.types import RequestStats, SearchRequest, SearchResult
+from repro.ckpt import checkpoint as ckpt
+from repro.core import pq as pq_mod
+from repro.core.engine import (FilteredANNEngine, IndexConfig, QueryStats,
+                               SearchConfig)
+from repro.core.labels import LabelStore, build_label_store
+from repro.core.ranges import RangeStore, build_range_store
+from repro.core.records import RecordStore
+from repro.core.selectors import (InMemory, MaskSelector, MatchAllSelector,
+                                  Selector)
+
+_META_FILE = "index_meta.json"
+
+
+def _is_numeric(v) -> bool:
+    return isinstance(v, (float, np.floating)) and not isinstance(v, bool)
+
+
+def _norm_tag(v):
+    """Canonical (hashable, JSON-able) form of a tag value."""
+    if isinstance(v, (bool, np.bool_)):
+        return bool(v)
+    if isinstance(v, (int, np.integer)):
+        return int(v)
+    if isinstance(v, str):
+        return v
+    raise TypeError(f"unsupported tag value {v!r} "
+                    "(tags must be str/int/bool)")
+
+
+def _ingest_metadata(metadata: Sequence[dict], numeric_field: Optional[str]):
+    """Plain per-record dicts -> (vocab, CSR labels, values, numeric_field)."""
+    if numeric_field is None:
+        numeric = set()
+        for d in metadata:
+            for key, v in d.items():
+                if _is_numeric(v):
+                    numeric.add(key)
+        if len(numeric) > 1:
+            raise ValueError(
+                f"multiple float fields {sorted(numeric)}: pass "
+                "numeric_field= to pick the range attribute")
+        numeric_field = numeric.pop() if numeric else None
+
+    vocab: dict = {}            # (field, value) -> label id
+    flat: list = []
+    offsets = np.zeros(len(metadata) + 1, np.int64)
+    values = np.zeros(len(metadata), np.float32)
+    for i, d in enumerate(metadata):
+        n_tags = 0
+        seen: set = set()       # dedupe repeated tags within one record
+        for key, v in d.items():
+            if key == numeric_field:
+                values[i] = float(v)
+                continue
+            for tag in (v if isinstance(v, (list, tuple, set, frozenset))
+                        else (v,)):
+                if _is_numeric(tag):
+                    raise ValueError(
+                        f"record {i}: float value in tag field {key!r} "
+                        f"(numeric field is {numeric_field!r})")
+                pair = (key, _norm_tag(tag))
+                if pair in seen:
+                    continue
+                seen.add(pair)
+                lab = vocab.setdefault(pair, len(vocab))
+                flat.append(lab)
+                n_tags += 1
+        if numeric_field is not None and numeric_field not in d:
+            raise ValueError(
+                f"record {i} is missing the numeric field "
+                f"{numeric_field!r}; every record needs a value "
+                "(the range store is dense)")
+        offsets[i + 1] = offsets[i] + n_tags
+    label_flat = np.asarray(flat, np.int32)
+    return vocab, offsets, label_flat, values, numeric_field
+
+
+class Index:
+    """Filtered vector index with a declarative query surface."""
+
+    def __init__(self, engine: FilteredANNEngine, vocab: dict,
+                 numeric_field: Optional[str],
+                 defaults: SearchConfig = SearchConfig()):
+        self.engine = engine
+        self.vocab = vocab                      # (field, value) -> label id
+        self.numeric_field = numeric_field
+        self.defaults = defaults
+        self._label_names = [None] * len(vocab)  # label id -> (field, value)
+        for (field, value), lab in vocab.items():
+            self._label_names[lab] = (field, value)
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def build(cls, vectors: np.ndarray, metadata: Sequence[dict],
+              config: IndexConfig = IndexConfig(),
+              numeric_field: Optional[str] = None,
+              defaults: SearchConfig = SearchConfig()) -> "Index":
+        vectors = np.asarray(vectors, np.float32)
+        if len(metadata) != vectors.shape[0]:
+            raise ValueError(f"{vectors.shape[0]} vectors but "
+                             f"{len(metadata)} metadata dicts")
+        vocab, offsets, label_flat, values, numeric_field = \
+            _ingest_metadata(metadata, numeric_field)
+        engine = FilteredANNEngine.build(
+            vectors, offsets, label_flat, max(1, len(vocab)), values, config)
+        return cls(engine, vocab, numeric_field, defaults)
+
+    # -- catalog duck type (used by the filter compiler) ----------------
+    @property
+    def label_store(self) -> LabelStore:
+        return self.engine.label_store
+
+    @property
+    def range_store(self) -> RangeStore:
+        return self.engine.range_store
+
+    @property
+    def store(self) -> RecordStore:
+        return self.engine.store
+
+    @property
+    def config(self) -> IndexConfig:
+        return self.engine.config
+
+    @property
+    def n_vectors(self) -> int:
+        return self.engine.store.n
+
+    @property
+    def ql(self) -> int:
+        return self.engine.config.ql
+
+    def label_id(self, field: str, value) -> Optional[int]:
+        try:
+            return self.vocab.get((field, _norm_tag(value)))
+        except TypeError:
+            return None
+
+    def __len__(self) -> int:
+        return self.n_vectors
+
+    @property
+    def dim(self) -> int:
+        return self.engine.store.dim
+
+    # -- metadata resolution --------------------------------------------
+    def record_metadata(self, rec_id: int) -> dict:
+        """Re-resolve one record's metadata dict from the attribute stores.
+
+        Multi-valued tag fields come back as sorted lists."""
+        out: dict = {}
+        for lab in self.label_store.labels_of(rec_id):
+            field, value = self._label_names[int(lab)]
+            if field in out:
+                prev = out[field] if isinstance(out[field], list) \
+                    else [out[field]]
+                out[field] = sorted(prev + [value], key=repr)
+            else:
+                out[field] = value
+        if self.numeric_field is not None:
+            out[self.numeric_field] = float(self.range_store.values[rec_id])
+        return out
+
+    # -- query path ------------------------------------------------------
+    def compile_filter(self, f) -> Selector:
+        if f is None:
+            return MatchAllSelector(self.n_vectors)
+        if isinstance(f, Selector):
+            return f
+        return compile_expr(f, self)
+
+    def _resolve_scfg(self, request: SearchRequest) -> SearchConfig:
+        over = request.overrides()
+        return dataclasses.replace(self.defaults, **over) if over \
+            else self.defaults
+
+    def search_batch(self, requests: Sequence[SearchRequest],
+                     with_stats: bool = False,
+                     with_metadata: bool = True):
+        """Execute a batch through the grouped request path.
+
+        Returns list[SearchResult] (plus the raw batched QueryStats when
+        ``with_stats``). ``with_metadata=False`` skips the host-side
+        per-hit metadata resolution (benchmark timing paths)."""
+        if not requests:
+            return ([], QueryStats.empty()) if with_stats else []
+        queries = np.stack([np.asarray(r.query, np.float32).reshape(-1)
+                            for r in requests])
+        if queries.shape[1] > self.dim:
+            raise ValueError(f"query dim {queries.shape[1]} exceeds index "
+                             f"dim {self.dim}")
+        selectors = [self.compile_filter(r.filter) for r in requests]
+        scfgs = [self._resolve_scfg(r) for r in requests]
+        ids, dists, stats = self.engine.execute(queries, selectors, scfgs)
+        results = []
+        for i in range(len(requests)):
+            meta = [self.record_metadata(int(x))
+                    if with_metadata and x >= 0 else None
+                    for x in ids[i]]
+            results.append(SearchResult(
+                ids=np.asarray(ids[i]), dists=np.asarray(dists[i]),
+                metadata=meta,
+                stats=RequestStats.from_query_stats(stats, i)))
+        return (results, stats) if with_stats else results
+
+    def search(self, request: SearchRequest) -> SearchResult:
+        return self.search_batch([request])[0]
+
+    def ground_truth(self, request: SearchRequest) -> np.ndarray:
+        """Exact filtered top-k ids by brute force (for recall evaluation)."""
+        from repro.core.engine import brute_force_filtered
+        k = request.k if request.k is not None else self.defaults.k
+        q = np.asarray(request.query, np.float32).reshape(-1)
+        if q.shape[0] > self.dim:
+            raise ValueError(f"query dim {q.shape[0]} exceeds index "
+                             f"dim {self.dim}")
+        if q.shape[0] != self.dim:
+            q = np.pad(q, (0, self.dim - q.shape[0]))
+        vecs = np.asarray(self.store.vectors)
+        f = request.filter
+        if f is None or isinstance(f, FilterExpr):
+            if f is not None:
+                _check_numeric_field(f, self)
+            mask, _ = eval_mask(f, self)
+        elif isinstance(f, MaskSelector):
+            mask = np.zeros(self.n_vectors, bool)
+            mask[f.valid_ids] = True
+        elif isinstance(f, Selector):
+            plan = f.plan(self.config.ql, self.config.cap)
+            return brute_force_filtered(
+                vecs, np.asarray(self.store.rec_labels),
+                np.asarray(self.store.rec_values), plan.qfilter, q, k)
+        else:
+            raise TypeError(f"unsupported filter {f!r}")
+        d = np.sum((vecs - q[None, :]) ** 2, axis=1)
+        d = np.where(mask, d, np.inf)
+        order = np.argsort(d)[:k]
+        return order[np.isfinite(d[order])]
+
+    # -- persistence -----------------------------------------------------
+    def _array_tree(self) -> dict:
+        e = self.engine
+        ls, rs = e.label_store, e.range_store
+        return {
+            "store_vectors": np.asarray(e.store.vectors),
+            "store_neighbors": np.asarray(e.store.neighbors),
+            "store_dense_neighbors": np.asarray(e.store.dense_neighbors),
+            "store_rec_labels": np.asarray(e.store.rec_labels),
+            "store_rec_values": np.asarray(e.store.rec_values),
+            "pq_codes": np.asarray(e.codes),
+            "pq_centroids": np.asarray(e.codebook.centroids),
+            "ls_vec_offsets": ls.vec_offsets, "ls_vec_labels": ls.vec_labels,
+            "ls_inv_offsets": ls.inv_offsets,
+            "ls_inv_postings": ls.inv_postings,
+            "ls_label_counts": ls.label_counts, "ls_blooms": ls.blooms,
+            "rs_values": rs.values, "rs_sorted_values": rs.sorted_values,
+            "rs_sorted_ids": rs.sorted_ids,
+            "rs_bucket_bounds": rs.bucket_bounds,
+            "rs_bucket_codes": rs.bucket_codes, "rs_quantiles": rs.quantiles,
+        }
+
+    def save(self, path: str):
+        """Persist via the ckpt subsystem (atomic step dir + manifest) plus
+        a JSON sidecar for the vocabulary and static config."""
+        tree = self._array_tree()
+        ckpt.save(path, step=0, tree=tree, async_write=False, keep_last=1)
+        e = self.engine
+        meta = {
+            "format": 1,
+            "config": dataclasses.asdict(e.config),
+            "defaults": dataclasses.asdict(self.defaults),
+            "medoid": int(e.medoid),
+            "numeric_field": self.numeric_field,
+            "codebook_dim": int(e.codebook.dim),
+            "pages_std": int(e.store.pages_std),
+            "pages_dense": int(e.store.pages_dense),
+            "n_labels": int(e.label_store.n_labels),
+            "k_hashes": int(e.label_store.k_hashes),
+            "vocab": [[f, v, lab] for (f, v), lab in self.vocab.items()],
+            "arrays": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                       for k, a in tree.items()},
+        }
+        with open(os.path.join(path, _META_FILE), "w") as fh:
+            json.dump(meta, fh)
+
+    @classmethod
+    def load(cls, path: str) -> "Index":
+        with open(os.path.join(path, _META_FILE)) as fh:
+            meta = json.load(fh)
+        import jax
+        target = {k: jax.ShapeDtypeStruct(tuple(v["shape"]),
+                                          np.dtype(v["dtype"]))
+                  for k, v in meta["arrays"].items()}
+        t = ckpt.restore(path, 0, target)
+        t = {k: np.asarray(v) for k, v in t.items()}
+
+        store = RecordStore(
+            vectors=jnp.asarray(t["store_vectors"]),
+            neighbors=jnp.asarray(t["store_neighbors"]),
+            dense_neighbors=jnp.asarray(t["store_dense_neighbors"]),
+            rec_labels=jnp.asarray(t["store_rec_labels"]),
+            rec_values=jnp.asarray(t["store_rec_values"]),
+            pages_std=meta["pages_std"], pages_dense=meta["pages_dense"])
+        label_store = LabelStore(
+            n_vectors=store.n, n_labels=meta["n_labels"],
+            vec_offsets=t["ls_vec_offsets"], vec_labels=t["ls_vec_labels"],
+            inv_offsets=t["ls_inv_offsets"],
+            inv_postings=t["ls_inv_postings"],
+            label_counts=t["ls_label_counts"], blooms=t["ls_blooms"],
+            k_hashes=meta["k_hashes"])
+        range_store = RangeStore(
+            n_vectors=store.n, values=t["rs_values"],
+            sorted_values=t["rs_sorted_values"],
+            sorted_ids=t["rs_sorted_ids"],
+            bucket_bounds=t["rs_bucket_bounds"],
+            bucket_codes=t["rs_bucket_codes"], quantiles=t["rs_quantiles"])
+        codebook = pq_mod.PQCodebook(
+            centroids=jnp.asarray(t["pq_centroids"]),
+            dim=meta["codebook_dim"])
+        mem = InMemory(blooms=jnp.asarray(label_store.blooms),
+                       bucket_codes=jnp.asarray(range_store.bucket_codes))
+        engine = FilteredANNEngine(
+            store, jnp.asarray(t["pq_codes"]), codebook, mem, label_store,
+            range_store, meta["medoid"], IndexConfig(**meta["config"]))
+        vocab = {(f, v): lab for f, v, lab in meta["vocab"]}
+        return cls(engine, vocab, meta["numeric_field"],
+                   SearchConfig(**meta["defaults"]))

@@ -1,0 +1,136 @@
+"""``Session`` — incremental request admission with batched execution.
+
+The engine's request path groups a batch by (mechanism, pool bucket,
+config) and runs each group as one coalesced device call; a Session
+generalizes that batching *across callers*: requests are admitted one at
+a time (e.g. by a serving frontend), accumulate in a pending queue, and
+flush together when the batch fills, the oldest request exceeds the
+flush deadline, or a result is demanded.
+
+Single-threaded by design: deadlines are checked at admission and at
+``poll()`` — the serve loop's tick — rather than by a background thread,
+so scheduling stays deterministic and test-able.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+from repro.api.types import SearchRequest, SearchResult
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionConfig:
+    max_batch: int = 32          # flush when this many requests are pending
+    max_delay_s: float = 0.01    # flush when the oldest pending is this old
+    auto_flush: bool = True      # admission/poll may trigger flushes
+
+
+class PendingSearch:
+    """Handle for a submitted request; resolves at flush time."""
+
+    def __init__(self, session: "Session", request: SearchRequest):
+        self._session = session
+        self.request = request
+        self._result: Optional[SearchResult] = None
+        self._error: Optional[BaseException] = None
+        self._done = False
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def _resolve(self, result: SearchResult):
+        self._result = result
+        self._done = True
+
+    def _fail(self, error: BaseException):
+        self._error = error
+        self._done = True
+
+    def result(self) -> SearchResult:
+        """The SearchResult; forces a flush if still pending. Re-raises
+        the batch's execution error if its flush failed."""
+        if not self._done:
+            try:
+                self._session.flush()
+            except Exception:
+                pass                       # delivered via _fail below
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None
+        return self._result
+
+
+class Session:
+    """Batched scheduler over an :class:`~repro.api.index.Index`."""
+
+    def __init__(self, index, config: SessionConfig = SessionConfig()):
+        self.index = index
+        self.config = config
+        self._pending: list = []          # (PendingSearch, t_admitted)
+        self.n_requests = 0
+        self.n_batches = 0
+        self.n_flushed = 0
+
+    # -- admission -------------------------------------------------------
+    def submit(self, request: SearchRequest) -> PendingSearch:
+        handle = PendingSearch(self, request)
+        self._pending.append((handle, time.monotonic()))
+        self.n_requests += 1
+        if self.config.auto_flush and self._should_flush():
+            self.flush()
+        return handle
+
+    def submit_many(self, requests: Sequence[SearchRequest]) -> list:
+        return [self.submit(r) for r in requests]
+
+    def _should_flush(self) -> bool:
+        if len(self._pending) >= self.config.max_batch:
+            return True
+        if self._pending and (time.monotonic() - self._pending[0][1]
+                              >= self.config.max_delay_s):
+            return True
+        return False
+
+    def poll(self) -> int:
+        """Serve-loop tick: flush if the deadline expired. Returns the
+        number of requests executed."""
+        if self.config.auto_flush and self._should_flush():
+            return self.flush()
+        return 0
+
+    # -- execution -------------------------------------------------------
+    def flush(self) -> int:
+        """Execute every pending request as one grouped batch.
+
+        If execution raises (e.g. a malformed filter in the batch), every
+        handle in the batch is failed with that error — no request is
+        silently lost — and the error propagates to the flush caller."""
+        if not self._pending:
+            return 0
+        batch, self._pending = self._pending, []
+        requests = [h.request for h, _ in batch]
+        try:
+            results = self.index.search_batch(requests)
+        except Exception as e:
+            for handle, _ in batch:
+                handle._fail(e)
+            raise
+        for (handle, _), result in zip(batch, results):
+            handle._resolve(result)
+        self.n_batches += 1
+        self.n_flushed += len(batch)
+        return len(batch)
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # -- context manager -------------------------------------------------
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.flush()

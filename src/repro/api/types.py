@@ -1,0 +1,91 @@
+"""Typed request/result surface of the unified query layer.
+
+``SearchRequest`` carries one query vector plus optional per-request
+overrides of the index-level search defaults; ``SearchResult`` replaces
+the engine's positional ``(ids, dists, QueryStats)`` tuple with ids,
+distances, resolved record metadata, and the per-query slice of the
+execution statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SearchRequest:
+    """One filtered top-k query.
+
+    ``filter`` may be a DSL expression (``repro.api.Tag``/``Num`` algebra),
+    a raw engine ``Selector`` (escape hatch), or None for unfiltered
+    search. Unset overrides inherit the index defaults.
+    """
+    query: np.ndarray
+    filter: object = None
+    k: Optional[int] = None
+    l: Optional[int] = None
+    policy: Optional[str] = None
+    max_hops: Optional[int] = None
+    beam_width: Optional[int] = None
+
+    def overrides(self) -> dict:
+        out = {}
+        for f in ("k", "l", "policy", "max_hops", "beam_width"):
+            v = getattr(self, f)
+            if v is not None:
+                out[f] = v
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestStats:
+    """Per-query slice of the engine's batched QueryStats."""
+    mechanism: str
+    io_pages: int
+    est_io_pages: float
+    dist_comps: int
+    est_compute: float
+    hops: int
+    explored: int
+    fp_explored: int
+    n_valid: int
+    selectivity: float
+    precision_in: float
+
+    @classmethod
+    def from_query_stats(cls, stats, i: int) -> "RequestStats":
+        return cls(
+            mechanism=stats.mechanism[i],
+            io_pages=int(stats.io_pages[i]),
+            est_io_pages=float(stats.est_io_pages[i]),
+            dist_comps=int(stats.dist_comps[i]),
+            est_compute=float(stats.est_compute[i]),
+            hops=int(stats.hops[i]),
+            explored=int(stats.explored[i]),
+            fp_explored=int(stats.fp_explored[i]),
+            n_valid=int(stats.n_valid[i]),
+            selectivity=float(stats.selectivity[i]),
+            precision_in=float(stats.precision_in[i]),
+        )
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Verified-valid top-k for one request. ``ids`` is (k,) int32 padded
+    with -1; ``metadata[i]`` is the resolved record dict (None for pads)."""
+    ids: np.ndarray
+    dists: np.ndarray
+    metadata: list
+    stats: RequestStats
+
+    @property
+    def matches(self) -> Sequence[tuple]:
+        """(id, dist, metadata) triples for the non-pad results."""
+        return [(int(i), float(d), m)
+                for i, d, m in zip(self.ids, self.dists, self.metadata)
+                if i >= 0]
+
+    def __len__(self) -> int:
+        return int(np.sum(self.ids >= 0))

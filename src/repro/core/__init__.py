@@ -1,8 +1,10 @@
 # The paper's primary contribution: speculative filtering for on-SSD
 # filtered ANNS, expressed as a JAX system (see DESIGN.md).
-from repro.core.engine import (FilteredANNEngine, IndexConfig, SearchConfig,
-                               brute_force_filtered, recall_at_k)
+from repro.core.engine import (FilteredANNEngine, IndexConfig, QueryStats,
+                               SearchConfig, brute_force_filtered,
+                               recall_at_k)
 from repro.core.selectors import (AndSelector, InMemory, LabelAndSelector,
-                                  LabelOrSelector, OrSelector, QueryFilter,
+                                  LabelOrSelector, MaskSelector,
+                                  MatchAllSelector, OrSelector, QueryFilter,
                                   RangeSelector, Selector, is_member,
                                   is_member_approx)

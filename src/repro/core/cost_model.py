@@ -78,6 +78,29 @@ class Route:
     effective_l: int         # pool length the executor should use
 
 
+def effective_l(mech: str, c: CostInputs, max_pool: int) -> int:
+    """Pool length the executor should use for a mechanism (paper §4.2).
+
+    The same selectivity/precision scaling that prices a mechanism also
+    sizes its pool, so both the speculative router and the forced-policy
+    baselines share this one implementation.
+    """
+    s = max(c.s, 1e-9)
+    if mech == "post":
+        eff = int(c.l / s) + c.l
+    elif mech == "in":
+        p = max(c.p_in, 1e-9)
+        if s * c.r_d / p <= c.r:     # low selectivity: bridge-node regime
+            eff = int((c.l / s) * (c.r / max(c.r_d, 1))) + c.l
+        else:                        # high selectivity: precision scaling
+            eff = int(c.l / p) + c.l
+    elif mech == "pre":
+        eff = int(c.l / max(c.p_pre, 1e-9)) + c.l
+    else:
+        raise ValueError(mech)
+    return max(c.l, min(max_pool, eff))
+
+
 def route_query(c: CostInputs, alpha: float = 10.0, beta: float = 1.0,
                 max_pool: int = 4096) -> Route:
     """Pick the cheapest mechanism and size its search parameters."""
@@ -88,16 +111,5 @@ def route_query(c: CostInputs, alpha: float = 10.0, beta: float = 1.0,
     }
     totals = {k: v.total(alpha, beta) for k, v in costs.items()}
     mech = min(totals, key=totals.get)
-
-    s = max(c.s, 1e-9)
-    if mech == "post":
-        eff_l = min(max_pool, int(c.l / s) + c.l)
-    elif mech == "in":
-        p = max(c.p_in, 1e-9)
-        if s * c.r_d / p <= c.r:
-            eff_l = min(max_pool, int((c.l / s) * (c.r / max(c.r_d, 1))) + c.l)
-        else:
-            eff_l = min(max_pool, int(c.l / p) + c.l)
-    else:
-        eff_l = min(max_pool, int(c.l / max(c.p_pre, 1e-9)) + c.l)
-    return Route(mechanism=mech, costs=costs, effective_l=max(c.l, eff_l))
+    return Route(mechanism=mech, costs=costs,
+                 effective_l=effective_l(mech, c, max_pool))

@@ -158,6 +158,7 @@ def distributed_filtered_search(plan: ShardPlan, store: RecordStore,
             mem, qfilters, queries, entry, params))
     out_specs = jax.tree_util.tree_map(lambda _: P(), out_shape)
 
-    f = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                      out_specs=out_specs, check_vma=False)
+    from repro.utils.compat import shard_map
+    f = shard_map(body, mesh=mesh, in_specs=in_specs,
+                  out_specs=out_specs, check_vma=False)
     return f(*arrays, codes, codebook.centroids, mem, qfilters, queries)

@@ -71,6 +71,16 @@ class QueryStats:
     selectivity: np.ndarray
     precision_in: np.ndarray
 
+    @classmethod
+    def empty(cls) -> "QueryStats":
+        return cls(mechanism=[], io_pages=np.zeros(0, np.int64),
+                   est_io_pages=np.zeros(0), dist_comps=np.zeros(0, np.int64),
+                   est_compute=np.zeros(0), hops=np.zeros(0, np.int64),
+                   fp_explored=np.zeros(0, np.int64),
+                   explored=np.zeros(0, np.int64),
+                   n_valid=np.zeros(0, np.int64), selectivity=np.zeros(0),
+                   precision_in=np.zeros(0))
+
 
 class FilteredANNEngine:
     def __init__(self, store: RecordStore, codes, codebook, mem: InMemory,
@@ -127,10 +137,14 @@ class FilteredANNEngine:
             r=self.store.degree,
             r_d=self.store.degree + self.store.dense_degree,
             s_r=self.store.pages_std, s_d=self.store.pages_dense)
-        if scfg.policy == "speculative":
-            return cost_model.route_query(c, scfg.alpha, scfg.beta,
-                                          scfg.max_pool)
-        if scfg.policy == "basefilter":
+        full = cost_model.route_query(c, scfg.alpha, scfg.beta, scfg.max_pool)
+        if plan.force_mech is not None:
+            # the selector cannot be expressed by the device filter algebra;
+            # only the forced mechanism preserves correctness (MaskSelector)
+            mech = plan.force_mech
+        elif scfg.policy == "speculative":
+            return full
+        elif scfg.policy == "basefilter":
             mech = "pre" if plan.selectivity < 0.01 else "post"
         elif scfg.policy == "strict_in":
             mech = "in"
@@ -140,28 +154,33 @@ class FilteredANNEngine:
             mech = "post"
         else:
             raise ValueError(scfg.policy)
-        full = cost_model.route_query(c, scfg.alpha, scfg.beta, scfg.max_pool)
         eff_l = full.effective_l if mech == full.mechanism else \
-            _effective_l_for(mech, c, scfg.max_pool)
+            cost_model.effective_l(mech, c, scfg.max_pool)
         return cost_model.Route(mech, full.costs, eff_l)
 
     # ------------------------------------------------------------------
-    def search(self, queries: np.ndarray, selectors: Sequence[Selector],
-               scfg: SearchConfig = SearchConfig()):
-        """Returns (ids (B,k), dists (B,k), QueryStats)."""
+    def execute(self, queries: np.ndarray, selectors: Sequence[Selector],
+                scfgs: Sequence[SearchConfig]):
+        """The batched request path (paper §4 Fig. 4, generalized).
+
+        Each query carries its own ``SearchConfig``; queries are grouped by
+        (mechanism, pool-size bucket, config) and executed as coalesced
+        batches. Returns ``(ids_list, dists_list, QueryStats)`` where the
+        i-th list entries are (k_i,) arrays — per-query k may differ.
+        """
         queries = np.asarray(queries, np.float32)
         if queries.shape[1] != self.store.dim:
             pad = self.store.dim - queries.shape[1]
             queries = np.pad(queries, ((0, 0), (0, pad)))
         B = queries.shape[0]
+        assert len(selectors) == B and len(scfgs) == B
         cfg = self.config
-        strict = scfg.policy in ("strict_in", "strict_pre", "basefilter")
 
         plans = [s.plan(cfg.ql, cfg.cap) for s in selectors]
-        routes = [self._route(p, scfg) for p in plans]
+        routes = [self._route(p, sc) for p, sc in zip(plans, scfgs)]
 
-        out_ids = np.full((B, scfg.k), -1, np.int32)
-        out_d = np.full((B, scfg.k), np.inf, np.float32)
+        out_ids: list = [None] * B
+        out_d: list = [None] * B
         stats = QueryStats(
             mechanism=[r.mechanism for r in routes],
             io_pages=np.zeros(B, np.int64),
@@ -181,10 +200,11 @@ class FilteredANNEngine:
         groups: dict = {}
         for i, r in enumerate(routes):
             eff = 1 << max(5, math.ceil(math.log2(max(r.effective_l, 1))))
-            eff = min(eff, scfg.max_pool)
-            groups.setdefault((r.mechanism, eff), []).append(i)
+            eff = min(eff, scfgs[i].max_pool)
+            groups.setdefault((r.mechanism, eff, scfgs[i]), []).append(i)
 
-        for (mech, eff_l), idxs in groups.items():
+        for (mech, eff_l, scfg), idxs in groups.items():
+            strict = scfg.policy in ("strict_in", "strict_pre", "basefilter")
             sub_q = jnp.asarray(queries[idxs])
             sub_sel = [selectors[i] for i in idxs]
             sub_qf = stack_filters([plans[i].qfilter for i in idxs])
@@ -219,19 +239,23 @@ class FilteredANNEngine:
                     stats.dist_comps[i] = int(res.dist_comps[j])
                     stats.hops[i] = int(res.hops[j])
                     stats.fp_explored[i] = int(res.fp_explored[j])
-                    stats.explored[i] = int(res.hops[j])
+                    stats.explored[i] = int(res.explored[j])
                     stats.n_valid[i] = int(res.n_valid[j])
         return out_ids, out_d, stats
 
+    # ------------------------------------------------------------------
+    def search(self, queries: np.ndarray, selectors: Sequence[Selector],
+               scfg: SearchConfig = SearchConfig()):
+        """Returns (ids (B,k), dists (B,k), QueryStats).
 
-def _effective_l_for(mech: str, c: cost_model.CostInputs,
-                     max_pool: int) -> int:
-    s = max(c.s, 1e-9)
-    if mech == "post":
-        return min(max_pool, int(c.l / s) + c.l)
-    if mech == "in":
-        return min(max_pool, int(c.l / s * (c.r / max(c.r_d, 1))) + c.l)
-    return c.l
+        Thin wrapper over :meth:`execute` with one shared SearchConfig."""
+        if len(selectors) == 0:
+            return (np.zeros((0, scfg.k), np.int32),
+                    np.zeros((0, scfg.k), np.float32), QueryStats.empty())
+        ids, dists, stats = self.execute(queries, selectors,
+                                         [scfg] * len(selectors))
+        return (np.stack(ids).astype(np.int32),
+                np.stack(dists).astype(np.float32), stats)
 
 
 def brute_force_filtered(vectors: np.ndarray, rec_labels: np.ndarray,

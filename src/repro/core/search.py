@@ -58,11 +58,12 @@ class SearchResult(NamedTuple):
     ids: jax.Array          # (B, k) int32 — verified-valid top-k (-1 pad)
     dists: jax.Array        # (B, k) float32 exact distances
     io_pages: jax.Array     # (B,) int32 pages fetched
-    hops: jax.Array         # (B,) int32 explored records
+    hops: jax.Array         # (B,) int32 beam-loop iterations
     dist_comps: jax.Array   # (B,) int32 PQ distance computations
     approx_checks: jax.Array  # (B,) int32 is_member_approx evaluations
     n_valid: jax.Array      # (B,) int32 verified-valid results found
     fp_explored: jax.Array  # (B,) int32 explored records that verified invalid
+    explored: jax.Array     # (B,) int32 records fetched & exact-verified
 
 
 def _exact_sq_dist(vecs, q):
@@ -253,9 +254,10 @@ def filtered_search(store: RecordStore, codes: jax.Array,
         out_ids = jnp.where(res_valid[order], res_ids[order], -1)
         out_d = jnp.where(res_valid[order], res_d[order], jnp.inf)
         n_valid = jnp.sum(res_valid)
+        n_explored = jnp.sum(res_ids >= 0)
         fp = jnp.sum((res_ids >= 0) & ~res_valid)
         return (out_ids, out_d, counters[0], counters[3], counters[1],
-                counters[2], n_valid, fp)
+                counters[2], n_valid, fp, n_explored)
 
     outs = jax.vmap(one)(queries, qfilters)
     return SearchResult(*outs)

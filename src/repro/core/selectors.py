@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bloom
+from repro.core.io_sim import PAGE_BYTES
 from repro.core.labels import LabelStore
 from repro.core.ranges import RangeStore
 
@@ -157,6 +158,10 @@ class Plan:
     precision_pre: float    # precision of the pre-filter superset
     pages_prefetch: int     # X_in: pages read before traversal (rare postings)
     pages_prescan: int      # X_pre: pages a speculative pre-filter scan reads
+    force_mech: str | None = None   # bypass the cost model ('pre'|'in'|'post'):
+                                    # required when the QueryFilter algebra
+                                    # cannot express the constraint and only
+                                    # one mechanism preserves correctness
 
 
 class Selector:
@@ -392,6 +397,53 @@ class AndSelector(_Combinator):
         if self.label_sel.selectivity() <= self.range_sel.selectivity():
             return self.label_sel.pre_filter_approx()
         return self.range_sel.pre_filter_approx()
+
+
+class MatchAllSelector(Selector):
+    """No constraint: every record is valid (unfiltered top-k search)."""
+
+    def __init__(self, n_vectors: int):
+        self.n_vectors = int(n_vectors)
+
+    def selectivity(self) -> float:
+        return 1.0
+
+    def plan(self, ql: int, cap: int) -> Plan:
+        pages = max(1, self.n_vectors * 4 // PAGE_BYTES)
+        return Plan(always_true_filter(ql, cap), 1.0, 1.0, 1.0, 0, pages)
+
+    def pre_filter_approx(self) -> tuple[np.ndarray, int]:
+        pages = max(1, self.n_vectors * 4 // PAGE_BYTES)
+        return np.arange(self.n_vectors, dtype=np.int32), pages
+
+
+class MaskSelector(Selector):
+    """Exact-membership fallback for constraints the built-in QueryFilter
+    algebra cannot express (arbitrary AND/OR trees, >QL label slots, …).
+
+    The valid-id set is computed exactly on the host (attribute-index
+    scans, pages accounted by the caller) and the query is *forced* down
+    the pre-filtering path: the candidate superset IS the exact valid set,
+    so there are no false negatives (completeness) and no false positives
+    (the always-true QueryFilter never rejects a candidate, but only valid
+    ids ever enter the pool). In-/post-filtering would consult the vacuous
+    device filter and return invalid results, hence ``force_mech='pre'``.
+    """
+
+    def __init__(self, valid_ids: np.ndarray, n_vectors: int, pages: int):
+        self.valid_ids = np.asarray(valid_ids, np.int32)
+        self.n_vectors = int(n_vectors)
+        self.pages = int(pages)
+
+    def selectivity(self) -> float:
+        return self.valid_ids.size / max(1, self.n_vectors)
+
+    def plan(self, ql: int, cap: int) -> Plan:
+        return Plan(always_true_filter(ql, cap), self.selectivity(),
+                    1.0, 1.0, 0, self.pages, force_mech="pre")
+
+    def pre_filter_approx(self) -> tuple[np.ndarray, int]:
+        return self.valid_ids, self.pages
 
 
 class OrSelector(_Combinator):

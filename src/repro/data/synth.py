@@ -29,6 +29,20 @@ class SynthFilteredDataset:
     query_labels: list           # per query: list[int]
     query_ranges: np.ndarray     # (Q, 2) float32
 
+    def metadata(self, tag_field: str = "label",
+                 num_field: str = "value") -> list[dict]:
+        """Per-record metadata dicts for ``repro.api.Index.build``.
+
+        NOTE: Index.build renumbers tags by first appearance — resolve
+        query labels through ``index.label_id(tag_field, value)`` (as
+        ``make_selectors`` does), never by raw dataset label id.
+        """
+        return [
+            {tag_field: self.label_flat[s:e].tolist(), num_field: float(v)}
+            for s, e, v in zip(self.label_offsets[:-1],
+                               self.label_offsets[1:], self.values)
+        ]
+
 
 def make_filtered_dataset(n: int = 20000, d: int = 48, n_queries: int = 64,
                           n_labels: int = 200, avg_labels: float = 4.0,
@@ -76,8 +90,24 @@ def make_filtered_dataset(n: int = 20000, d: int = 48, n_queries: int = 64,
                                 values, queries, query_labels, ranges)
 
 
+def _resolve_labels(engine, labels, tag_field: str) -> tuple[list[int], bool]:
+    """Map dataset label values to engine label ids.
+
+    The ``repro.api`` Index renumbers tags by vocabulary first-appearance
+    order, so dataset ids must go through ``engine.label_id``; raw
+    engines use dataset ids verbatim. Returns (ids, any_unseen) — unseen
+    labels (zero corpus occurrences) have no vocabulary entry and are
+    dropped from the id list."""
+    mapper = getattr(engine, "label_id", None)
+    if mapper is None:
+        return [int(l) for l in labels], False
+    ids = [mapper(tag_field, int(l)) for l in labels]
+    return [i for i in ids if i is not None], any(i is None for i in ids)
+
+
 def make_selectors(ds: SynthFilteredDataset, engine, workload: str,
-                   n_queries: int | None = None) -> list[Selector]:
+                   n_queries: int | None = None,
+                   tag_field: str = "label") -> list[Selector]:
     """Build per-query Selector objects for one of the paper's workloads."""
     ls, rs = engine.label_store, engine.range_store
     nq = n_queries or ds.queries.shape[0]
@@ -86,19 +116,27 @@ def make_selectors(ds: SynthFilteredDataset, engine, workload: str,
         labels = ds.query_labels[i]
         lo, hi = float(ds.query_ranges[i, 0]), float(ds.query_ranges[i, 1])
         if workload == "label":            # single label (paper Fig. 7)
-            sels.append(LabelOrSelector(ls, labels[:1]))
+            ids, _ = _resolve_labels(engine, labels[:1], tag_field)
+            sels.append(LabelOrSelector(ls, ids))
         elif workload == "label_and":
-            sels.append(LabelAndSelector(ls, labels))
+            ids, unseen = _resolve_labels(engine, labels, tag_field)
+            # AND with an unseen label matches nothing: empty-OR selector
+            sels.append(LabelOrSelector(ls, []) if unseen
+                        else LabelAndSelector(ls, ids))
         elif workload == "label_or":
-            sels.append(LabelOrSelector(ls, labels))
+            ids, _ = _resolve_labels(engine, labels, tag_field)
+            sels.append(LabelOrSelector(ls, ids))
         elif workload == "range":
             sels.append(RangeSelector(rs, lo, hi))
         elif workload == "hybrid":         # LabelOr OR Range (paper §5.1)
-            sels.append(OrSelector([LabelOrSelector(ls, labels),
+            ids, _ = _resolve_labels(engine, labels, tag_field)
+            sels.append(OrSelector([LabelOrSelector(ls, ids),
                                     RangeSelector(rs, lo, hi)]))
         elif workload == "label_and_range":
-            sels.append(AndSelector([LabelAndSelector(ls, labels[:2]),
-                                     RangeSelector(rs, lo, hi)]))
+            ids, unseen = _resolve_labels(engine, labels[:2], tag_field)
+            lab = LabelOrSelector(ls, []) if unseen \
+                else LabelAndSelector(ls, ids)
+            sels.append(AndSelector([lab, RangeSelector(rs, lo, hi)]))
         else:
             raise ValueError(workload)
     return sels

@@ -181,9 +181,10 @@ def _sp_decode_core(cfg: ModelConfig, q, k_new, v_new, cache: KVCache):
 
     rep = P(b_ax, None, None, None)
     seq = P(b_ax, "model", None, None)
-    f = jax.shard_map(body, mesh=mesh,
-                      in_specs=(rep, rep, rep, seq, seq, P()),
-                      out_specs=(rep, seq, seq), check_vma=False)
+    from repro.utils.compat import shard_map
+    f = shard_map(body, mesh=mesh,
+                  in_specs=(rep, rep, rep, seq, seq, P()),
+                  out_specs=(rep, seq, seq), check_vma=False)
     out, k, v = f(q, k_new, v_new, cache.k, cache.v, cache.pos)
     return out, KVCache(k=k, v=v, pos=cache.pos + 1)
 

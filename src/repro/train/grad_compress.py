@@ -39,7 +39,8 @@ def compressed_psum_grads(grads, error_fb, axis_name: str):
 
     Must run inside shard_map/pmap over `axis_name`. Returns
     (mean_grads, new_error_fb)."""
-    n_dev = jax.lax.axis_size(axis_name)
+    from repro.utils.compat import axis_size
+    n_dev = axis_size(axis_name)
 
     def one(g, e):
         g_fb = g.astype(jnp.float32) + e

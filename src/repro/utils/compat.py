@@ -1,0 +1,30 @@
+"""Version-compatibility shims for the pinned container toolchain.
+
+The repo targets the modern jax surface (``jax.shard_map``,
+``jax.sharding.AxisType``); the container may pin an older release where
+those live under ``jax.experimental`` or don't exist. Centralising the
+fallbacks here keeps every call site on one spelling.
+"""
+from __future__ import annotations
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``.
+
+    ``check_vma`` maps onto the old API's ``check_rep`` flag.
+    """
+    try:
+        from jax import shard_map as _sm
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as _sm
+        kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` with a psum(1) fallback for older jax."""
+    import jax
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -1,0 +1,415 @@
+"""Tests for the unified ``repro.api`` query layer: filter-DSL compilation
+(property-style agreement with a brute-force evaluator + no-false-negative
+checks), Index save/load round-trips, per-request overrides, and the
+Session batch scheduler."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (Index, IndexConfig, Num, SearchConfig, SearchRequest,
+                       Session, SessionConfig, Tag, compile_expr)
+from repro.api.filters import And, NumRange, Or, TagIs, eval_mask
+from repro.core.selectors import (AndSelector, LabelAndSelector,
+                                  LabelOrSelector, MaskSelector, OrSelector,
+                                  RangeSelector, is_member, is_member_approx)
+
+pytestmark = pytest.mark.fast
+
+N = 2500
+N_CAT = 14
+LANGS = ["en", "de", "fr", "ja"]
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(7)
+    vectors = rng.normal(0, 1, (N, 24)).astype(np.float32)
+    cats = [sorted(set(int(x) for x in
+                       rng.integers(0, N_CAT, rng.integers(1, 4))))
+            for _ in range(N)]
+    langs = [str(rng.choice(LANGS)) for _ in range(N)]
+    values = rng.uniform(0, 100, N).astype(np.float32)
+    metadata = [{"cat": c, "lang": l, "value": float(v)}
+                for c, l, v in zip(cats, langs, values)]
+    return vectors, metadata, cats, langs, values
+
+
+@pytest.fixture(scope="module")
+def index(corpus):
+    vectors, metadata, *_ = corpus
+    return Index.build(
+        vectors, metadata,
+        IndexConfig(r=16, r_dense=120, l_build=32, pq_m=8),
+        defaults=SearchConfig(k=10, l=32, max_hops=250))
+
+
+# ---------------------------------------------------------------------------
+# Filter DSL: compilation targets
+# ---------------------------------------------------------------------------
+
+def test_compile_targets(index):
+    cases = [
+        (Tag("cat") == 3, LabelOrSelector),
+        (Tag("cat").isin([1, 2, 5]), LabelOrSelector),
+        ((Tag("cat") == 1) & (Tag("cat") == 2), LabelAndSelector),
+        (Num("value").between(10, 50), RangeSelector),
+        ((Tag("cat") == 3) & Num("value").between(10, 50), AndSelector),
+        ((Tag("cat") == 3) | Num("value").between(10, 50), OrSelector),
+        # inexpressible: OR of AND groups -> exact mask fallback
+        (((Tag("cat") == 1) & (Tag("lang") == "en"))
+         | ((Tag("cat") == 2) & (Tag("lang") == "de")), MaskSelector),
+        # disjoint range union -> fallback
+        (Num("value").between(0, 10) | Num("value").between(60, 70),
+         MaskSelector),
+    ]
+    for expr, want in cases:
+        sel = compile_expr(expr, index)
+        assert isinstance(sel, want), (expr, type(sel).__name__)
+
+
+def test_compile_rejects_unknown_numeric_field(index):
+    with pytest.raises(ValueError, match="not indexed"):
+        compile_expr(Num("nope") < 5.0, index)
+    # ground_truth must validate the field too, not silently evaluate
+    with pytest.raises(ValueError, match="not indexed"):
+        index.ground_truth(SearchRequest(query=np.zeros(24, np.float32),
+                                         filter=Num("nope") < 5.0))
+
+
+def test_num_boundary_exact_in_float32(index, corpus):
+    """<=, >, == nudge boundaries in float32 space: a point query on an
+    exactly-stored value must agree between the device exact-verify path
+    and the host scan (policies post vs strict_pre)."""
+    _, _, _, _, values = corpus
+    x = float(values[42])                    # an exactly-stored float32
+    expr = Num("value") == x
+    sel = compile_expr(expr, index)
+    plan = sel.plan(index.config.ql, index.config.cap)
+    got = np.asarray(is_member(plan.qfilter, index.store.rec_labels,
+                               index.store.rec_values))
+    want = np.asarray(values) == np.float32(x)
+    np.testing.assert_array_equal(got, want)
+    assert got.sum() >= 1
+    # <= boundary record included, > excludes it
+    le = compile_expr(Num("value") <= x, index) \
+        .plan(index.config.ql, index.config.cap)
+    gt_ = compile_expr(Num("value") > x, index) \
+        .plan(index.config.ql, index.config.cap)
+    le_mask = np.asarray(is_member(le.qfilter, index.store.rec_labels,
+                                   index.store.rec_values))
+    gt_mask = np.asarray(is_member(gt_.qfilter, index.store.rec_labels,
+                                   index.store.rec_values))
+    assert le_mask[42] and not gt_mask[42]
+    np.testing.assert_array_equal(le_mask | gt_mask, np.ones(N, bool))
+
+
+def test_compile_rejects_field_handle(index):
+    with pytest.raises(TypeError, match="field handle"):
+        compile_expr(Tag("cat"), index)
+
+
+# ---------------------------------------------------------------------------
+# Property-style: random trees vs numpy brute force
+# ---------------------------------------------------------------------------
+
+def _brute_eval(expr, cats, langs, values):
+    """Independent evaluator over the raw metadata (no engine structures)."""
+    if isinstance(expr, TagIs):
+        if expr.field == "cat":
+            return np.array([expr.value in c for c in cats])
+        return np.array([l == expr.value for l in langs])
+    if isinstance(expr, NumRange):
+        return (values >= expr.lo) & (values < expr.hi)
+    masks = [_brute_eval(c, cats, langs, values) for c in expr.children]
+    out = masks[0]
+    for m in masks[1:]:
+        out = (out & m) if isinstance(expr, And) else (out | m)
+    return out
+
+
+def _random_expr(rng, depth=0):
+    r = rng.random()
+    if depth >= 2 or r < 0.45:
+        kind = rng.integers(0, 3)
+        if kind == 0:
+            return Tag("cat") == int(rng.integers(0, N_CAT + 2))  # may miss
+        if kind == 1:
+            return Tag("lang") == str(rng.choice(LANGS + ["xx"]))
+        lo = float(rng.uniform(0, 90))
+        return Num("value").between(lo, lo + float(rng.uniform(1, 60)))
+    n_children = int(rng.integers(2, 4))
+    children = [_random_expr(rng, depth + 1) for _ in range(n_children)]
+    op = And.of if rng.random() < 0.5 else Or.of
+    return op(*children)
+
+
+def test_random_trees_exact_and_no_false_negative(index, corpus):
+    """Compiled filters agree with brute force; approx is a superset."""
+    _, _, cats, langs, values = corpus
+    rng = np.random.default_rng(11)
+    ids = jnp.arange(N, dtype=jnp.int32)
+    rl = index.store.rec_labels
+    rv = index.store.rec_values
+    n_fallback = 0
+    for trial in range(30):
+        expr = _random_expr(rng)
+        want = _brute_eval(expr, cats, langs, values)
+        sel = compile_expr(expr, index)
+        if isinstance(sel, MaskSelector):
+            n_fallback += 1
+            got = np.zeros(N, bool)
+            got[sel.valid_ids] = True
+            np.testing.assert_array_equal(got, want, err_msg=repr(expr))
+            continue
+        plan = sel.plan(index.config.ql, index.config.cap)
+        got = np.asarray(is_member(plan.qfilter, rl, rv))
+        np.testing.assert_array_equal(got, want, err_msg=repr(expr))
+        approx = np.asarray(is_member_approx(plan.qfilter, ids,
+                                             index.engine.mem))
+        assert np.all(approx[want]), f"false negative in approx: {expr!r}"
+    assert n_fallback > 0, "random trees never exercised the mask fallback"
+
+
+def test_eval_mask_matches_brute(index, corpus):
+    _, _, cats, langs, values = corpus
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        expr = _random_expr(rng)
+        mask, pages = eval_mask(expr, index)
+        want = _brute_eval(expr, cats, langs, values)
+        np.testing.assert_array_equal(mask, want, err_msg=repr(expr))
+        assert pages >= 0
+
+
+# ---------------------------------------------------------------------------
+# DSL vs hand-built selectors: identical top-k across all five policies
+# ---------------------------------------------------------------------------
+
+POLICIES = ("speculative", "basefilter", "strict_in", "strict_pre", "post")
+
+
+def test_dsl_matches_handbuilt_all_policies(index):
+    rng = np.random.default_rng(5)
+    q = rng.normal(0, 1, 24).astype(np.float32)
+    ls, rs = index.label_store, index.range_store
+    c3 = index.label_id("cat", 3)
+    c5 = index.label_id("cat", 5)
+    pairs = [
+        (Tag("cat") == 3, LabelOrSelector(ls, [c3])),
+        ((Tag("cat") == 3) & (Tag("cat") == 5),
+         LabelAndSelector(ls, [c3, c5])),
+        (Num("value").between(20, 70), RangeSelector(rs, 20.0, 70.0)),
+        ((Tag("cat") == 3) & Num("value").between(20, 70),
+         AndSelector([LabelOrSelector(ls, [c3]),
+                      RangeSelector(rs, 20.0, 70.0)])),
+        ((Tag("cat") == 3) | Num("value").between(20, 70),
+         OrSelector([LabelOrSelector(ls, [c3]),
+                     RangeSelector(rs, 20.0, 70.0)])),
+    ]
+    for policy in POLICIES:
+        for expr, hand in pairs:
+            r_dsl = index.search(SearchRequest(query=q, filter=expr,
+                                               policy=policy))
+            r_hand = index.search(SearchRequest(query=q, filter=hand,
+                                                policy=policy))
+            np.testing.assert_array_equal(
+                r_dsl.ids, r_hand.ids,
+                err_msg=f"{policy}: {expr!r}")
+
+
+# ---------------------------------------------------------------------------
+# Results: metadata resolution + validity
+# ---------------------------------------------------------------------------
+
+def test_result_metadata_and_validity(index, corpus):
+    _, metadata, *_ = corpus
+    rng = np.random.default_rng(9)
+    q = rng.normal(0, 1, 24).astype(np.float32)
+    expr = (Tag("lang") == "en") & Num("value").between(25, 75)
+    res = index.search(SearchRequest(query=q, filter=expr))
+    assert len(res) > 0
+    for rec_id, dist, meta in res.matches:
+        assert meta["lang"] == "en"
+        assert 25 <= meta["value"] < 75
+        assert meta["lang"] == metadata[rec_id]["lang"]
+        assert np.isclose(meta["value"], metadata[rec_id]["value"])
+
+
+def test_unfiltered_request(index):
+    rng = np.random.default_rng(13)
+    q = rng.normal(0, 1, 24).astype(np.float32)
+    res = index.search(SearchRequest(query=q, k=5))
+    assert len(res) == 5
+    gt = index.ground_truth(SearchRequest(query=q, k=5))
+    assert len(set(int(x) for x in res.ids) & set(int(x) for x in gt)) >= 4
+
+
+# ---------------------------------------------------------------------------
+# Per-request overrides
+# ---------------------------------------------------------------------------
+
+def test_per_request_overrides(index):
+    rng = np.random.default_rng(17)
+    qs = rng.normal(0, 1, (3, 24)).astype(np.float32)
+    reqs = [
+        SearchRequest(query=qs[0], filter=Tag("cat") == 2, k=3),
+        SearchRequest(query=qs[1], filter=Tag("cat") == 2, k=7, l=64),
+        SearchRequest(query=qs[2], filter=Tag("cat") == 2, policy="post"),
+    ]
+    results = index.search_batch(reqs)
+    assert results[0].ids.shape == (3,)
+    assert results[1].ids.shape == (7,)
+    assert results[2].ids.shape == (10,)        # index default k
+    assert results[2].stats.mechanism == "post"
+
+
+# ---------------------------------------------------------------------------
+# Save / load round-trip
+# ---------------------------------------------------------------------------
+
+def test_empty_batch(index):
+    assert index.search_batch([]) == []
+    results, stats = index.search_batch([], with_stats=True)
+    assert results == [] and stats.mechanism == []
+
+
+def test_build_rejects_missing_numeric_value():
+    vecs = np.zeros((3, 8), np.float32)
+    with pytest.raises(ValueError, match="missing the numeric field"):
+        Index.build(vecs, [{"v": 1.0}, {"cat": 2}, {"v": 3.0}])
+
+
+def test_build_dedupes_repeated_tags():
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(0, 1, (40, 8)).astype(np.float32)
+    meta = [{"cat": [1, 1, 2]} for _ in range(40)]
+    idx = Index.build(vecs, meta,
+                      IndexConfig(r=4, r_dense=16, l_build=8, pq_m=4))
+    assert int(idx.label_store.label_counts[idx.label_id("cat", 1)]) == 40
+    assert idx.record_metadata(0) == {"cat": [1, 2]}
+
+
+def test_save_load_roundtrip(index, tmp_path):
+    path = str(tmp_path / "idx")
+    index.save(path)
+    loaded = Index.load(path)
+    assert loaded.vocab == index.vocab
+    assert loaded.numeric_field == index.numeric_field
+    assert loaded.defaults == index.defaults
+    rng = np.random.default_rng(21)
+    q = rng.normal(0, 1, 24).astype(np.float32)
+    expr = (Tag("cat") == 4) | Num("value").between(5, 15)
+    for policy in ("speculative", "post"):
+        req = SearchRequest(query=q, filter=expr, policy=policy)
+        a = index.search(req)
+        b = loaded.search(req)
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_allclose(a.dists, b.dists, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Session scheduler
+# ---------------------------------------------------------------------------
+
+def _requests(n, seed=0):
+    rng = np.random.default_rng(seed)
+    qs = rng.normal(0, 1, (n, 24)).astype(np.float32)
+    return [SearchRequest(query=qs[i],
+                          filter=Tag("cat") == int(rng.integers(0, N_CAT)),
+                          k=4)
+            for i in range(n)]
+
+
+def test_session_flushes_on_batch_size(index):
+    s = Session(index, SessionConfig(max_batch=4, max_delay_s=1e9))
+    handles = [s.submit(r) for r in _requests(4)]
+    assert s.pending == 0 and s.n_batches == 1
+    assert all(h.done for h in handles)
+
+
+def test_session_result_forces_flush(index):
+    s = Session(index, SessionConfig(max_batch=100, max_delay_s=1e9))
+    handles = s.submit_many(_requests(3, seed=1))
+    assert s.pending == 3 and not handles[0].done
+    res = handles[0].result()                   # demand -> flush
+    assert s.pending == 0 and all(h.done for h in handles)
+    assert res.ids.shape == (4,)
+
+
+def test_session_deadline_flush(index):
+    s = Session(index, SessionConfig(max_batch=100, max_delay_s=0.0))
+    s.submit(_requests(1, seed=2)[0])
+    # zero deadline: the next admission sees the expired deadline
+    s.submit(_requests(1, seed=3)[0])
+    assert s.pending <= 1
+    s.flush()
+    assert s.pending == 0
+
+
+def test_session_context_manager_flushes(index):
+    with Session(index, SessionConfig(max_batch=100, max_delay_s=1e9)) as s:
+        handles = s.submit_many(_requests(2, seed=4))
+    assert all(h.done for h in handles)
+    assert s.n_flushed == 2
+
+
+def test_session_failed_batch_fails_every_handle(index):
+    """A bad request in a batch must not silently drop the others."""
+    s = Session(index, SessionConfig(max_batch=100, max_delay_s=1e9))
+    good = s.submit_many(_requests(2, seed=6))
+    bad = s.submit(SearchRequest(query=_requests(1)[0].query,
+                                 filter=Tag("cat")))      # bare handle
+    with pytest.raises(TypeError, match="field handle"):
+        s.flush()
+    assert s.pending == 0
+    for h in (*good, bad):
+        assert h.done
+        with pytest.raises(TypeError, match="field handle"):
+            h.result()
+    # the session stays usable afterwards
+    h2 = s.submit(_requests(1, seed=8)[0])
+    s.flush()
+    assert h2.result().ids.shape == (4,)
+
+
+def test_make_selectors_resolves_renumbered_labels():
+    """Dataset label values must resolve through the Index vocabulary
+    (Index.build renumbers tags by first appearance), so a workload
+    selector's posting count must equal the dataset's true frequency."""
+    from repro.data.synth import make_filtered_dataset, make_selectors
+    ds = make_filtered_dataset(n=300, d=8, n_queries=8, n_labels=40,
+                               seed=2)
+    sub = Index.build(ds.vectors, ds.metadata(),
+                      IndexConfig(r=8, r_dense=40, l_build=16, pq_m=4))
+    rec_sets = [set(ds.label_flat[s:e]) for s, e in
+                zip(ds.label_offsets[:-1], ds.label_offsets[1:])]
+    for i, sel in enumerate(make_selectors(ds, sub, "label")):
+        lab_val = ds.query_labels[i][0]
+        want = sum(1 for rs in rec_sets if lab_val in rs)
+        if sel.labels:
+            assert int(sel._counts[0]) == want, (i, lab_val)
+        else:
+            assert want == 0       # unseen label resolved to empty selector
+
+
+def test_session_groups_mixed_mechanisms(index):
+    """Requests routed to different mechanisms batch in one flush."""
+    rng = np.random.default_rng(23)
+    qs = rng.normal(0, 1, (4, 24)).astype(np.float32)
+    reqs = [
+        SearchRequest(query=qs[0], filter=Tag("cat") == 1, k=4),
+        SearchRequest(query=qs[1], filter=None, k=4),
+        SearchRequest(query=qs[2],
+                      filter=Num("value").between(40, 41), k=4),
+        SearchRequest(query=qs[3],
+                      filter=((Tag("cat") == 1) & (Tag("lang") == "en"))
+                      | ((Tag("cat") == 2) & (Tag("lang") == "de")), k=4),
+    ]
+    s = Session(index, SessionConfig(max_batch=4, max_delay_s=1e9))
+    handles = s.submit_many(reqs)
+    assert s.n_batches == 1
+    mechs = [h.result().stats.mechanism for h in handles]
+    assert set(mechs) <= {"pre", "in", "post"}
+    assert handles[3].result().stats.mechanism == "pre"   # forced fallback

@@ -1,8 +1,11 @@
 import numpy as np
 import jax.numpy as jnp
+import pytest
 
 from repro.core import bloom
 from repro.core.labels import build_label_store, padded_vec_labels
+
+pytestmark = pytest.mark.fast
 
 
 def _toy_store():

@@ -1,6 +1,9 @@
 import numpy as np
+import pytest
 
 from repro.core import cost_model as CM
+
+pytestmark = pytest.mark.fast
 
 
 def _inputs(**kw):

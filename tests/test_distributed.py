@@ -39,7 +39,8 @@ def body(q, k, v, pos):
     return SP.sp_decode_attention_local(q, k, v, pos, n_kv=hkv,
                                         axis_name="model")
 
-f = jax.jit(jax.shard_map(
+from repro.utils.compat import shard_map
+f = jax.jit(shard_map(
     body, mesh=mesh,
     in_specs=(P(), P(None, "model", None, None), P(None, "model", None, None),
               P()),
@@ -70,7 +71,8 @@ pos = jnp.asarray(13, jnp.int32)
 def body(kc, vc, kn, vn, pos):
     return SP.sp_cache_update(kc, vc, kn, vn, pos, axis_name="model")
 
-f = jax.jit(jax.shard_map(
+from repro.utils.compat import shard_map
+f = jax.jit(shard_map(
     body, mesh=mesh,
     in_specs=(P(None, "model", None, None), P(None, "model", None, None),
               P(), P(), P()),
@@ -140,7 +142,8 @@ def body(g, e):
         {"w": g["w"][0]}, {"w": e["w"]}, "data")
     return mean, {"w": new_e["w"][None]}     # stack per-device error states
 
-f = jax.jit(jax.shard_map(
+from repro.utils.compat import shard_map
+f = jax.jit(shard_map(
     body, mesh=mesh,
     in_specs=({"w": P("data", None, None)}, {"w": P()}),
     out_specs=({"w": P()}, {"w": P("data", None, None)}),

@@ -6,6 +6,8 @@ from repro.core.labels import build_label_store, padded_vec_labels
 from repro.core.ranges import build_range_store
 from repro.core import selectors as S
 
+pytestmark = pytest.mark.fast
+
 
 @pytest.fixture(scope="module")
 def stores():
