@@ -10,6 +10,18 @@ from benchmarks.common import (BenchResult, get_engine, modeled_latency_us,
 from repro.data.synth import make_selectors
 
 
+# Regression floor for strict in-filtering at small L on the label workload
+# (ROADMAP baseline item): the strict pool is sized by the strict branch of
+# cost_model.effective_l and seeded with exactly-valid entry points (the fix
+# that took range-workload strict recall off zero). On this zipf-label
+# corpus the L=16 point sits at ~0.10; the floor guards the catastrophic
+# regression class (pool mis-sizing, dead entry seeds → ≈0 recall).
+# tests/test_build.py asserts the same property on the engine-suite corpus,
+# where the headroom is larger.
+STRICT_SMALL_L = 16
+STRICT_SMALL_L_RECALL_FLOOR = 0.08
+
+
 def run() -> list:
     ds, e, _ = get_engine()
     results = []
@@ -27,4 +39,16 @@ def run() -> list:
                          "qps_model": f"{modeled_qps(r['io_pages'], r['cpu_us']):.0f}",
                          "recall": f"{r['recall']:.3f}",
                          "io_pages": f"{r['io_pages']:.0f}"}))
+    # strict in-filtering small-L regression point (label workload)
+    sels = make_selectors(ds, e, "label")
+    r = run_policy(ds, e, sels, "strict_in", l=STRICT_SMALL_L)
+    assert r["recall"] >= STRICT_SMALL_L_RECALL_FLOOR, \
+        f"strict_in recall {r['recall']:.3f} at L={STRICT_SMALL_L} fell " \
+        f"below the {STRICT_SMALL_L_RECALL_FLOOR} regression floor"
+    results.append(BenchResult(
+        name=f"fig7_9/label/strict_in_L{STRICT_SMALL_L}",
+        us_per_call=r["cpu_us"],
+        derived={"recall": f"{r['recall']:.3f}",
+                 "io_pages": f"{r['io_pages']:.0f}",
+                 "floor": f"{STRICT_SMALL_L_RECALL_FLOOR}"}))
     return results

@@ -7,6 +7,8 @@
   fig10_11 — cost-model estimated vs actual I/O (Figs. 10/11)
   table3 — probabilistic-filter memory + §5.4 fp-exploration stats
   kernels — hot-loop micro-benchmarks
+  build  — Vamana build throughput: batched pipeline vs numpy reference
+           (writes BENCH_build.json)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig2,...]
 """
@@ -24,8 +26,9 @@ def main() -> None:
                     help="comma-separated subset of benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import (fig2_selectivity, fig5_6_label, fig7_9_workloads,
-                            fig10_11_cost_model, kernels_bench, table3_memory)
+    from benchmarks import (bench_build, fig2_selectivity, fig5_6_label,
+                            fig7_9_workloads, fig10_11_cost_model,
+                            kernels_bench, table3_memory)
     suites = {
         "fig2": fig2_selectivity.run,
         "fig5_6": fig5_6_label.run,
@@ -33,6 +36,7 @@ def main() -> None:
         "fig10_11": fig10_11_cost_model.run,
         "table3": table3_memory.run,
         "kernels": kernels_bench.run,
+        "build": bench_build.run,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -49,6 +49,19 @@ def main():
     mechs = [r.stats.mechanism for r in results]
     print("routes:", {m: mechs.count(m) for m in set(mechs)})
 
+    # streaming inserts: append fresh records through the incremental
+    # batched builder and query them immediately
+    rng = np.random.default_rng(7)
+    new_vecs = ds.vectors[:16] + rng.normal(0, 0.01, (16, 32)) \
+        .astype(np.float32)
+    new_meta = [{"topic": "breaking", "freshness": 99.0} for _ in range(16)]
+    new_ids = index.insert(new_vecs, new_meta)
+    res = index.search(SearchRequest(
+        query=new_vecs[0], filter=(Tag("topic") == "breaking"), k=5))
+    hit = int(new_ids[0]) in res.ids.tolist()
+    print(f"inserted {len(new_ids)} records (ids {new_ids[0]}..{new_ids[-1]});"
+          f" nearest under its new tag found={hit}")
+
 
 if __name__ == "__main__":
     main()

@@ -53,9 +53,19 @@ def _norm_tag(v):
                     "(tags must be str/int/bool)")
 
 
-def _ingest_metadata(metadata: Sequence[dict], numeric_field: Optional[str]):
-    """Plain per-record dicts -> (vocab, CSR labels, values, numeric_field)."""
-    if numeric_field is None:
+def _ingest_metadata(metadata: Sequence[dict], numeric_field: Optional[str],
+                     vocab: Optional[dict] = None,
+                     infer_numeric: bool = True):
+    """Plain per-record dicts -> (vocab, CSR labels, values, numeric_field).
+
+    Pass an existing ``vocab`` to extend it in place (the insert path:
+    unseen (field, value) pairs get fresh label ids appended after the
+    build-time vocabulary). With ``infer_numeric=False`` the numeric field
+    is taken as given — records introducing new float fields then fail the
+    float-in-tag-field check below, which is exactly what a live index
+    needs (its dense range store cannot grow a column retroactively).
+    """
+    if infer_numeric and numeric_field is None:
         numeric = set()
         for d in metadata:
             for key, v in d.items():
@@ -67,7 +77,8 @@ def _ingest_metadata(metadata: Sequence[dict], numeric_field: Optional[str]):
                 "numeric_field= to pick the range attribute")
         numeric_field = numeric.pop() if numeric else None
 
-    vocab: dict = {}            # (field, value) -> label id
+    if vocab is None:
+        vocab = {}              # (field, value) -> label id
     flat: list = []
     offsets = np.zeros(len(metadata) + 1, np.int64)
     values = np.zeros(len(metadata), np.float32)
@@ -130,6 +141,42 @@ class Index:
         engine = FilteredANNEngine.build(
             vectors, offsets, label_flat, max(1, len(vocab)), values, config)
         return cls(engine, vocab, numeric_field, defaults)
+
+    def insert(self, vectors: np.ndarray,
+               metadata: Sequence[dict]) -> np.ndarray:
+        """Append records to a live index (streaming inserts).
+
+        New nodes are linked through the engine's incremental batched build
+        path; tag values unseen at build time extend the vocabulary. If the
+        index has a numeric range field every inserted record must carry
+        it; an index built without one rejects float metadata values.
+        Returns the assigned record ids (contiguous, ``len(index)`` before
+        the call onward). Previously compiled ``Selector`` objects hold the
+        pre-insert attribute stores — recompile filters (or go through the
+        DSL, which compiles per search) after inserting.
+        """
+        vectors = np.asarray(vectors, np.float32)
+        if vectors.ndim != 2:
+            raise ValueError(f"expected (M, D) vectors, got {vectors.shape}")
+        if len(metadata) != vectors.shape[0]:
+            raise ValueError(f"{vectors.shape[0]} vectors but "
+                             f"{len(metadata)} metadata dicts")
+        if vectors.shape[0] == 0:
+            return np.zeros(0, np.int64)
+        new_vocab = dict(self.vocab)
+        new_vocab, offsets, label_flat, values, _ = _ingest_metadata(
+            metadata, self.numeric_field, vocab=new_vocab,
+            infer_numeric=False)
+        ids = self.engine.insert(vectors, offsets, label_flat,
+                                 max(1, len(new_vocab)), values)
+        # commit the vocabulary only after the engine accepted the batch
+        self.vocab = new_vocab
+        self._label_names.extend([None] * (len(new_vocab)
+                                           - len(self._label_names)))
+        for (field, value), lab in new_vocab.items():
+            if self._label_names[lab] is None:
+                self._label_names[lab] = (field, value)
+        return ids
 
     # -- catalog duck type (used by the filter compiler) ----------------
     @property

@@ -78,19 +78,30 @@ class Route:
     effective_l: int         # pool length the executor should use
 
 
-def effective_l(mech: str, c: CostInputs, max_pool: int) -> int:
+def effective_l(mech: str, c: CostInputs, max_pool: int,
+                strict: bool = False) -> int:
     """Pool length the executor should use for a mechanism (paper §4.2).
 
     The same selectivity/precision scaling that prices a mechanism also
     sizes its pool, so both the speculative router and the forced-policy
     baselines share this one implementation.
+
+    ``strict`` applies to ``mech == "in"`` only: strict in-filtering
+    (Filtered-DiskANN-like) admits only exactly-verified nodes to the pool
+    and traverses without bridge nodes or the densified 2-hop edges, so the
+    speculative bridge-regime scaling (L/s)·(R/R_d) badly *under*-sizes its
+    pool at low selectivity. The valid sub-graph it walks is sparse and
+    fragmented; keeping a 1/s-deep frontier of valid nodes is what lets the
+    traversal escape local minima, exactly like post-filtering's pool.
     """
     s = max(c.s, 1e-9)
     if mech == "post":
         eff = int(c.l / s) + c.l
     elif mech == "in":
         p = max(c.p_in, 1e-9)
-        if s * c.r_d / p <= c.r:     # low selectivity: bridge-node regime
+        if strict:                   # strict baseline: selectivity scaling
+            eff = int(c.l / s) + c.l
+        elif s * c.r_d / p <= c.r:   # low selectivity: bridge-node regime
             eff = int((c.l / s) * (c.r / max(c.r_d, 1))) + c.l
         else:                        # high selectivity: precision scaling
             eff = int(c.l / p) + c.l

@@ -42,6 +42,7 @@ class IndexConfig:
     ql: int = 8               # max labels per query
     cap: int = 2048           # merged rare-list capacity
     seed: int = 0
+    builder: str = "batched"  # 'batched' (device pipeline) | 'reference'
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +95,7 @@ class FilteredANNEngine:
         self.range_store = range_store
         self.medoid = medoid
         self.config = config
+        self._builder = None      # lazy IncrementalBuilder (insert path)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -108,8 +110,16 @@ class FilteredANNEngine:
             vectors = np.pad(vectors, ((0, 0), (0, pad)))
             d += pad
 
-        adj, medoid = graph.build_vamana(vectors, config.r, config.l_build,
-                                         config.alpha, seed=config.seed)
+        if config.builder == "batched":
+            adj, medoid = graph.build_vamana_batched(
+                vectors, config.r, config.l_build, config.alpha,
+                seed=config.seed)
+        elif config.builder == "reference":
+            adj, medoid = graph.build_vamana(vectors, config.r,
+                                             config.l_build, config.alpha,
+                                             seed=config.seed)
+        else:
+            raise ValueError(f"unknown builder {config.builder!r}")
         dense = graph.densify_2hop(adj, config.r_dense, seed=config.seed + 1)
 
         label_store = build_label_store(label_offsets, label_flat, n_labels)
@@ -127,6 +137,71 @@ class FilteredANNEngine:
                        bucket_codes=jnp.asarray(range_store.bucket_codes))
         return cls(store, codes, codebook, mem, label_store, range_store,
                    medoid, config)
+
+    # ------------------------------------------------------------------
+    def insert(self, vectors: np.ndarray, label_offsets: np.ndarray,
+               label_flat: np.ndarray, n_labels: int,
+               values: np.ndarray) -> np.ndarray:
+        """Append records through the incremental batched build path.
+
+        New nodes are linked by a single final-α pass (greedy search from
+        the medoid → batched RobustPrune → reverse-edge scatter); the
+        attribute stores, 2-hop densification, PQ codes, and in-memory
+        summaries are rebuilt over the grown corpus (vectorized, O(N)).
+        The PQ codebook is *not* retrained — inserted vectors are encoded
+        against the build-time centroids. Inserts always link through the
+        batched pipeline regardless of ``config.builder`` — a
+        ``builder='reference'`` graph becomes mixed after the first insert
+        (fine for serving; rebuild if you need a pure oracle graph for
+        A/B comparisons). Returns the new record ids.
+        """
+        cfg = self.config
+        vectors = np.asarray(vectors, np.float32)
+        m = vectors.shape[0]
+        if m == 0:
+            return np.zeros(0, np.int64)
+        # store.dim may exceed the build-time input dim only by the pq_m
+        # alignment pad, so any narrower batch is a caller error, not a
+        # padding case — reject it rather than storing zero-padded geometry
+        if not (self.store.dim - cfg.pq_m < vectors.shape[1]
+                <= self.store.dim):
+            raise ValueError(
+                f"vector dim {vectors.shape[1]} does not match index dim "
+                f"{self.store.dim} (built from inputs of dim in "
+                f"({self.store.dim - cfg.pq_m}, {self.store.dim}])")
+        if vectors.shape[1] < self.store.dim:
+            vectors = np.pad(
+                vectors, ((0, 0), (0, self.store.dim - vectors.shape[1])))
+        if self._builder is None:
+            self._builder = graph.IncrementalBuilder(
+                np.asarray(self.store.vectors),
+                np.asarray(self.store.neighbors), self.medoid,
+                ell=cfg.l_build, alpha=cfg.alpha)
+        ids = self._builder.add_batch(vectors)
+        adj = self._builder.adjacency
+        data_all = self._builder.data
+
+        ls = self.label_store
+        label_offsets = np.asarray(label_offsets, np.int64)
+        offsets = np.concatenate(
+            [ls.vec_offsets, ls.vec_offsets[-1] + label_offsets[1:]])
+        flat = np.concatenate(
+            [ls.vec_labels, np.asarray(label_flat, np.int32)])
+        self.label_store = build_label_store(
+            offsets, flat, max(ls.n_labels, int(n_labels)))
+        values_all = np.concatenate(
+            [self.range_store.values, np.asarray(values, np.float32)])
+        self.range_store = build_range_store(values_all)
+        rec_labels = padded_vec_labels(self.label_store, cfg.max_labels)
+        dense = graph.densify_2hop(adj, cfg.r_dense, seed=cfg.seed + 1)
+        self.store = make_record_store(data_all, adj, dense, rec_labels,
+                                       values_all)
+        new_codes = pq_mod.encode_pq(self.codebook, jnp.asarray(vectors))
+        self.codes = jnp.concatenate([self.codes, new_codes])
+        self.mem = InMemory(blooms=jnp.asarray(self.label_store.blooms),
+                            bucket_codes=jnp.asarray(
+                                self.range_store.bucket_codes))
+        return ids
 
     # ------------------------------------------------------------------
     def _route(self, plan, scfg: SearchConfig) -> cost_model.Route:
@@ -154,8 +229,14 @@ class FilteredANNEngine:
             mech = "post"
         else:
             raise ValueError(scfg.policy)
-        eff_l = full.effective_l if mech == full.mechanism else \
-            cost_model.effective_l(mech, c, scfg.max_pool)
+        # strict in-filtering traverses without bridge nodes, so its pool is
+        # sized by the strict branch of the shared formula (ROADMAP: weak
+        # recall at small L came from reusing the speculative bridge-regime
+        # pool here)
+        strict_in = scfg.policy == "strict_in" and mech == "in"
+        eff_l = full.effective_l if (mech == full.mechanism
+                                     and not strict_in) else \
+            cost_model.effective_l(mech, c, scfg.max_pool, strict=strict_in)
         return cost_model.Route(mech, full.costs, eff_l)
 
     # ------------------------------------------------------------------
@@ -226,15 +307,34 @@ class FilteredANNEngine:
                 sp = search.SearchParams(
                     l_search=eff_l, k=scfg.k, beam_width=scfg.beam_width,
                     max_hops=scfg.max_hops, mode=mode, l_valid=scfg.l)
+                entries = None
+                seed_pages = np.zeros(len(idxs), np.int64)
+                if mode == "strict_in":
+                    # strict in-filtering needs exactly-valid entry seeds:
+                    # its pool admits only valid records, so starting at the
+                    # medoid strands the search whenever no valid record is
+                    # reachable through valid nodes (the baseline's analogue
+                    # of Filtered-DiskANN's per-label entry points). The
+                    # seeds come from a query-time attribute-index scan, so
+                    # its pages are charged to the query — arbitrary range /
+                    # composite filters cannot be precomputed offline.
+                    ents = np.full((len(idxs), 4), -1, np.int32)
+                    for j, i in enumerate(idxs):
+                        seeds, pages = _strict_seed_ids(sub_sel[j],
+                                                        self.medoid, 4)
+                        ents[j, :seeds.size] = seeds
+                        seed_pages[j] = pages
+                    entries = jnp.asarray(ents)
                 res = search.filtered_search(
                     self.store, self.codes, self.codebook, self.mem, sub_qf,
-                    sub_q, self.medoid, sp)
+                    sub_q, self.medoid, sp, entries=entries)
                 prefetch = np.array([plans[i].pages_prefetch for i in idxs]) \
                     if mode == "spec_in" else 0
                 for j, i in enumerate(idxs):
                     out_ids[i] = np.asarray(res.ids[j])
                     out_d[i] = np.asarray(res.dists[j])
-                    stats.io_pages[i] = int(res.io_pages[j]) + (
+                    stats.io_pages[i] = int(res.io_pages[j]) + int(
+                        seed_pages[j]) + (
                         int(prefetch[j]) if mode == "spec_in" else 0)
                     stats.dist_comps[i] = int(res.dist_comps[j])
                     stats.hops[i] = int(res.hops[j])
@@ -256,6 +356,22 @@ class FilteredANNEngine:
                                          [scfg] * len(selectors))
         return (np.stack(ids).astype(np.int32),
                 np.stack(dists).astype(np.float32), stats)
+
+
+def _strict_seed_ids(sel: Selector, medoid: int,
+                     e: int) -> tuple[np.ndarray, int]:
+    """Entry seeds for strict in-filtering: up to ``e`` exactly-valid
+    records, evenly spaced over the attribute index scan (diverse starting
+    regions), plus the scan's page count. Falls back to the medoid when
+    the filter matches nothing."""
+    from repro.core.prefilter import _strict_scan
+    ids, pages = _strict_scan(sel)
+    ids = np.asarray(ids)
+    ids = ids[ids >= 0]
+    if ids.size == 0:
+        return np.array([medoid], np.int32), int(pages)
+    take = np.linspace(0, ids.size - 1, num=min(e, ids.size)).astype(np.int64)
+    return np.unique(ids[take]).astype(np.int32), int(pages)
 
 
 def brute_force_filtered(vectors: np.ndarray, rec_labels: np.ndarray,

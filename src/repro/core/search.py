@@ -91,11 +91,18 @@ def filtered_search(store: RecordStore, codes: jax.Array,
                     qfilters: QueryFilter, queries: jax.Array, entry: int,
                     params: SearchParams,
                     distance_fn: Callable = pq_mod.adc_lookup,
-                    fetch_fn: Callable = local_fetch) -> SearchResult:
+                    fetch_fn: Callable = local_fetch,
+                    entries: jax.Array | None = None) -> SearchResult:
     """Run the filtered beam search for a batch of queries.
 
     codes: (N, M) uint8 PQ codes (the replicated in-memory tier).
     qfilters: batched QueryFilter (leading dim B).
+    entries: optional (B, E) int32 per-query entry seeds (-1 pad; each row
+    must hold distinct ids). Defaults to the shared ``entry`` (medoid).
+    Strict in-filtering passes exactly-valid seeds here — the query-time
+    analogue of Filtered-DiskANN's precomputed per-label entry points —
+    because its valid-only pool dies immediately when the medoid's
+    neighborhood contains no valid record.
     """
     p = params
     l_valid = p.l_valid or p.l_search
@@ -104,18 +111,25 @@ def filtered_search(store: RecordStore, codes: jax.Array,
     Rd = store.dense_degree if p.mode == "spec_in" else 0
     res_cap = p.max_hops * W                     # explored-record buffer
     rec_pages = store.pages_dense if p.mode == "spec_in" else store.pages_std
+    if entries is None:
+        entries = jnp.full((queries.shape[0], 1), entry, jnp.int32)
 
-    def one(q, qf):
+    def one(q, qf, ent):
         table = pq_mod.distance_table(codebook, q)            # (M, ksub)
 
-        entry_d = distance_fn(codes[jnp.array([entry])], table)[0]
-        entry_ok = is_member_approx(qf, jnp.full((1,), entry, jnp.int32),
-                                    mem)[0]
-        entry_key = entry_d + jnp.where(entry_ok, 0.0, INVALID_PENALTY)
+        e_n = ent.shape[0]
+        ent_valid = ent >= 0
+        safe_ent = jnp.where(ent_valid, ent, 0)
+        entry_d = distance_fn(codes[safe_ent], table)         # (E,)
+        entry_ok = is_member_approx(qf, safe_ent, mem) & ent_valid
+        entry_key = jnp.where(
+            ent_valid, entry_d + jnp.where(entry_ok, 0.0, INVALID_PENALTY),
+            BIG)
 
-        pool_ids = jnp.full((P,), -1, jnp.int32).at[0].set(entry)
-        pool_key = jnp.full((P,), BIG, jnp.float32).at[0].set(entry_key)
-        explored = jnp.ones((P,), jnp.bool_).at[0].set(False)
+        pool_ids = jnp.full((P,), -1, jnp.int32).at[:e_n].set(
+            jnp.where(ent_valid, ent, -1))
+        pool_key = jnp.full((P,), BIG, jnp.float32).at[:e_n].set(entry_key)
+        explored = jnp.ones((P,), jnp.bool_).at[:e_n].set(~ent_valid)
 
         res_ids = jnp.full((res_cap,), -1, jnp.int32)
         res_d = jnp.full((res_cap,), BIG, jnp.float32)
@@ -259,5 +273,5 @@ def filtered_search(store: RecordStore, codes: jax.Array,
         return (out_ids, out_d, counters[0], counters[3], counters[1],
                 counters[2], n_valid, fp, n_explored)
 
-    outs = jax.vmap(one)(queries, qfilters)
+    outs = jax.vmap(one)(queries, qfilters, entries)
     return SearchResult(*outs)

@@ -13,6 +13,7 @@ import jax
 from repro.kernels import approx_probe as _probe
 from repro.kernels import l2_rerank as _l2
 from repro.kernels import pq_scan as _pq
+from repro.kernels import prune_scan as _prune
 from repro.kernels import ref
 
 
@@ -53,3 +54,15 @@ def l2_rerank(vecs, query):
 
 def l2_rerank_interpret(vecs, query):
     return _l2.l2_rerank(vecs, query, interpret=True)
+
+
+def prune_scan(dp_s, dcc_s, a2: float, r: int):
+    """RobustPrune domination scan (B, C)+(B, C, C) -> (B, C) keep mask."""
+    if on_tpu():
+        return _prune.prune_scan(dp_s, dcc_s, float(a2), int(r),
+                                 interpret=False)
+    return ref.prune_scan_ref(dp_s, dcc_s, float(a2), int(r))
+
+
+def prune_scan_interpret(dp_s, dcc_s, a2: float, r: int):
+    return _prune.prune_scan(dp_s, dcc_s, float(a2), int(r), interpret=True)

@@ -39,3 +39,36 @@ def approx_probe_ref(blooms: jax.Array, buckets: jax.Array,
 def l2_rerank_ref(vecs: jax.Array, query: jax.Array) -> jax.Array:
     d = vecs.astype(jnp.float32) - query.astype(jnp.float32)[None, :]
     return jnp.sum(d * d, axis=1)
+
+
+def prune_scan_ref(dp_s: jax.Array, dcc_s: jax.Array, a2: float,
+                   r: int) -> jax.Array:
+    """RobustPrune domination scan over distance-sorted candidates.
+
+    dp_s:  (B, C) float32 candidate→insert-point distances, ascending per
+           row, +inf right-padding for invalid slots.
+    dcc_s: (B, C, C) float32 pairwise candidate distances, both axes in the
+           same sorted order.
+    Walks each row in sorted order keeping at most ``r`` survivors; keeping
+    candidate i prunes every j with a2·d(i, j) <= d(p, j) — the exact update
+    of the sequential numpy reference (graph.robust_prune), expressed as a
+    masked fori_loop. Returns a (B, C) bool keep mask in sorted space.
+    """
+    def one(dp, dcc):
+        c = dp.shape[0]
+
+        def body(i, st):
+            pruned, keep, nk = st
+            act = (~pruned[i]) & (nk < r) & jnp.isfinite(dp[i])
+            keep = keep.at[i].set(act)
+            newly = act & (a2 * dcc[i] <= dp)
+            pruned = (pruned | newly).at[i].set(pruned[i] | act)
+            return (pruned, keep, nk + act.astype(jnp.int32))
+
+        _, keep, _ = jax.lax.fori_loop(
+            0, c, body,
+            (jnp.zeros((c,), jnp.bool_), jnp.zeros((c,), jnp.bool_),
+             jnp.int32(0)))
+        return keep
+
+    return jax.vmap(one)(dp_s, dcc_s)

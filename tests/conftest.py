@@ -1,0 +1,35 @@
+"""Session-scoped build cache for the build-heavy suites.
+
+One synthetic corpus and one built engine/Index are shared across every
+suite that needs a real Vamana graph (test_engine, test_build, ...), so the
+build cost is paid once per pytest session — with the batched device
+builder that is seconds, not minutes, and ``scripts/test_fast.sh`` no
+longer needs to skip build-heavy suites.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import engine as eng
+from repro.data.synth import make_filtered_dataset
+
+
+@pytest.fixture(scope="session")
+def shared_ds():
+    """The engine-suite corpus (same parameters test_engine always used)."""
+    return make_filtered_dataset(n=6000, d=32, n_queries=24, n_labels=60,
+                                 seed=0)
+
+
+@pytest.fixture(scope="session")
+def shared_engine(shared_ds):
+    ds = shared_ds
+    cfg = eng.IndexConfig(r=24, r_dense=240, l_build=48, pq_m=8,
+                          max_labels=16, ql=8, cap=2048)
+    return eng.FilteredANNEngine.build(ds.vectors, ds.label_offsets,
+                                       ds.label_flat, ds.n_labels, ds.values,
+                                       cfg)
+
+
+# (Index.insert tests build their own module-scoped index in test_build.py:
+#  inserts mutate the index, so sharing one across suites would leak state.)

@@ -1,0 +1,167 @@
+"""Index.insert (streaming inserts) + batched-build regression coverage.
+
+The insert tests run as an ordered journey over one module-scoped index
+(inserts mutate it, so it is deliberately not the session-shared engine).
+"""
+import numpy as np
+import pytest
+
+from repro.api import Index, Num, SearchRequest, Tag
+from repro.core import engine as eng
+from repro.core.engine import recall_at_k
+from repro.data.synth import make_selectors
+
+pytestmark = pytest.mark.fast
+
+N0 = 2500
+D = 24
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(7)
+    centers = rng.normal(0, 1.0, (8, D)).astype(np.float32)
+    assign = rng.integers(0, 8, N0)
+    vecs = (centers[assign]
+            + rng.normal(0, 0.3, (N0, D))).astype(np.float32)
+    meta = [{"cat": int(rng.integers(0, 6)),
+             "v": float(rng.lognormal(2.0, 0.6))} for _ in range(N0)]
+    new_vecs = (centers[rng.integers(0, 8, 300)]
+                + rng.normal(0, 0.3, (300, D))).astype(np.float32)
+    # cats 6/7 only appear in inserted records (vocabulary growth)
+    new_meta = [{"cat": int(rng.integers(0, 8)),
+                 "v": float(rng.lognormal(2.0, 0.6))} for _ in range(300)]
+    return vecs, meta, new_vecs, new_meta
+
+
+@pytest.fixture(scope="module")
+def index(corpus):
+    vecs, meta, new_vecs, new_meta = corpus
+    cfg = eng.IndexConfig(r=16, r_dense=160, l_build=32, pq_m=8,
+                          max_labels=8, ql=4, cap=1024)
+    idx = Index.build(vecs, meta, cfg,
+                      defaults=eng.SearchConfig(k=10, l=32, max_hops=300,
+                                                max_pool=512))
+    ids = idx.insert(new_vecs, new_meta)
+    assert ids.tolist() == list(range(N0, N0 + 300))
+    return idx
+
+
+def test_insert_grows_index(index):
+    assert len(index) == N0 + 300
+
+
+def test_inserted_searchable_under_tag_filter(index, corpus):
+    _, _, new_vecs, new_meta = corpus
+    found = 0
+    for j in range(0, 60):
+        req = SearchRequest(query=new_vecs[j],
+                            filter=(Tag("cat") == new_meta[j]["cat"]), k=5)
+        res = index.search(req)
+        found += int(N0 + j in res.ids.tolist())
+        # every hit satisfies the filter exactly
+        for rec_id, _, meta in res.matches:
+            assert meta["cat"] == new_meta[j]["cat"]
+    assert found >= 55, found
+
+
+def test_inserted_searchable_under_range_filter(index, corpus):
+    _, _, new_vecs, new_meta = corpus
+    found = 0
+    for j in range(60, 120):
+        v = new_meta[j]["v"]
+        req = SearchRequest(query=new_vecs[j],
+                            filter=Num("v").between(v - 2.0, v + 2.0), k=5)
+        res = index.search(req)
+        found += int(N0 + j in res.ids.tolist())
+        for rec_id, _, meta in res.matches:
+            assert v - 2.0 <= meta["v"] < v + 2.0
+    assert found >= 55, found
+
+
+def test_ground_truth_agrees_after_insert(index, corpus):
+    _, _, new_vecs, new_meta = corpus
+    recalls = []
+    for j in range(0, 40):
+        req = SearchRequest(query=new_vecs[j],
+                            filter=(Tag("cat") == new_meta[j]["cat"]), k=10)
+        gt = index.ground_truth(req)
+        assert gt.max() < len(index)
+        # ground truth sees inserted records
+        res = index.search(req)
+        recalls.append(recall_at_k(res.ids, gt, 10))
+    assert np.mean(recalls) >= 0.85, np.mean(recalls)
+    # at least one ground-truth set contains an inserted id
+    any_inserted = any(
+        (index.ground_truth(SearchRequest(
+            query=new_vecs[j], filter=(Tag("cat") == new_meta[j]["cat"]),
+            k=10)) >= N0).any() for j in range(10))
+    assert any_inserted
+
+
+def test_new_vocabulary_entries_resolve(index):
+    # cats 6 and 7 exist only in inserted records
+    assert index.label_id("cat", 6) is not None
+    assert index.label_id("cat", 7) is not None
+    req_meta = [index.record_metadata(i) for i in range(N0, N0 + 50)]
+    assert any(m["cat"] in (6, 7) for m in req_meta)
+
+
+def test_insert_save_load_roundtrip(index, corpus, tmp_path):
+    _, _, new_vecs, _ = corpus
+    path = str(tmp_path / "ckpt")
+    index.save(path)
+    loaded = Index.load(path)
+    assert len(loaded) == len(index)
+    assert loaded.vocab == index.vocab
+    for j in (0, 7, 42):
+        r1 = index.search(SearchRequest(query=new_vecs[j], k=5))
+        r2 = loaded.search(SearchRequest(query=new_vecs[j], k=5))
+        np.testing.assert_array_equal(r1.ids, r2.ids)
+        assert index.record_metadata(N0 + j) == \
+            loaded.record_metadata(N0 + j)
+
+
+def test_insert_validation(index):
+    with pytest.raises(ValueError):
+        index.insert(np.zeros((2, D), np.float32), [{"cat": 1, "v": 1.0}])
+    with pytest.raises(ValueError):   # missing the numeric field
+        index.insert(np.zeros((1, D), np.float32), [{"cat": 1}])
+    with pytest.raises(ValueError):   # exceeds index dim
+        index.insert(np.zeros((1, 4096), np.float32), [{"cat": 1, "v": 1.0}])
+    assert index.insert(np.zeros((0, D), np.float32), []).size == 0
+
+
+def test_insert_rejects_new_float_field():
+    vecs = np.eye(8, dtype=np.float32)
+    idx = Index.build(vecs, [{"cat": i % 2} for i in range(8)],
+                      eng.IndexConfig(r=4, r_dense=8, l_build=8, pq_m=4,
+                                      max_labels=4, ql=2, cap=64))
+    with pytest.raises(ValueError):
+        idx.insert(np.eye(8, dtype=np.float32)[:1], [{"cat": 1, "w": 2.5}])
+
+
+def test_strict_in_small_l_regression(shared_ds, shared_engine):
+    """ROADMAP baseline item: strict in-filtering must stay usable at small
+    L (strict pool sizing via cost_model.effective_l + valid entry seeds).
+    Mirrors the assertion in benchmarks/fig7_9_workloads.py's run()."""
+    ds, e = shared_ds, shared_engine
+    sels = make_selectors(ds, e, "label")
+    scfg = eng.SearchConfig(k=10, l=16, max_hops=400, policy="strict_in",
+                            max_pool=1024)
+    ids, _, stats = e.search(ds.queries, sels, scfg)
+    vectors = np.asarray(e.store.vectors)
+    rl = np.asarray(e.store.rec_labels)
+    rv = np.asarray(e.store.rec_values)
+    recalls = []
+    for i, sel in enumerate(sels):
+        plan = sel.plan(e.config.ql, e.config.cap)
+        q = ds.queries[i]
+        if q.shape[0] != vectors.shape[1]:
+            q = np.pad(q, (0, vectors.shape[1] - q.shape[0]))
+        gt = eng.brute_force_filtered(vectors, rl, rv, plan.qfilter, q, 10)
+        recalls.append(recall_at_k(ids[i], gt, 10))
+    assert np.mean(recalls) >= 0.30, np.mean(recalls)
+    # strict in-filtering still pays the neighbor-attribute reads the paper
+    # eliminates — its I/O must dominate what the router would spend
+    assert stats.io_pages.mean() > 0

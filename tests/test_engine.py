@@ -4,19 +4,15 @@ import pytest
 
 from repro.core import engine as eng
 from repro.core.selectors import stack_filters
-from repro.data.synth import make_filtered_dataset, make_selectors
+from repro.data.synth import make_selectors
+
+
+pytestmark = pytest.mark.fast   # build shared via the session-scoped cache
 
 
 @pytest.fixture(scope="module")
-def built():
-    ds = make_filtered_dataset(n=6000, d=32, n_queries=24, n_labels=60,
-                               seed=0)
-    cfg = eng.IndexConfig(r=24, r_dense=240, l_build=48, pq_m=8,
-                          max_labels=16, ql=8, cap=2048)
-    e = eng.FilteredANNEngine.build(ds.vectors, ds.label_offsets,
-                                    ds.label_flat, ds.n_labels, ds.values,
-                                    cfg)
-    return ds, e
+def built(shared_ds, shared_engine):
+    return shared_ds, shared_engine
 
 
 def _gt_for(ds, e, selectors, k=10):

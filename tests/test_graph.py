@@ -6,22 +6,53 @@ from repro.core import graph
 
 
 @pytest.fixture(scope="module")
-def built():
+def data():
     rng = np.random.default_rng(0)
-    data = rng.normal(0, 1, (1500, 24)).astype(np.float32)
+    return rng.normal(0, 1, (1500, 24)).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def built(data):
+    """Sequential numpy reference build (the correctness oracle)."""
     adj, medoid = graph.build_vamana(data, r=24, ell=40, alpha=1.2, seed=0)
     return data, adj, medoid
 
 
-def test_adjacency_valid(built):
-    data, adj, medoid = built
-    n, r = adj.shape
-    assert r == 24
+@pytest.fixture(scope="module")
+def built_batched(data):
+    """Device-resident batched build at identical parameters/seed."""
+    adj, medoid = graph.build_vamana_batched(data, r=24, ell=40, alpha=1.2,
+                                             seed=0)
+    return data, adj, medoid
+
+
+def _recall10(data, adj, medoid, queries):
+    return graph.greedy_recall_at_k(data, adj, medoid, queries, ell=40)
+
+
+def _check_adjacency(data, adj, r):
+    n = len(data)
+    assert adj.shape == (n, r)
     valid = adj >= 0
     assert np.all(adj[valid] < n)
     # no self loops
-    self_loop = adj == np.arange(n)[:, None]
-    assert not np.any(self_loop)
+    assert not np.any(adj == np.arange(n)[:, None])
+    # no duplicate neighbors within a row
+    srt = np.sort(np.where(valid, adj, np.iinfo(np.int32).max), axis=1)
+    assert not np.any((srt[:, 1:] == srt[:, :-1]) & (srt[:, 1:] >= 0)
+                      & (srt[:, 1:] < np.iinfo(np.int32).max))
+
+
+def test_adjacency_valid(built):
+    data, adj, medoid = built
+    _check_adjacency(data, adj, 24)
+    stats = graph.graph_stats(adj)
+    assert stats["avg_degree"] > 4
+
+
+def test_adjacency_valid_batched(built_batched):
+    data, adj, medoid = built_batched
+    _check_adjacency(data, adj, 24)
     stats = graph.graph_stats(adj)
     assert stats["avg_degree"] > 4
 
@@ -32,16 +63,103 @@ def test_unfiltered_search_recall(built):
     rng = np.random.default_rng(1)
     queries = data[rng.integers(0, len(data), 20)] + \
         rng.normal(0, 0.01, (20, data.shape[1])).astype(np.float32)
-    ids, dists = graph.greedy_search(jnp.asarray(data), jnp.asarray(adj),
-                                     medoid, jnp.asarray(queries),
-                                     ell=40, max_hops=200)
+    assert _recall10(data, adj, medoid, queries) >= 0.9
+
+
+def test_batched_matches_reference(built, built_batched):
+    """Equivalence gate: identical seeds/parameters → the batched builder
+    reaches recall@10 within 1% of the sequential reference, and the degree
+    profile stays within the same bounds."""
+    data, adj_r, med_r = built
+    _, adj_b, med_b = built_batched
+    assert med_b == med_r                      # same medoid computation
+    rng = np.random.default_rng(2)
+    queries = data[rng.integers(0, len(data), 32)] + \
+        rng.normal(0, 0.05, (32, data.shape[1])).astype(np.float32)
+    rec_r = _recall10(data, adj_r, med_r, queries)
+    rec_b = _recall10(data, adj_b, med_b, queries)
+    assert rec_b >= rec_r - 0.01, (rec_b, rec_r)
+    s_r, s_b = graph.graph_stats(adj_r), graph.graph_stats(adj_b)
+    assert s_b["max_degree"] <= 24
+    assert s_b["min_degree"] >= 1
+    assert abs(s_b["avg_degree"] - s_r["avg_degree"]) < 2.0, (s_b, s_r)
+
+
+def test_beam_pool_matches_plain_greedy(built):
+    """The batched builder's beam navigator returns pools of the same
+    quality as the single-step greedy search."""
+    data, adj, medoid = built
+    rng = np.random.default_rng(3)
+    queries = jnp.asarray(
+        data[rng.integers(0, len(data), 16)]
+        + rng.normal(0, 0.05, (16, data.shape[1])).astype(np.float32))
+    d = jnp.asarray(data)
+    a = jnp.asarray(adj)
+    ids_plain, _ = graph.greedy_search(d, a, medoid, queries, ell=40,
+                                       max_hops=200)
+    ids_beam, _ = graph.greedy_search_beam(d, a, medoid, queries, ell=40,
+                                           max_hops=200)
+    # top-10 pool overlap stays high (beam explores in coarser order)
+    overlaps = []
+    for p, b in zip(np.asarray(ids_plain), np.asarray(ids_beam)):
+        overlaps.append(len(set(p[:10].tolist()) & set(b[:10].tolist())) / 10)
+    assert np.mean(overlaps) >= 0.8, np.mean(overlaps)
+
+
+def test_robust_prune_batch_matches_numpy(data):
+    """Single-node bit-compat: the vectorized prune keeps the same ids in
+    the same order as the sequential numpy RobustPrune."""
+    rng = np.random.default_rng(4)
+    for alpha in (1.0, 1.2):
+        p_ids = rng.integers(0, len(data), 8).astype(np.int32)
+        cand = np.full((8, 48), -1, np.int32)
+        for i in range(8):
+            c = rng.choice(len(data), size=rng.integers(5, 48),
+                           replace=False)
+            c = np.unique(c[c != p_ids[i]])
+            cand[i, :c.size] = c
+        rows = np.asarray(graph.robust_prune_batch(
+            jnp.asarray(data), jnp.asarray(p_ids), jnp.asarray(cand),
+            r=8, alpha=alpha))
+        for i in range(8):
+            c = cand[i][cand[i] >= 0]
+            want = graph.robust_prune(data[p_ids[i]], c, data[c], 8, alpha)
+            got = rows[i][rows[i] >= 0]
+            np.testing.assert_array_equal(got, want)
+
+
+def test_incremental_builder_appends(data):
+    b = graph.IncrementalBuilder.build(data[:1000], r=16, ell=32, alpha=1.2,
+                                       seed=0)
+    ids1 = b.add_batch(data[1000:1200])
+    ids2 = b.add_batch(data[1200:1250])
+    assert ids1.tolist() == list(range(1000, 1200))
+    assert ids2.tolist() == list(range(1200, 1250))
+    assert b.n == 1250
+    adj = b.adjacency
+    _check_adjacency(data[:1250], adj, 16)
+    # inserted nodes are wired in (non-trivial degree both directions)
+    new_deg = (adj[1000:] >= 0).sum(1)
+    assert new_deg.mean() > 4
+    incoming = np.isin(adj[:1000], np.arange(1000, 1250)).sum()
+    assert incoming > 0
+    # and they are findable by search
+    rng = np.random.default_rng(5)
+    qidx = rng.integers(1000, 1250, 20)
+    queries = data[qidx]
+    ids, _ = graph.greedy_search(jnp.asarray(b.data),
+                                 jnp.asarray(adj), b.medoid,
+                                 jnp.asarray(queries), ell=32, max_hops=200)
     ids = np.asarray(ids)
-    recalls = []
-    for i, q in enumerate(queries):
-        exact = np.argsort(np.sum((data - q[None]) ** 2, 1))[:10]
-        got = set(ids[i, :10].tolist())
-        recalls.append(len(got & set(exact.tolist())) / 10)
-    assert np.mean(recalls) >= 0.9, f"mean recall {np.mean(recalls)}"
+    hits = sum(int(qidx[i]) in ids[i, :10].tolist() for i in range(20))
+    assert hits >= 18, hits
+
+
+def test_incremental_builder_rejects_bad_shape(data):
+    b = graph.IncrementalBuilder.build(data[:500], r=16, ell=32, seed=0)
+    with pytest.raises(ValueError):
+        b.add_batch(np.zeros((3, 7), np.float32))
+    assert b.add_batch(np.zeros((0, 24), np.float32)).size == 0
 
 
 def test_densify_2hop(built):

@@ -8,6 +8,7 @@ from repro.kernels import ops, ref
 from repro.kernels.pq_scan import pq_scan
 from repro.kernels.approx_probe import approx_probe
 from repro.kernels.l2_rerank import l2_rerank
+from repro.kernels.prune_scan import prune_scan
 
 
 # ---------------------------------------------------------------------------
@@ -123,3 +124,66 @@ def test_ops_dispatch_cpu():
     got = ops.pq_scan(codes, table)            # CPU -> XLA reference path
     want = ops.pq_scan_interpret(codes, table) # Pallas interpret path
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# prune_scan
+# ---------------------------------------------------------------------------
+
+def _prune_inputs(rng, b, c, pad_frac=0.3):
+    """Sorted candidate→point distances (+inf right pads) + pairwise dists."""
+    dp = np.sort(rng.normal(2, 1, (b, c)).astype(np.float32) ** 2, axis=1)
+    for i, k in enumerate(rng.integers(0, max(1, int(c * pad_frac)), b)):
+        if k:
+            dp[i, -k:] = np.inf
+    dcc = rng.normal(0, 1, (b, c, c)).astype(np.float32) ** 2
+    dcc = (dcc + dcc.transpose(0, 2, 1)) / 2
+    for i in range(b):
+        np.fill_diagonal(dcc[i], 0.0)
+    return jnp.asarray(dp), jnp.asarray(dcc)
+
+
+@pytest.mark.parametrize("b,c,r", [(1, 16, 4), (8, 48, 12), (5, 96, 32),
+                                   (2, 33, 5)])
+@pytest.mark.parametrize("alpha", [1.0, 1.2])
+def test_prune_scan_matches_ref(b, c, r, alpha):
+    rng = np.random.default_rng(b * c + r)
+    dp, dcc = _prune_inputs(rng, b, c)
+    a2 = alpha * alpha
+    got = np.asarray(prune_scan(dp, dcc, a2, r, interpret=True))
+    want = np.asarray(ref.prune_scan_ref(dp, dcc, a2, r))
+    np.testing.assert_array_equal(got, want)
+    assert (got.sum(1) <= r).all()
+
+
+def test_prune_scan_matches_numpy_robust_prune():
+    """Sorted-space scan keep set == the sequential numpy RobustPrune."""
+    from repro.core.graph import robust_prune
+    rng = np.random.default_rng(0)
+    n, d, r, alpha = 80, 16, 8, 1.2
+    data = rng.normal(0, 1, (n, d)).astype(np.float32)
+    p_vec = rng.normal(0, 1, d).astype(np.float32)
+    cand = np.arange(n)
+    want = robust_prune(p_vec, cand, data, r, alpha)
+
+    d_p = np.sum((data - p_vec[None]) ** 2, axis=1).astype(np.float32)
+    order = np.argsort(d_p, kind="stable")
+    dp_s = d_p[order][None]
+    diff = data[order][:, None, :] - data[order][None, :, :]
+    dcc = np.sum(diff * diff, axis=-1).astype(np.float32)[None]
+    keep = np.asarray(ref.prune_scan_ref(
+        jnp.asarray(dp_s), jnp.asarray(dcc), alpha * alpha, r))[0]
+    got = cand[order][keep]        # keeps happen in ascending-distance order
+    np.testing.assert_array_equal(got, want)
+
+
+def test_prune_scan_respects_cap():
+    rng = np.random.default_rng(7)
+    dp, dcc = _prune_inputs(rng, 6, 40, pad_frac=0.0)
+    # alpha=1, zero pairwise distances -> everything dominated by the first
+    keep = np.asarray(ref.prune_scan_ref(
+        dp, jnp.zeros_like(dcc), 1.0, 10))
+    assert (keep.sum(1) == 1).all()
+    # huge alpha -> nothing dominated, cap at r survivors
+    keep = np.asarray(ref.prune_scan_ref(dp, dcc, 1e9, 10))
+    assert (keep.sum(1) == 10).all()
