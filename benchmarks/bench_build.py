@@ -7,6 +7,10 @@ build-perf trajectory is tracked across PRs. The batched builder is timed
 twice: cold (including JIT compilation, what a one-off build pays) and warm
 (steady-state, what any repeated/larger build amortizes to). The
 acceptance bar is ≥5× over the reference with recall@10 within 1%.
+
+``--smoke`` (also ``run(smoke=True)``) builds a tiny corpus end-to-end
+with no perf bars and no JSON output — a bitrot check cheap enough for
+the tier-1-adjacent ``scripts/test_fast.sh`` lane.
 """
 from __future__ import annotations
 
@@ -18,14 +22,29 @@ from repro.core import graph
 from repro.data.synth import make_filtered_dataset
 
 N, D = 12_000, 48
+N_SMOKE = 600
 R, ELL, ALPHA = 24, 48, 1.2
 N_QUERIES = 32
 OUT_PATH = "BENCH_build.json"
 
 
-def run(out_path: str = OUT_PATH) -> list:
-    ds = make_filtered_dataset(n=N, d=D, n_queries=N_QUERIES, seed=0)
+def run(out_path: str = OUT_PATH, smoke: bool = False) -> list:
+    n = N_SMOKE if smoke else N
+    ds = make_filtered_dataset(n=n, d=D, n_queries=N_QUERIES, seed=0)
     data, queries = ds.vectors, ds.queries
+
+    if smoke:
+        adj_b, med_b = graph.build_vamana_batched(data, R, ELL, ALPHA,
+                                                  seed=0)
+        adj_r, med_r = graph.build_vamana(data, R, ELL, ALPHA, seed=0)
+        rec_b = graph.greedy_recall_at_k(data, adj_b, med_b, queries, ell=64)
+        rec_r = graph.greedy_recall_at_k(data, adj_r, med_r, queries, ell=64)
+        # end-to-end sanity only — no timing bars on a shared CI box
+        assert adj_b.shape == adj_r.shape == (n, R)
+        assert rec_b >= 0.5 and rec_r >= 0.5, (rec_b, rec_r)
+        return [BenchResult(name="build/smoke", us_per_call=0.0,
+                            derived={"n": n, "recall_batched": f"{rec_b:.3f}",
+                                     "recall_reference": f"{rec_r:.3f}"})]
 
     t0 = time.time()
     adj_b, med_b = graph.build_vamana_batched(data, R, ELL, ALPHA, seed=0)
@@ -80,3 +99,18 @@ def run(out_path: str = OUT_PATH) -> list:
                     derived={"warm": f"{payload['speedup_warm']:.1f}x",
                              "cold": f"{payload['speedup_cold']:.1f}x"}),
     ]
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny end-to-end run, no perf bars / JSON output")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    for res in run(out_path=args.out, smoke=args.smoke):
+        print(res.csv())
+
+
+if __name__ == "__main__":
+    main()

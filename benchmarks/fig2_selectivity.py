@@ -12,7 +12,7 @@ from repro.core.selectors import RangeSelector
 def run() -> list:
     ds, e, _ = get_engine()
     rs = e.range_store
-    values = np.sort(rs.values)
+    values = rs.field_store(0).sorted_values
     n = values.size
     results = []
     for sel_frac in (0.001, 0.01, 0.05, 0.2, 0.5):

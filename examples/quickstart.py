@@ -1,16 +1,18 @@
 """Quickstart: build a filtered vector index from plain metadata dicts and
-query it through the declarative ``repro.api`` surface.
+query it through the declarative, schema-first ``repro.api`` surface.
 
 The index is built from per-record metadata (no CSR arrays, no Selector
-subclasses); filters are `Tag`/`Num` expressions compiled onto the
-paper's three mechanisms, routed per query by the cost model.
+subclasses) against an explicit ``Schema`` with *two* numeric fields;
+filters are `Tag`/`Num` expressions compiled onto the paper's three
+mechanisms, routed per query by the cost model — multi-field range
+conjunctions included.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.api import (Index, IndexConfig, Num, SearchConfig, SearchRequest,
-                       Tag, recall_at_k)
+from repro.api import (Index, IndexConfig, Num, Schema, SearchConfig,
+                       SearchRequest, Tag, recall_at_k)
 from repro.data.synth import make_filtered_dataset
 
 
@@ -18,25 +20,39 @@ def main():
     print("== PipeANN-Filter quickstart ==")
     ds = make_filtered_dataset(n=4000, d=32, n_queries=8, n_labels=50, seed=1)
 
-    # plain per-record metadata dicts: topic tags + a freshness value
-    metadata = ds.metadata(tag_field="topic", num_field="freshness")
+    # plain per-record metadata dicts: topic tags + two numeric fields
+    # (freshness from the dataset, price synthesized here)
+    rng = np.random.default_rng(3)
+    prices = rng.lognormal(3.0, 0.7, len(ds.vectors)).astype(np.float32)
+    metadata = [
+        {**d, "price": float(p)}
+        for d, p in zip(ds.metadata(tag_field="topic", num_field="freshness"),
+                        prices)
+    ]
+    schema = Schema(tags=["topic"], nums=["freshness", "price"])
     index = Index.build(ds.vectors, metadata,
                         IndexConfig(r=20, r_dense=200, l_build=40, pq_m=8),
+                        schema=schema,
                         defaults=SearchConfig(k=10, l=32))
     e = index.engine
     print(f"built index: N={len(index)} R={e.store.degree} "
-          f"R_d={e.store.dense_degree} "
+          f"R_d={e.store.dense_degree} schema={schema.tags}+{schema.nums} "
           f"pages/record std={e.store.pages_std} "
           f"dense={e.store.pages_dense}")
 
-    # one tag filter + one range filter per query, alternating
+    # alternate single-field filters with a tag ∧ two-numeric-field AND
     requests = []
     for i in range(8):
-        if i % 2 == 0:
+        if i % 3 == 0:
             f = Tag("topic") == int(ds.query_labels[i][0])
-        else:
+        elif i % 3 == 1:
             lo, hi = ds.query_ranges[i]
             f = Num("freshness").between(float(lo), float(hi))
+        else:
+            lo, hi = ds.query_ranges[i]
+            f = ((Tag("topic") == int(ds.query_labels[i][0]))
+                 & Num("freshness").between(float(lo), float(hi))
+                 & (Num("price") < 40.0))
         requests.append(SearchRequest(query=ds.queries[i], filter=f))
 
     results = index.search_batch(requests)
@@ -50,17 +66,20 @@ def main():
     print("routes:", {m: mechs.count(m) for m in set(mechs)})
 
     # streaming inserts: append fresh records through the incremental
-    # batched builder and query them immediately
+    # batched builder and query them immediately (schema stays fixed —
+    # every record carries both numeric fields)
     rng = np.random.default_rng(7)
     new_vecs = ds.vectors[:16] + rng.normal(0, 0.01, (16, 32)) \
         .astype(np.float32)
-    new_meta = [{"topic": "breaking", "freshness": 99.0} for _ in range(16)]
+    new_meta = [{"topic": "breaking", "freshness": 99.0, "price": 12.5}
+                for _ in range(16)]
     new_ids = index.insert(new_vecs, new_meta)
     res = index.search(SearchRequest(
-        query=new_vecs[0], filter=(Tag("topic") == "breaking"), k=5))
+        query=new_vecs[0],
+        filter=(Tag("topic") == "breaking") & (Num("price") < 20.0), k=5))
     hit = int(new_ids[0]) in res.ids.tolist()
     print(f"inserted {len(new_ids)} records (ids {new_ids[0]}..{new_ids[-1]});"
-          f" nearest under its new tag found={hit}")
+          f" nearest under its new tag ∧ price filter found={hit}")
 
 
 if __name__ == "__main__":

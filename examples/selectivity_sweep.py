@@ -3,8 +3,6 @@ routes queries as selectivity moves from 0.1% to 50%.
 
     PYTHONPATH=src python examples/selectivity_sweep.py
 """
-import numpy as np
-
 from repro.api import Num
 from benchmarks.common import get_engine, modeled_qps, run_policy
 
@@ -12,7 +10,7 @@ from benchmarks.common import get_engine, modeled_qps, run_policy
 def main():
     ds, e, build_s = get_engine(n=8000)
     print(f"engine built in {build_s:.0f}s")
-    values = np.sort(e.range_store.values)
+    values = e.range_store.field_store(0).sorted_values
     n = values.size
     print(f"{'selectivity':>12} {'route':>6} {'io/q':>7} {'recall':>7} "
           f"{'QPS(model)':>11}")

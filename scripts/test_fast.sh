@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
 # Inner-loop test run: only tests marked `fast`, skipping the
-# Vamana-build-heavy suites. The tier-1 gate stays the full
+# Vamana-build-heavy suites, plus a tiny end-to-end smoke of the build
+# benchmark (catches benchmark-script bitrot without paying the full
+# 12K-corpus run). The tier-1 gate stays the full
 # `PYTHONPATH=src python -m pytest -x -q`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_build --smoke
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -q -m fast "$@"

@@ -1,9 +1,11 @@
-# The unified public query layer: declarative filters compiled onto the
-# paper's speculative-filtering engine, a metadata-dict index facade, and
-# a batched session scheduler (see docs/api.md).
+# The unified public query layer: a schema-first metadata surface,
+# declarative filters compiled onto the paper's speculative-filtering
+# engine, a metadata-dict index facade, and a batched session scheduler
+# (see docs/api.md).
 from repro.api.filters import (And, FilterExpr, Num, NumRange, Or, Tag,
                                TagIs, compile_expr)
 from repro.api.index import Index
+from repro.api.schema import Schema, UnknownFieldError
 from repro.api.session import PendingSearch, Session, SessionConfig
 from repro.api.types import RequestStats, SearchRequest, SearchResult
 from repro.core.engine import IndexConfig, SearchConfig, recall_at_k
@@ -11,6 +13,7 @@ from repro.core.engine import IndexConfig, SearchConfig, recall_at_k
 __all__ = [
     "And", "FilterExpr", "Num", "NumRange", "Or", "Tag", "TagIs",
     "compile_expr", "Index", "IndexConfig", "SearchConfig",
+    "Schema", "UnknownFieldError",
     "PendingSearch", "Session", "SessionConfig",
     "RequestStats", "SearchRequest", "SearchResult", "recall_at_k",
 ]

@@ -5,19 +5,25 @@ Expressions are built from two field handles::
 
     Tag("topic") == 5                       # categorical equality
     Tag("topic").isin([3, 5, 9])            # membership (OR of equalities)
-    Num("freshness").between(10.0, 90.0)    # numeric range [lo, hi)
-    Num("freshness") < 42.0                 # open-ended ranges
+    Num("price").between(10.0, 90.0)        # numeric range [lo, hi)
+    Num("year") >= 2020                     # open-ended ranges
 
-and composed with ``&`` / ``|`` into an AND/OR tree. ``compile_expr``
-normalizes the tree and lowers it onto the built-in selectors
-(``LabelAndSelector`` / ``LabelOrSelector`` / ``RangeSelector`` and their
-two-way combinators) whenever the shape fits the approximate QueryFilter
+and composed with ``&`` / ``|`` into an AND/OR tree; field names resolve
+against the index :class:`~repro.api.schema.Schema` (unknown names raise
+:class:`~repro.api.schema.UnknownFieldError` at compile time).
+``compile_expr`` normalizes the tree and lowers it onto the built-in
+selectors (``LabelAndSelector`` / ``LabelOrSelector`` / ``RangeSelector``
+and their combinators) whenever the shape fits the approximate QueryFilter
 algebra — so a compiled filter is bit-identical to the hand-built
-equivalent. Shapes the algebra cannot express (nested AND-of-OR trees,
-more labels than the QL query slots, unions of disjoint ranges) fall back
-to an exact host-evaluated :class:`~repro.core.selectors.MaskSelector`,
-which forces the pre-filtering route and thereby preserves the
-no-false-negative guarantee end to end.
+equivalent. Conjunctions may mix one tag group with ranges over up to
+``qr`` distinct numeric fields (same-field ranges intersect into one
+interval first); these compile natively onto the device verification path.
+Shapes the algebra cannot express (nested AND-of-OR trees, more labels
+than the QL query slots, more range fields than the qr predicate slots,
+unions of disjoint ranges) fall back to an exact host-evaluated
+:class:`~repro.core.selectors.MaskSelector`, which forces the
+pre-filtering route and thereby preserves the no-false-negative guarantee
+end to end.
 """
 from __future__ import annotations
 
@@ -27,6 +33,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.api.schema import UnknownFieldError
 from repro.core.selectors import (AndSelector, LabelAndSelector,
                                   LabelOrSelector, MaskSelector, OrSelector,
                                   RangeSelector, Selector)
@@ -134,7 +141,7 @@ def _next_up_f32(x: float) -> float:
 
 
 class Num:
-    """Handle for the numeric metadata field (one per index)."""
+    """Handle for a numeric metadata field (one per ``Schema.nums`` entry)."""
 
     def __init__(self, field: str):
         self.field = field
@@ -167,15 +174,20 @@ class Num:
 # ---------------------------------------------------------------------------
 # The catalog duck type (implemented by api.Index) provides:
 #   label_id(field, value) -> int | None
-#   label_store, range_store, numeric_field, n_vectors, ql
+#   schema, label_store, range_store (MultiRangeStore), n_vectors, ql, qr
 
 
-def _check_numeric_field(expr: FilterExpr, catalog):
+def _check_fields(expr: FilterExpr, catalog):
+    """Compile-time field resolution: every referenced field must exist in
+    the index schema (UnknownFieldError — *not* an empty result or a
+    device-dispatch failure). Unknown tag *values* are legitimate (they
+    match nothing); unknown *fields* are query bugs."""
+    schema = catalog.schema
     for node in _walk(expr):
-        if isinstance(node, NumRange) and node.field != catalog.numeric_field:
-            raise ValueError(
-                f"numeric field {node.field!r} is not indexed "
-                f"(index numeric field: {catalog.numeric_field!r})")
+        if isinstance(node, NumRange):
+            schema.num_index(node.field)
+        elif isinstance(node, TagIs):
+            schema.check_tag(node.field)
 
 
 def _walk(expr: FilterExpr):
@@ -185,16 +197,29 @@ def _walk(expr: FilterExpr):
             yield from _walk(c)
 
 
-def _merge_ranges_and(ranges: Sequence[NumRange]) -> NumRange:
-    lo = max(r.lo for r in ranges)
-    hi = min(r.hi for r in ranges)
-    return NumRange(ranges[0].field, lo, hi)
+def _merge_ranges_and(ranges: Sequence[NumRange]) -> list:
+    """Intersect same-field intervals; one NumRange per distinct field,
+    in first-appearance order."""
+    by_field: dict = {}
+    for r in ranges:
+        if r.field in by_field:
+            prev = by_field[r.field]
+            by_field[r.field] = NumRange(r.field, max(prev.lo, r.lo),
+                                         min(prev.hi, r.hi))
+        else:
+            by_field[r.field] = r
+    return list(by_field.values())
 
 
 def _label_selector(labels: Sequence[int], mode: str, catalog):
     if mode == "or" or len(labels) == 1:
         return LabelOrSelector(catalog.label_store, labels)
     return LabelAndSelector(catalog.label_store, labels)
+
+
+def _range_selector(catalog, rng: NumRange) -> RangeSelector:
+    return RangeSelector(catalog.range_store, rng.lo, rng.hi,
+                         field=catalog.schema.num_index(rng.field))
 
 
 def _try_builtin(expr: FilterExpr, catalog) -> Selector | None:
@@ -205,7 +230,7 @@ def _try_builtin(expr: FilterExpr, catalog) -> Selector | None:
         return None if lab is None else \
             LabelOrSelector(catalog.label_store, [lab])
     if isinstance(expr, NumRange):
-        return RangeSelector(catalog.range_store, expr.lo, expr.hi)
+        return _range_selector(catalog, expr)
 
     if isinstance(expr, (And, Or)):
         tags = [c for c in expr.children if isinstance(c, TagIs)]
@@ -219,16 +244,19 @@ def _try_builtin(expr: FilterExpr, catalog) -> Selector | None:
                 return None                    # unknown tag: matches nothing
             if len(labels) > ql:
                 return None                    # exceeds QL exact-verify slots
-            rng = _merge_ranges_and(ranges) if ranges else None
-            if rng is not None and rng.lo >= rng.hi:
+            rngs = _merge_ranges_and(ranges)
+            if any(r.lo >= r.hi for r in rngs):
                 return None                    # empty interval
-            if labels and rng is None:
+            if len(rngs) > catalog.qr:
+                return None                    # exceeds NR predicate slots
+            if labels and not rngs:
                 return _label_selector(labels, "and", catalog)
-            if rng is not None and not labels:
-                return RangeSelector(catalog.range_store, rng.lo, rng.hi)
-            return AndSelector([_label_selector(labels, "and", catalog),
-                                RangeSelector(catalog.range_store,
-                                              rng.lo, rng.hi)])
+            range_sels = [_range_selector(catalog, r) for r in rngs]
+            if not labels:
+                return range_sels[0] if len(range_sels) == 1 else \
+                    AndSelector(range_sels)
+            return AndSelector([_label_selector(labels, "and", catalog)]
+                               + range_sels)
 
         # Or — unknown-tag arms match nothing and drop out of the union
         known = [l for l in labels if l is not None]
@@ -238,13 +266,11 @@ def _try_builtin(expr: FilterExpr, catalog) -> Selector | None:
             return None if not known else \
                 _label_selector(known, "or", catalog)
         if len(ranges) > 1:
-            return None                        # disjoint-range unions
+            return None                        # unions of multiple ranges
         if not known:
-            return RangeSelector(catalog.range_store, ranges[0].lo,
-                                 ranges[0].hi)
+            return _range_selector(catalog, ranges[0])
         return OrSelector([_label_selector(known, "or", catalog),
-                           RangeSelector(catalog.range_store,
-                                         ranges[0].lo, ranges[0].hi)])
+                           _range_selector(catalog, ranges[0])])
     return None
 
 
@@ -265,7 +291,8 @@ def eval_mask(expr: FilterExpr | None, catalog) -> tuple[np.ndarray, int]:
         mask[catalog.label_store.postings(lab)] = True
         return mask, catalog.label_store.posting_pages(lab)
     if isinstance(expr, NumRange):
-        ids, pages = catalog.range_store.scan(expr.lo, expr.hi)
+        ids, pages = catalog.range_store.scan(
+            expr.lo, expr.hi, field=catalog.schema.num_index(expr.field))
         mask = np.zeros(n, bool)
         mask[ids] = True
         return mask, pages
@@ -292,7 +319,7 @@ def compile_expr(expr: FilterExpr, catalog) -> Selector:
                         "compare it (==, .isin, .between, <, >=, …) first")
     if not isinstance(expr, FilterExpr):
         raise TypeError(f"cannot compile {expr!r}")
-    _check_numeric_field(expr, catalog)
+    _check_fields(expr, catalog)
     sel = _try_builtin(expr, catalog)
     if sel is not None:
         return sel

@@ -1,13 +1,16 @@
 """``Index`` — the public facade over the filtered-ANN engine.
 
-Callers hand over vectors plus one plain metadata dict per record;
-the facade owns the tag vocabulary, CSR label arrays, attribute stores,
-and the engine build. Categorical values (str/int/bool, or lists thereof)
-become labels in a per-field namespace; at most one float field becomes
-the numeric range attribute.
+Callers hand over vectors plus one plain metadata dict per record; the
+facade owns the attribute :class:`~repro.api.schema.Schema`, the tag
+vocabulary, CSR label arrays, attribute stores, and the engine build.
+Categorical values (str/int/bool, or lists thereof) become labels in a
+per-field namespace; every ``Schema.nums`` field becomes one column of
+the dense ``(n, F)`` numeric value matrix — queries may then AND range
+predicates over several numeric fields and still compile onto the device
+verification path.
 
 The facade is also the DSL compiler's catalog: ``Tag``/``Num`` expressions
-resolve against its vocabulary, and results come back with metadata
+resolve against its schema/vocabulary, and results come back with metadata
 re-resolved from the attribute stores (so ``save``/``load`` round-trips
 need no sidecar record storage).
 """
@@ -21,20 +24,22 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.filters import (FilterExpr, _check_numeric_field,
-                               compile_expr, eval_mask)
+from repro.api.filters import (FilterExpr, _check_fields, compile_expr,
+                               eval_mask)
+from repro.api.schema import Schema
 from repro.api.types import RequestStats, SearchRequest, SearchResult
 from repro.ckpt import checkpoint as ckpt
 from repro.core import pq as pq_mod
 from repro.core.engine import (FilteredANNEngine, IndexConfig, QueryStats,
                                SearchConfig)
 from repro.core.labels import LabelStore, build_label_store
-from repro.core.ranges import RangeStore, build_range_store
+from repro.core.ranges import MultiRangeStore, RangeStore
 from repro.core.records import RecordStore
 from repro.core.selectors import (InMemory, MaskSelector, MatchAllSelector,
                                   Selector)
 
 _META_FILE = "index_meta.json"
+_FORMAT = 2          # checkpoint format: 2 = schema-first multi-field
 
 
 def _is_numeric(v) -> bool:
@@ -53,48 +58,47 @@ def _norm_tag(v):
                     "(tags must be str/int/bool)")
 
 
-def _ingest_metadata(metadata: Sequence[dict], numeric_field: Optional[str],
-                     vocab: Optional[dict] = None,
-                     infer_numeric: bool = True):
-    """Plain per-record dicts -> (vocab, CSR labels, values, numeric_field).
+def _ingest_metadata(metadata: Sequence[dict], schema: Schema,
+                     vocab: Optional[dict] = None):
+    """Plain per-record dicts -> (vocab, CSR labels, (n, F) values).
 
     Pass an existing ``vocab`` to extend it in place (the insert path:
     unseen (field, value) pairs get fresh label ids appended after the
-    build-time vocabulary). With ``infer_numeric=False`` the numeric field
-    is taken as given — records introducing new float fields then fail the
-    float-in-tag-field check below, which is exactly what a live index
-    needs (its dense range store cannot grow a column retroactively).
+    build-time vocabulary). The schema is strict: every record must carry
+    every numeric field (the value matrix is dense), tag fields may be
+    sparse, and keys outside the schema are rejected — a live index cannot
+    grow an attribute column retroactively.
     """
-    if infer_numeric and numeric_field is None:
-        numeric = set()
-        for d in metadata:
-            for key, v in d.items():
-                if _is_numeric(v):
-                    numeric.add(key)
-        if len(numeric) > 1:
-            raise ValueError(
-                f"multiple float fields {sorted(numeric)}: pass "
-                "numeric_field= to pick the range attribute")
-        numeric_field = numeric.pop() if numeric else None
-
     if vocab is None:
         vocab = {}              # (field, value) -> label id
+    num_col = {f: j for j, f in enumerate(schema.nums)}
     flat: list = []
     offsets = np.zeros(len(metadata) + 1, np.int64)
-    values = np.zeros(len(metadata), np.float32)
+    values = np.zeros((len(metadata), schema.n_fields), np.float32)
     for i, d in enumerate(metadata):
         n_tags = 0
         seen: set = set()       # dedupe repeated tags within one record
         for key, v in d.items():
-            if key == numeric_field:
-                values[i] = float(v)
+            if key in num_col:
+                if not _is_numeric(v) and not isinstance(v, (int, np.integer)) \
+                        or isinstance(v, bool):
+                    raise ValueError(
+                        f"record {i}: numeric field {key!r} holds "
+                        f"non-numeric value {v!r}")
+                values[i, num_col[key]] = float(v)
                 continue
+            if key not in schema.tags:
+                kind = "numeric" if _is_numeric(v) else "tag"
+                raise ValueError(
+                    f"record {i}: field {key!r} is not in the index schema "
+                    f"(tags={list(schema.tags)}, nums={list(schema.nums)}); "
+                    f"a new {kind} field cannot be added to a built index")
             for tag in (v if isinstance(v, (list, tuple, set, frozenset))
                         else (v,)):
                 if _is_numeric(tag):
                     raise ValueError(
                         f"record {i}: float value in tag field {key!r} "
-                        f"(numeric field is {numeric_field!r})")
+                        f"(numeric fields: {list(schema.nums)})")
                 pair = (key, _norm_tag(tag))
                 if pair in seen:
                     continue
@@ -102,25 +106,26 @@ def _ingest_metadata(metadata: Sequence[dict], numeric_field: Optional[str],
                 lab = vocab.setdefault(pair, len(vocab))
                 flat.append(lab)
                 n_tags += 1
-        if numeric_field is not None and numeric_field not in d:
-            raise ValueError(
-                f"record {i} is missing the numeric field "
-                f"{numeric_field!r}; every record needs a value "
-                "(the range store is dense)")
+        for f in schema.nums:
+            if f not in d:
+                raise ValueError(
+                    f"record {i} is missing the numeric field "
+                    f"{f!r}; every record needs a value "
+                    "(the range store is dense)")
         offsets[i + 1] = offsets[i] + n_tags
     label_flat = np.asarray(flat, np.int32)
-    return vocab, offsets, label_flat, values, numeric_field
+    return vocab, offsets, label_flat, values
 
 
 class Index:
-    """Filtered vector index with a declarative query surface."""
+    """Filtered vector index with a declarative, schema-first query surface."""
 
     def __init__(self, engine: FilteredANNEngine, vocab: dict,
-                 numeric_field: Optional[str],
+                 schema: Schema,
                  defaults: SearchConfig = SearchConfig()):
         self.engine = engine
         self.vocab = vocab                      # (field, value) -> label id
-        self.numeric_field = numeric_field
+        self.schema = schema
         self.defaults = defaults
         self._label_names = [None] * len(vocab)  # label id -> (field, value)
         for (field, value), lab in vocab.items():
@@ -130,30 +135,53 @@ class Index:
     @classmethod
     def build(cls, vectors: np.ndarray, metadata: Sequence[dict],
               config: IndexConfig = IndexConfig(),
+              schema: Optional[Schema] = None,
               numeric_field: Optional[str] = None,
               defaults: SearchConfig = SearchConfig()) -> "Index":
+        """Build an index over ``vectors`` + per-record metadata dicts.
+
+        ``schema`` declares the attribute fields explicitly; when omitted
+        it is inferred from the metadata (float values ⇒ numeric fields,
+        everything else ⇒ tag fields). ``numeric_field`` is the deprecated
+        single-field spelling — it pins ``Schema.nums`` to that one field
+        and will be removed after one release; pass a Schema instead.
+        """
         vectors = np.asarray(vectors, np.float32)
         if len(metadata) != vectors.shape[0]:
             raise ValueError(f"{vectors.shape[0]} vectors but "
                              f"{len(metadata)} metadata dicts")
-        vocab, offsets, label_flat, values, numeric_field = \
-            _ingest_metadata(metadata, numeric_field)
+        if schema is None:
+            if numeric_field is not None:
+                # legacy spelling: skip inference entirely (as the
+                # pre-schema path did) — the named field is the one
+                # numeric column, every other key is a tag field
+                fields = {k for d in metadata for k in d}
+                schema = Schema(tags=tuple(sorted(fields
+                                                  - {numeric_field})),
+                                nums=(numeric_field,))
+            else:
+                schema = Schema.infer(metadata)
+        elif numeric_field is not None:
+            raise ValueError("pass either schema= or the deprecated "
+                             "numeric_field=, not both")
+        vocab, offsets, label_flat, values = _ingest_metadata(metadata,
+                                                              schema)
         engine = FilteredANNEngine.build(
             vectors, offsets, label_flat, max(1, len(vocab)), values, config)
-        return cls(engine, vocab, numeric_field, defaults)
+        return cls(engine, vocab, schema, defaults)
 
     def insert(self, vectors: np.ndarray,
                metadata: Sequence[dict]) -> np.ndarray:
         """Append records to a live index (streaming inserts).
 
         New nodes are linked through the engine's incremental batched build
-        path; tag values unseen at build time extend the vocabulary. If the
-        index has a numeric range field every inserted record must carry
-        it; an index built without one rejects float metadata values.
-        Returns the assigned record ids (contiguous, ``len(index)`` before
-        the call onward). Previously compiled ``Selector`` objects hold the
-        pre-insert attribute stores — recompile filters (or go through the
-        DSL, which compiles per search) after inserting.
+        path; tag values unseen at build time extend the vocabulary (the
+        *schema* is fixed — records must carry every ``Schema.nums`` field
+        and may not introduce new fields). Returns the assigned record ids
+        (contiguous, ``len(index)`` before the call onward). Previously
+        compiled ``Selector`` objects hold the pre-insert attribute stores
+        — recompile filters (or go through the DSL, which compiles per
+        search) after inserting.
         """
         vectors = np.asarray(vectors, np.float32)
         if vectors.ndim != 2:
@@ -164,9 +192,8 @@ class Index:
         if vectors.shape[0] == 0:
             return np.zeros(0, np.int64)
         new_vocab = dict(self.vocab)
-        new_vocab, offsets, label_flat, values, _ = _ingest_metadata(
-            metadata, self.numeric_field, vocab=new_vocab,
-            infer_numeric=False)
+        new_vocab, offsets, label_flat, values = _ingest_metadata(
+            metadata, self.schema, vocab=new_vocab)
         ids = self.engine.insert(vectors, offsets, label_flat,
                                  max(1, len(new_vocab)), values)
         # commit the vocabulary only after the engine accepted the batch
@@ -184,7 +211,7 @@ class Index:
         return self.engine.label_store
 
     @property
-    def range_store(self) -> RangeStore:
+    def range_store(self) -> MultiRangeStore:
         return self.engine.range_store
 
     @property
@@ -197,11 +224,21 @@ class Index:
 
     @property
     def n_vectors(self) -> int:
-        return self.engine.store.n
+        return self.engine.n
 
     @property
     def ql(self) -> int:
         return self.engine.config.ql
+
+    @property
+    def qr(self) -> int:
+        return self.engine.config.qr
+
+    @property
+    def numeric_field(self) -> Optional[str]:
+        """Deprecated single-field accessor: the first schema numeric
+        field (None when the index has none). Use ``index.schema.nums``."""
+        return self.schema.nums[0] if self.schema.nums else None
 
     def label_id(self, field: str, value) -> Optional[int]:
         try:
@@ -230,8 +267,9 @@ class Index:
                 out[field] = sorted(prev + [value], key=repr)
             else:
                 out[field] = value
-        if self.numeric_field is not None:
-            out[self.numeric_field] = float(self.range_store.values[rec_id])
+        for j, field in enumerate(self.schema.nums):
+            out[field] = float(
+                self.range_store.field_store(j).values[rec_id])
         return out
 
     # -- query path ------------------------------------------------------
@@ -280,29 +318,34 @@ class Index:
         return self.search_batch([request])[0]
 
     def ground_truth(self, request: SearchRequest) -> np.ndarray:
-        """Exact filtered top-k ids by brute force (for recall evaluation)."""
+        """Exact filtered top-k ids by brute force (for recall evaluation).
+
+        Store arrays are trimmed to the valid record count — after inserts
+        the capacity-padded device arrays carry unreachable pad rows that
+        must not enter the host scan."""
         from repro.core.engine import brute_force_filtered
         k = request.k if request.k is not None else self.defaults.k
+        n = self.n_vectors
         q = np.asarray(request.query, np.float32).reshape(-1)
         if q.shape[0] > self.dim:
             raise ValueError(f"query dim {q.shape[0]} exceeds index "
                              f"dim {self.dim}")
         if q.shape[0] != self.dim:
             q = np.pad(q, (0, self.dim - q.shape[0]))
-        vecs = np.asarray(self.store.vectors)
+        vecs = np.asarray(self.store.vectors)[:n]
         f = request.filter
         if f is None or isinstance(f, FilterExpr):
             if f is not None:
-                _check_numeric_field(f, self)
+                _check_fields(f, self)
             mask, _ = eval_mask(f, self)
         elif isinstance(f, MaskSelector):
-            mask = np.zeros(self.n_vectors, bool)
+            mask = np.zeros(n, bool)
             mask[f.valid_ids] = True
         elif isinstance(f, Selector):
-            plan = f.plan(self.config.ql, self.config.cap)
+            plan = f.plan(self.config.ql, self.config.cap, self.config.qr)
             return brute_force_filtered(
-                vecs, np.asarray(self.store.rec_labels),
-                np.asarray(self.store.rec_values), plan.qfilter, q, k)
+                vecs, np.asarray(self.store.rec_labels)[:n],
+                np.asarray(self.store.rec_values)[:n], plan.qfilter, q, k)
         else:
             raise TypeError(f"unsupported filter {f!r}")
         d = np.sum((vecs - q[None, :]) ** 2, axis=1)
@@ -312,38 +355,47 @@ class Index:
 
     # -- persistence -----------------------------------------------------
     def _array_tree(self) -> dict:
+        """Checkpoint leaves (format 2). Device arrays are trimmed to the
+        valid record count — capacity pads are a live-index artifact, not
+        index state. Per-field range structures save stacked: (F, n) sorted
+        indexes, (F, B+1) bounds, (F, Q) quantiles, (n, F) values/codes."""
         e = self.engine
+        n = e.n
         ls, rs = e.label_store, e.range_store
         return {
-            "store_vectors": np.asarray(e.store.vectors),
-            "store_neighbors": np.asarray(e.store.neighbors),
-            "store_dense_neighbors": np.asarray(e.store.dense_neighbors),
-            "store_rec_labels": np.asarray(e.store.rec_labels),
-            "store_rec_values": np.asarray(e.store.rec_values),
-            "pq_codes": np.asarray(e.codes),
+            "store_vectors": np.asarray(e.store.vectors)[:n],
+            "store_neighbors": np.asarray(e.store.neighbors)[:n],
+            "store_dense_neighbors": np.asarray(e.store.dense_neighbors)[:n],
+            "store_rec_labels": np.asarray(e.store.rec_labels)[:n],
+            "store_rec_values": np.asarray(e.store.rec_values)[:n],
+            "pq_codes": np.asarray(e.codes)[:n],
             "pq_centroids": np.asarray(e.codebook.centroids),
             "ls_vec_offsets": ls.vec_offsets, "ls_vec_labels": ls.vec_labels,
             "ls_inv_offsets": ls.inv_offsets,
             "ls_inv_postings": ls.inv_postings,
             "ls_label_counts": ls.label_counts, "ls_blooms": ls.blooms,
-            "rs_values": rs.values, "rs_sorted_values": rs.sorted_values,
-            "rs_sorted_ids": rs.sorted_ids,
-            "rs_bucket_bounds": rs.bucket_bounds,
-            "rs_bucket_codes": rs.bucket_codes, "rs_quantiles": rs.quantiles,
+            "rs_values": rs.values,
+            "rs_sorted_values": np.stack([s.sorted_values
+                                          for s in rs.stores]),
+            "rs_sorted_ids": np.stack([s.sorted_ids for s in rs.stores]),
+            "rs_bucket_bounds": np.stack([s.bucket_bounds
+                                          for s in rs.stores]),
+            "rs_bucket_codes": rs.bucket_codes,
+            "rs_quantiles": np.stack([s.quantiles for s in rs.stores]),
         }
 
     def save(self, path: str):
         """Persist via the ckpt subsystem (atomic step dir + manifest) plus
-        a JSON sidecar for the vocabulary and static config."""
+        a JSON sidecar for the schema, vocabulary, and static config."""
         tree = self._array_tree()
         ckpt.save(path, step=0, tree=tree, async_write=False, keep_last=1)
         e = self.engine
         meta = {
-            "format": 1,
+            "format": _FORMAT,
             "config": dataclasses.asdict(e.config),
             "defaults": dataclasses.asdict(self.defaults),
             "medoid": int(e.medoid),
-            "numeric_field": self.numeric_field,
+            "schema": self.schema.to_json(),
             "codebook_dim": int(e.codebook.dim),
             "pages_std": int(e.store.pages_std),
             "pages_dense": int(e.store.pages_dense),
@@ -358,6 +410,13 @@ class Index:
 
     @classmethod
     def load(cls, path: str) -> "Index":
+        """Load a saved index.
+
+        Format-1 checkpoints (the pre-schema single-numeric-field layout:
+        flat ``(n,)`` range arrays + a ``numeric_field`` name) are mapped
+        onto the F=1 case of the multi-field layout by a one-release
+        back-compat shim — a legacy index loads and answers unchanged.
+        """
         with open(os.path.join(path, _META_FILE)) as fh:
             meta = json.load(fh)
         import jax
@@ -366,6 +425,9 @@ class Index:
                   for k, v in meta["arrays"].items()}
         t = ckpt.restore(path, 0, target)
         t = {k: np.asarray(v) for k, v in t.items()}
+        legacy = meta.get("format", 1) < 2
+        if legacy:
+            t, meta = _shim_legacy_checkpoint(t, meta)
 
         store = RecordStore(
             vectors=jnp.asarray(t["store_vectors"]),
@@ -381,12 +443,15 @@ class Index:
             inv_postings=t["ls_inv_postings"],
             label_counts=t["ls_label_counts"], blooms=t["ls_blooms"],
             k_hashes=meta["k_hashes"])
-        range_store = RangeStore(
-            n_vectors=store.n, values=t["rs_values"],
-            sorted_values=t["rs_sorted_values"],
-            sorted_ids=t["rs_sorted_ids"],
-            bucket_bounds=t["rs_bucket_bounds"],
-            bucket_codes=t["rs_bucket_codes"], quantiles=t["rs_quantiles"])
+        range_store = MultiRangeStore([
+            RangeStore(
+                n_vectors=store.n, values=t["rs_values"][:, j],
+                sorted_values=t["rs_sorted_values"][j],
+                sorted_ids=t["rs_sorted_ids"][j],
+                bucket_bounds=t["rs_bucket_bounds"][j],
+                bucket_codes=t["rs_bucket_codes"][:, j],
+                quantiles=t["rs_quantiles"][j])
+            for j in range(t["rs_values"].shape[1])])
         codebook = pq_mod.PQCodebook(
             centroids=jnp.asarray(t["pq_centroids"]),
             dim=meta["codebook_dim"])
@@ -396,5 +461,30 @@ class Index:
             store, jnp.asarray(t["pq_codes"]), codebook, mem, label_store,
             range_store, meta["medoid"], IndexConfig(**meta["config"]))
         vocab = {(f, v): lab for f, v, lab in meta["vocab"]}
-        return cls(engine, vocab, meta["numeric_field"],
+        return cls(engine, vocab, Schema.from_json(meta["schema"]),
                    SearchConfig(**meta["defaults"]))
+
+
+def _shim_legacy_checkpoint(t: dict, meta: dict) -> tuple[dict, dict]:
+    """Map a format-1 (single numeric field) checkpoint onto F=1 arrays.
+
+    Legacy layout: ``store_rec_values``/``rs_values``/``rs_bucket_codes``
+    are flat ``(n,)``, per-field structures have no leading F axis, and the
+    sidecar names a ``numeric_field`` instead of a schema. Tag fields are
+    reconstructed from the vocabulary (legacy metas stored no field list).
+    """
+    t = dict(t)
+    meta = dict(meta)
+    for key in ("store_rec_values", "rs_values", "rs_bucket_codes"):
+        if t[key].ndim == 1:
+            t[key] = t[key][:, None]
+    for key in ("rs_sorted_values", "rs_sorted_ids", "rs_bucket_bounds",
+                "rs_quantiles"):
+        if t[key].ndim == 1:
+            t[key] = t[key][None]
+    numeric_field = meta.pop("numeric_field", None)
+    tag_fields = sorted({f for f, _, _ in meta["vocab"]})
+    meta["schema"] = {"tags": tag_fields,
+                      "nums": [numeric_field] if numeric_field else []}
+    meta["format"] = _FORMAT
+    return t, meta

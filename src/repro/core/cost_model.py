@@ -17,6 +17,20 @@ import dataclasses
 GAMMA = 0.05   # relative cost of is_member_approx vs one distance comparison
 
 
+def joint_and_selectivity(margins) -> float:
+    """Joint selectivity of a conjunction from per-predicate marginals.
+
+    Independence product clamped to [0, 1] — the ceiling guards inflated
+    marginal estimates; the selectivity-scaled pool formulas (L/s) apply
+    their own 1e-9 floor downstream. Used by AndSelector and the filter
+    compiler for multi-field range conjunctions.
+    """
+    s = 1.0
+    for m in margins:
+        s *= float(m)
+    return float(min(1.0, max(s, 0.0)))
+
+
 @dataclasses.dataclass(frozen=True)
 class CostInputs:
     n: int            # dataset size

@@ -147,7 +147,8 @@ def distributed_filtered_search(plan: ShardPlan, store: RecordStore,
         return jax.tree_util.tree_map(lambda l: P(*([None] * jnp.ndim(l))),
                                       tree)
 
-    in_specs = ((P(ax, None), P(ax, None), P(ax, None), P(ax, None), P(ax))
+    in_specs = ((P(ax, None), P(ax, None), P(ax, None), P(ax, None),
+                 P(ax, None))
                 + (rep(codes), rep(codebook.centroids), rep(mem),
                    rep(qfilters), rep(queries)))
     # output structure from the local variant (eval_shape must not trace the

@@ -24,8 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model, graph, pq as pq_mod, prefilter, search
-from repro.core.labels import LabelStore, build_label_store, padded_vec_labels
-from repro.core.ranges import RangeStore, build_range_store
+from repro.core.labels import (LabelStore, build_label_store,
+                               extend_label_store, padded_rows_from_csr,
+                               padded_vec_labels)
+from repro.core.ranges import (MultiRangeStore, RangeStore,
+                               build_multi_range_store)
 from repro.core.records import RecordStore, make_record_store
 from repro.core.selectors import (InMemory, Selector, stack_filters)
 
@@ -40,6 +43,7 @@ class IndexConfig:
     pq_iters: int = 8
     max_labels: int = 16      # per-record label slots (exact verification)
     ql: int = 8               # max labels per query
+    qr: int = 4               # range-predicate slots per query (NR)
     cap: int = 2048           # merged rare-list capacity
     seed: int = 0
     builder: str = "batched"  # 'batched' (device pipeline) | 'reference'
@@ -85,7 +89,7 @@ class QueryStats:
 
 class FilteredANNEngine:
     def __init__(self, store: RecordStore, codes, codebook, mem: InMemory,
-                 label_store: LabelStore, range_store: RangeStore,
+                 label_store: LabelStore, range_store: MultiRangeStore,
                  medoid: int, config: IndexConfig):
         self.store = store
         self.codes = codes
@@ -95,13 +99,20 @@ class FilteredANNEngine:
         self.range_store = range_store
         self.medoid = medoid
         self.config = config
+        self.n = label_store.n_vectors  # valid records (store may hold pads)
         self._builder = None      # lazy IncrementalBuilder (insert path)
+
+    @property
+    def n_fields(self) -> int:
+        return self.range_store.n_fields
 
     # ------------------------------------------------------------------
     @classmethod
     def build(cls, vectors: np.ndarray, label_offsets: np.ndarray,
               label_flat: np.ndarray, n_labels: int, values: np.ndarray,
               config: IndexConfig = IndexConfig()) -> "FilteredANNEngine":
+        """``values`` is the numeric attribute matrix, (n, F) — a flat
+        (n,) array is accepted as the single-field F=1 case."""
         vectors = np.asarray(vectors, np.float32)
         n, d = vectors.shape
         # pad dim to a multiple of pq_m
@@ -123,11 +134,11 @@ class FilteredANNEngine:
         dense = graph.densify_2hop(adj, config.r_dense, seed=config.seed + 1)
 
         label_store = build_label_store(label_offsets, label_flat, n_labels)
-        range_store = build_range_store(values)
+        range_store = build_multi_range_store(values)
         rec_labels = padded_vec_labels(label_store, config.max_labels)
 
         store = make_record_store(vectors, adj, dense, rec_labels,
-                                  values.astype(np.float32))
+                                  range_store.values)
 
         key = jax.random.PRNGKey(config.seed)
         codebook = pq_mod.train_pq(key, jnp.asarray(vectors), config.pq_m,
@@ -145,12 +156,18 @@ class FilteredANNEngine:
         """Append records through the incremental batched build path.
 
         New nodes are linked by a single final-α pass (greedy search from
-        the medoid → batched RobustPrune → reverse-edge scatter); the
-        attribute stores, 2-hop densification, PQ codes, and in-memory
-        summaries are rebuilt over the grown corpus (vectorized, O(N)).
-        The PQ codebook is *not* retrained — inserted vectors are encoded
-        against the build-time centroids. Inserts always link through the
-        batched pipeline regardless of ``config.builder`` — a
+        the medoid → batched RobustPrune → reverse-edge scatter). Stores
+        are **capacity-padded**: device arrays are allocated at the
+        builder's geometric capacity (pad rows unreachable — no edge points
+        at them, labels -1, values 0) and new rows are written in place, so
+        steady-state inserts keep every array shape stable and the search
+        path compiles once instead of re-specializing per insert. Host
+        attribute summaries extend incrementally (label postings merge at
+        run ends, per-field sorted indexes merge via searchsorted; bucket
+        boundaries stay fixed so approx codes remain comparable). The PQ
+        codebook is *not* retrained — inserted vectors are encoded against
+        the build-time centroids. Inserts always link through the batched
+        pipeline regardless of ``config.builder`` — a
         ``builder='reference'`` graph becomes mixed after the first insert
         (fine for serving; rebuild if you need a pure oracle graph for
         A/B comparisons). Returns the new record ids.
@@ -172,41 +189,102 @@ class FilteredANNEngine:
         if vectors.shape[1] < self.store.dim:
             vectors = np.pad(
                 vectors, ((0, 0), (0, self.store.dim - vectors.shape[1])))
+        values = np.asarray(values, np.float32)
+        if values.ndim == 1:
+            values = values[:, None]
+        if values.shape != (m, self.n_fields):
+            raise ValueError(
+                f"expected ({m}, {self.n_fields}) values, got {values.shape}")
         if self._builder is None:
             self._builder = graph.IncrementalBuilder(
-                np.asarray(self.store.vectors),
-                np.asarray(self.store.neighbors), self.medoid,
+                np.asarray(self.store.vectors)[:self.n],
+                np.asarray(self.store.neighbors)[:self.n], self.medoid,
                 ell=cfg.l_build, alpha=cfg.alpha)
+        n0 = self.n
         ids = self._builder.add_batch(vectors)
-        adj = self._builder.adjacency
-        data_all = self._builder.data
 
-        ls = self.label_store
-        label_offsets = np.asarray(label_offsets, np.int64)
-        offsets = np.concatenate(
-            [ls.vec_offsets, ls.vec_offsets[-1] + label_offsets[1:]])
-        flat = np.concatenate(
-            [ls.vec_labels, np.asarray(label_flat, np.int32)])
-        self.label_store = build_label_store(
-            offsets, flat, max(ls.n_labels, int(n_labels)))
-        values_all = np.concatenate(
-            [self.range_store.values, np.asarray(values, np.float32)])
-        self.range_store = build_range_store(values_all)
-        rec_labels = padded_vec_labels(self.label_store, cfg.max_labels)
-        dense = graph.densify_2hop(adj, cfg.r_dense, seed=cfg.seed + 1)
-        self.store = make_record_store(data_all, adj, dense, rec_labels,
-                                       values_all)
-        new_codes = pq_mod.encode_pq(self.codebook, jnp.asarray(vectors))
-        self.codes = jnp.concatenate([self.codes, new_codes])
-        self.mem = InMemory(blooms=jnp.asarray(self.label_store.blooms),
-                            bucket_codes=jnp.asarray(
-                                self.range_store.bucket_codes))
+        # host attribute summaries: incremental extension (no rebuild)
+        self.label_store = extend_label_store(
+            self.label_store, np.asarray(label_offsets, np.int64),
+            np.asarray(label_flat, np.int32), int(n_labels))
+        self.range_store = self.range_store.append(values)
+
+        self._refresh_padded_stores(n0, m, vectors)
+        self.n = n0 + m
         return ids
+
+    def _refresh_padded_stores(self, n0: int, m: int, new_vectors):
+        """Sync the capacity-padded device tier after a host-store extend.
+
+        When capacity is unchanged (the steady state) only the m new rows
+        are written; a capacity growth reallocates every array once at the
+        new capacity. ``dense_neighbors`` is resampled over the grown graph
+        either way — edges of *existing* nodes change when inserts scatter
+        reverse edges into them.
+        """
+        cfg = self.config
+        cap = self._builder.capacity
+        n_new = n0 + m
+        adj_dev = self._builder.adjacency_device          # (cap, R)
+        dense = graph.densify_2hop(np.asarray(adj_dev), cfg.r_dense,
+                                   seed=cfg.seed + 1)
+        # new rows come from the *extended* label store's CSR slice, which
+        # has already deduped (vector, label) pairs — padding the raw input
+        # instead could drop a real label past the max_labels slots that
+        # the host inverted index still serves (false negatives)
+        ls = self.label_store
+        row_start = int(ls.vec_offsets[n0])
+        new_rec_labels = padded_rows_from_csr(
+            ls.vec_offsets[n0:] - row_start, ls.vec_labels[row_start:],
+            cfg.max_labels)
+        # slice per field, then stack: the MultiRangeStore matrix properties
+        # materialize all N rows — O(m·F) here, not O(N·F) per insert
+        new_values = np.stack([s.values[n0:n_new]
+                               for s in self.range_store.stores], axis=1)
+        new_codes = pq_mod.encode_pq(self.codebook, jnp.asarray(new_vectors))
+        new_blooms = ls.blooms[n0:n_new]
+        new_buckets = np.stack([s.bucket_codes[n0:n_new]
+                                for s in self.range_store.stores], axis=1)
+
+        grown = self.store.vectors.shape[0] != cap
+        if grown:
+            def pad_to_cap(arr_np, fill, dtype):
+                out = np.full((cap,) + arr_np.shape[1:], fill, dtype)
+                out[:arr_np.shape[0]] = arr_np
+                return jnp.asarray(out)
+
+            rec_labels = pad_to_cap(
+                np.asarray(self.store.rec_labels)[:n0], -1, np.int32)
+            rec_values = pad_to_cap(
+                np.asarray(self.store.rec_values)[:n0], 0.0, np.float32)
+            codes = pad_to_cap(np.asarray(self.codes)[:n0], 0, np.uint8)
+            blooms = pad_to_cap(
+                np.asarray(self.mem.blooms)[:n0], 0, np.uint32)
+            buckets = pad_to_cap(
+                np.asarray(self.mem.bucket_codes)[:n0], 0, np.uint8)
+        else:
+            rec_labels = self.store.rec_labels
+            rec_values = self.store.rec_values
+            codes = self.codes
+            blooms = self.mem.blooms
+            buckets = self.mem.bucket_codes
+
+        rec_labels = rec_labels.at[n0:n_new].set(jnp.asarray(new_rec_labels))
+        rec_values = rec_values.at[n0:n_new].set(jnp.asarray(new_values))
+        self.codes = codes.at[n0:n_new].set(new_codes)
+        self.mem = InMemory(
+            blooms=blooms.at[n0:n_new].set(jnp.asarray(new_blooms)),
+            bucket_codes=buckets.at[n0:n_new].set(jnp.asarray(new_buckets)))
+        self.store = RecordStore(
+            vectors=self._builder.data_device, neighbors=adj_dev,
+            dense_neighbors=jnp.asarray(dense), rec_labels=rec_labels,
+            rec_values=rec_values, pages_std=self.store.pages_std,
+            pages_dense=self.store.pages_dense)
 
     # ------------------------------------------------------------------
     def _route(self, plan, scfg: SearchConfig) -> cost_model.Route:
         c = cost_model.CostInputs(
-            n=self.store.n, l=scfg.l, s=plan.selectivity,
+            n=self.n, l=scfg.l, s=plan.selectivity,
             p_pre=plan.precision_pre, p_in=plan.precision_in,
             x_pre=plan.pages_prescan, x_in=plan.pages_prefetch,
             r=self.store.degree,
@@ -257,7 +335,7 @@ class FilteredANNEngine:
         assert len(selectors) == B and len(scfgs) == B
         cfg = self.config
 
-        plans = [s.plan(cfg.ql, cfg.cap) for s in selectors]
+        plans = [s.plan(cfg.ql, cfg.cap, cfg.qr) for s in selectors]
         routes = [self._route(p, sc) for p, sc in zip(plans, scfgs)]
 
         out_ids: list = [None] * B
@@ -290,8 +368,12 @@ class FilteredANNEngine:
             sub_sel = [selectors[i] for i in idxs]
             sub_qf = stack_filters([plans[i].qfilter for i in idxs])
             if mech == "pre":
+                # the re-rank pool scales with the superset's precision
+                # (effective_l = L/p_pre + L): a speculative AND scans only
+                # its cheapest branch, so only ~p_pre of the superset is
+                # valid — L+δ alone would starve multi-predicate queries
                 pp = prefilter.PrefilterParams(
-                    l_rerank=scfg.l + scfg.l_rerank_delta, k=scfg.k)
+                    l_rerank=eff_l + scfg.l_rerank_delta, k=scfg.k)
                 res = prefilter.prefilter_search(
                     self.store, self.codes, self.codebook, sub_sel, sub_qf,
                     sub_q, pp, speculative=not strict)

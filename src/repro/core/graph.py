@@ -532,6 +532,25 @@ class IncrementalBuilder:
     def data(self) -> np.ndarray:
         return self._data_host[:self.n]
 
+    @property
+    def capacity(self) -> int:
+        """Allocated rows; grows geometrically, ≥ n."""
+        return self._cap
+
+    @property
+    def data_device(self) -> "jax.Array":
+        """(capacity, D) device vectors — rows ≥ n are zero pads."""
+        return self._data_dev
+
+    @property
+    def adjacency_device(self) -> "jax.Array":
+        """(capacity, R) device adjacency — rows ≥ n are -1 pads.
+
+        Shared with the engine's capacity-padded record store so
+        steady-state inserts keep one stable array shape (no per-insert
+        jit re-specialization downstream)."""
+        return self._adj_ext[:self._cap]
+
     def _grow(self, need: int):
         cap = self._cap
         while cap < need:

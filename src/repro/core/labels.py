@@ -103,10 +103,77 @@ def build_label_store(vec_offsets: np.ndarray, vec_labels: np.ndarray,
 def padded_vec_labels(store: LabelStore, max_labels: int,
                       pad_value: int = -1) -> np.ndarray:
     """Dense (N, max_labels) int32 copy for the record store (exact verify)."""
-    out = np.full((store.n_vectors, max_labels), pad_value, dtype=np.int32)
-    counts = np.diff(store.vec_offsets)
-    rows = np.repeat(np.arange(store.n_vectors), counts)
-    pos = np.arange(store.vec_labels.size) - np.repeat(store.vec_offsets[:-1], counts)
+    return padded_rows_from_csr(store.vec_offsets, store.vec_labels,
+                                max_labels, pad_value)
+
+
+def padded_rows_from_csr(offsets: np.ndarray, flat: np.ndarray,
+                         max_labels: int, pad_value: int = -1) -> np.ndarray:
+    """CSR labels -> dense (rows, max_labels) int32 (insert-path slices)."""
+    n = offsets.size - 1
+    out = np.full((n, max_labels), pad_value, dtype=np.int32)
+    counts = np.diff(offsets)
+    rows = np.repeat(np.arange(n), counts)
+    pos = np.arange(flat.size) - np.repeat(offsets[:-1], counts)
     keep = pos < max_labels
-    out[rows[keep], pos[keep]] = store.vec_labels[keep]
+    out[rows[keep], pos[keep]] = flat[keep]
     return out
+
+
+def extend_label_store(store: LabelStore, new_offsets: np.ndarray,
+                       new_flat: np.ndarray, n_labels: int) -> LabelStore:
+    """Append a batch of vectors' labels without rebuilding the store.
+
+    Inserted vector ids are all larger than existing ones, so each label's
+    new postings land at the *end* of its run — one vectorized ``np.insert``
+    merge instead of the build path's global lexsort; Bloom words are
+    computed for the new rows only. ``n_labels`` may exceed the store's
+    (vocabulary growth): new labels get empty runs extended in place.
+    """
+    new_offsets = np.asarray(new_offsets, np.int64)
+    new_flat = np.asarray(new_flat, np.int32)
+    m = new_offsets.size - 1
+    n0 = store.n_vectors
+    n_labels = max(store.n_labels, int(n_labels))
+
+    # dedupe (vector, label) pairs within the batch (same rule as the build)
+    vec_ids0 = np.repeat(np.arange(m, dtype=np.int64), np.diff(new_offsets))
+    pair = vec_ids0 * (n_labels + 1) + new_flat
+    keep = np.zeros(pair.size, bool)
+    keep[np.unique(pair, return_index=True)[1]] = True
+    if not keep.all():
+        new_flat = new_flat[keep]
+        counts = np.bincount(vec_ids0[keep], minlength=m)
+        new_offsets = np.zeros(m + 1, np.int64)
+        np.cumsum(counts, out=new_offsets[1:])
+
+    vec_offsets = np.concatenate(
+        [store.vec_offsets, store.vec_offsets[-1] + new_offsets[1:]])
+    vec_labels = np.concatenate([store.vec_labels, new_flat])
+
+    # inverted index: merge sorted-new-pairs at each label's old run end
+    old_inv_off = store.inv_offsets
+    if old_inv_off.size < n_labels + 1:
+        old_inv_off = np.concatenate(
+            [old_inv_off, np.full(n_labels + 1 - old_inv_off.size,
+                                  old_inv_off[-1], np.int64)])
+    vec_ids = np.repeat(np.arange(n0, n0 + m, dtype=np.int32),
+                        np.diff(new_offsets))
+    order = np.lexsort((vec_ids, new_flat))
+    add_post, add_lab = vec_ids[order], new_flat[order]
+    inv_postings = np.insert(store.inv_postings, old_inv_off[add_lab + 1],
+                             add_post)
+    label_counts = np.zeros(n_labels, np.int64)
+    label_counts[:store.n_labels] = store.label_counts
+    label_counts += np.bincount(add_lab, minlength=n_labels).astype(np.int64)
+    inv_offsets = np.zeros(n_labels + 1, np.int64)
+    np.cumsum(label_counts, out=inv_offsets[1:])
+
+    blooms = np.concatenate(
+        [store.blooms,
+         bloom.build_blooms(new_offsets, new_flat, m, store.k_hashes)])
+    return LabelStore(
+        n_vectors=n0 + m, n_labels=n_labels,
+        vec_offsets=vec_offsets, vec_labels=vec_labels,
+        inv_offsets=inv_offsets, inv_postings=inv_postings,
+        label_counts=label_counts, blooms=blooms, k_hashes=store.k_hashes)

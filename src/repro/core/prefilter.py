@@ -144,12 +144,16 @@ def _strict_scan(sel: Selector) -> tuple[np.ndarray, int]:
         merged, pages = sel._fetch_merged(sel.labels, "or")
         return merged.astype(np.int32), pages
     if isinstance(sel, RangeSelector):
-        ids, pages = sel.store.scan(sel.lo, sel.hi)
+        ids, pages = sel._fs.scan(sel.lo, sel.hi)
         return ids.astype(np.int32), pages
     if isinstance(sel, AndSelector):
-        a, pa = _strict_scan(sel.label_sel)
-        b, pb = _strict_scan(sel.range_sel)
-        return np.intersect1d(a, b).astype(np.int32), pa + pb
+        # every branch (optional label + all range predicates), intersected
+        ids, pages = _strict_scan(sel.children[0])
+        for c in sel.children[1:]:
+            more, p = _strict_scan(c)
+            ids = np.intersect1d(ids, more)
+            pages += p
+        return ids.astype(np.int32), pages
     if isinstance(sel, OrSelector):
         a, pa = _strict_scan(sel.label_sel)
         b, pb = _strict_scan(sel.range_sel)

@@ -1,11 +1,16 @@
 """Range attribute store: on-"SSD" sorted index + in-memory quantized summaries.
 
-Layout (paper §4.3.2):
+Layout (paper §4.3.2), per numeric field:
   - on-SSD: flat array of <vector_id, value> pairs sorted by value; a range
     query scans one contiguous chunk (sequential reads, counted in pages);
   - in-memory: (a) 1-byte bucket code per vector against 256 global quantile
     bucket boundaries (drives is_member_approx), (b) a 1000-quantile summary
     for selectivity estimation.
+
+``RangeStore`` holds one field; ``MultiRangeStore`` stacks F of them behind
+an ``(n, F)`` value matrix so a query may carry predicates over several
+numeric fields at once (the schema-first attribute surface). Engines always
+hold a ``MultiRangeStore`` — single-field indexes are the F=1 special case.
 """
 from __future__ import annotations
 
@@ -73,6 +78,43 @@ class RangeStore:
         }
 
 
+    def append(self, new_values: np.ndarray) -> "RangeStore":
+        """Incremental insert-path extension (no re-sort, no re-bucketing).
+
+        New <id, value> pairs merge into the sorted index at their
+        searchsorted positions (one vectorized memcpy instead of an
+        O(N log N) rebuild); bucket boundaries stay *fixed* so new codes
+        remain comparable with existing ones — the no-false-negative
+        contract of ``is_member_approx`` is anchored to the build-time
+        bounds. Quantiles are re-read from the merged sorted array
+        (O(N_QUANTILES) indexing), so selectivity estimates track inserts.
+        """
+        new_values = np.asarray(new_values, np.float32)
+        m = new_values.size
+        if m == 0:
+            return self
+        new_ids = np.arange(self.n_vectors, self.n_vectors + m, dtype=np.int32)
+        order = np.argsort(new_values, kind="stable")
+        sv, si = new_values[order], new_ids[order]
+        pos = np.searchsorted(self.sorted_values, sv, side="left")
+        sorted_values = np.insert(self.sorted_values, pos, sv)
+        sorted_ids = np.insert(self.sorted_ids, pos, si)
+        new_codes = np.clip(
+            np.searchsorted(self.bucket_bounds, new_values, side="right") - 1,
+            0, N_BUCKETS - 1).astype(np.uint8)
+        n = self.n_vectors + m
+        quantiles = sorted_values[
+            np.minimum((np.linspace(0.0, 1.0, N_QUANTILES) * (n - 1))
+                       .round().astype(np.int64), n - 1)]
+        return RangeStore(
+            n_vectors=n,
+            values=np.concatenate([self.values, new_values]),
+            sorted_values=sorted_values, sorted_ids=sorted_ids,
+            bucket_bounds=self.bucket_bounds,
+            bucket_codes=np.concatenate([self.bucket_codes, new_codes]),
+            quantiles=quantiles)
+
+
 def build_range_store(values: np.ndarray) -> RangeStore:
     values = np.asarray(values, dtype=np.float32)
     n = values.size
@@ -93,3 +135,73 @@ def build_range_store(values: np.ndarray) -> RangeStore:
                       sorted_values=sorted_values, sorted_ids=sorted_ids,
                       bucket_bounds=bucket_bounds, bucket_codes=codes,
                       quantiles=quantiles)
+
+
+@dataclasses.dataclass
+class MultiRangeStore:
+    """F numeric attribute fields behind one (n, F) matrix.
+
+    Field identity is positional (the schema layer owns names); every
+    per-field structure — sorted index, bucket bounds/codes, quantiles —
+    lives in the wrapped per-field :class:`RangeStore`. The stacked
+    ``values`` / ``bucket_codes`` matrices feed the record store and the
+    in-memory device tier respectively.
+    """
+    stores: list            # F per-field RangeStore objects (F >= 1)
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.stores)
+
+    @property
+    def n_vectors(self) -> int:
+        return self.stores[0].n_vectors
+
+    @property
+    def values(self) -> np.ndarray:
+        """(n, F) float32 row-wise value matrix (record-store layout)."""
+        return np.stack([s.values for s in self.stores], axis=1)
+
+    @property
+    def bucket_codes(self) -> np.ndarray:
+        """(n, F) uint8 per-field 1-byte codes (in-memory tier layout)."""
+        return np.stack([s.bucket_codes for s in self.stores], axis=1)
+
+    def field_store(self, field: int) -> RangeStore:
+        return self.stores[field]
+
+    def selectivity(self, lo: float, hi: float, field: int = 0) -> float:
+        return self.stores[field].selectivity(lo, hi)
+
+    def scan(self, lo: float, hi: float,
+             field: int = 0) -> tuple[np.ndarray, int]:
+        return self.stores[field].scan(lo, hi)
+
+    def append(self, new_values: np.ndarray) -> "MultiRangeStore":
+        """Incremental insert-path extension over all fields; ``new_values``
+        is (m, F) (or (m,) for F=1)."""
+        new_values = np.asarray(new_values, np.float32)
+        if new_values.ndim == 1:
+            new_values = new_values[:, None]
+        assert new_values.shape[1] == self.n_fields
+        return MultiRangeStore(
+            [s.append(new_values[:, j]) for j, s in enumerate(self.stores)])
+
+    def memory_bytes(self) -> dict:
+        out: dict = {}
+        for s in self.stores:
+            for k, v in s.memory_bytes().items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+
+def build_multi_range_store(values: np.ndarray) -> MultiRangeStore:
+    """(n, F) or (n,) value matrix -> per-field stores (F >= 1 enforced so
+    device shapes stay uniform even for indexes with no numeric field)."""
+    values = np.asarray(values, np.float32)
+    if values.ndim == 1:
+        values = values[:, None]
+    if values.shape[1] == 0:
+        values = np.zeros((values.shape[0], 1), np.float32)
+    return MultiRangeStore(
+        [build_range_store(values[:, j]) for j in range(values.shape[1])])

@@ -27,7 +27,7 @@ class RecordStore(NamedTuple):
     neighbors: jax.Array      # (N, R) int32, padded -1
     dense_neighbors: jax.Array  # (N, R_d) int32, padded -1 (2-hop sample)
     rec_labels: jax.Array     # (N, ML) int32, padded -1
-    rec_values: jax.Array     # (N,) float32
+    rec_values: jax.Array     # (N, F) float32 — one column per numeric field
     pages_std: int            # pages per standard-record fetch
     pages_dense: int          # pages per densified-record fetch
 
@@ -47,6 +47,10 @@ class RecordStore(NamedTuple):
     def dense_degree(self) -> int:
         return self.dense_neighbors.shape[1]
 
+    @property
+    def n_fields(self) -> int:
+        return self.rec_values.shape[1]
+
 
 def make_record_store(vectors: np.ndarray, neighbors: np.ndarray,
                       dense_neighbors: np.ndarray, rec_labels: np.ndarray,
@@ -54,10 +58,15 @@ def make_record_store(vectors: np.ndarray, neighbors: np.ndarray,
                       vec_dtype_size: int = 4) -> RecordStore:
     n, d = vectors.shape
     ml = rec_labels.shape[1]
+    rec_values = np.asarray(rec_values, np.float32)
+    if rec_values.ndim == 1:            # legacy single-field call sites
+        rec_values = rec_values[:, None]
+    n_fields = rec_values.shape[1]
     pages_std = io_sim.record_pages(d, vec_dtype_size, neighbors.shape[1],
-                                    ml, 1)
+                                    ml, n_fields)
     pages_dense = io_sim.record_pages(
-        d, vec_dtype_size, neighbors.shape[1] + dense_neighbors.shape[1], ml, 1)
+        d, vec_dtype_size, neighbors.shape[1] + dense_neighbors.shape[1], ml,
+        n_fields)
     return RecordStore(
         vectors=jnp.asarray(vectors, jnp.float32),
         neighbors=jnp.asarray(neighbors, jnp.int32),

@@ -164,7 +164,7 @@ def filtered_search(store: RecordStore, codes: jax.Array,
             vecs = rec["vectors"]                              # (W, D)
             nbrs = rec["neighbors"]                            # (W, R)
             rl = rec["rec_labels"]                             # (W, ML)
-            rv = rec["rec_values"]                             # (W,)
+            rv = rec["rec_values"]                             # (W, F)
             io = counters[0] + jnp.sum(cur_live) * rec_pages
 
             # ---- 3. re-rank + piggybacked exact verification ----
@@ -209,7 +209,7 @@ def filtered_search(store: RecordStore, codes: jax.Array,
             else:  # strict_in: read every fresh neighbor's attrs from "SSD"
                 nrec = fetch_fn(store, safe_cand.reshape(-1))
                 n_rl = nrec["rec_labels"].reshape(W, R, -1)    # (W, R, ML)
-                n_rv = nrec["rec_values"].reshape(W, R)
+                n_rv = nrec["rec_values"].reshape(W, R, store.n_fields)
                 ok = is_member(qf, n_rl, n_rv) & fresh
                 io = io + jnp.sum(fresh)                       # 1 page / neighbor
                 counters_approx = counters[2]

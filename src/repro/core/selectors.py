@@ -29,7 +29,7 @@ import numpy as np
 from repro.core import bloom
 from repro.core.io_sim import PAGE_BYTES
 from repro.core.labels import LabelStore
-from repro.core.ranges import RangeStore
+from repro.core.ranges import MultiRangeStore, RangeStore
 
 INT_PAD = np.iinfo(np.int32).max
 
@@ -38,12 +38,17 @@ L_NONE, L_AND, L_OR = 0, 1, 2
 M_NONE, M_OR, M_AND = 0, 1, 2
 C_AND, C_OR = 0, 1
 
+NR_DEFAULT = 4   # range-predicate slots per query (IndexConfig.qr)
+
 
 class QueryFilter(NamedTuple):
     """Per-query device data for the built-in selector algebra.
 
-    Shapes: QL = max query labels (static per batch), CAP = merged-list cap.
-    All fields are stackable along a leading batch dimension.
+    Shapes: QL = max query labels, CAP = merged-list cap, NR = range-predicate
+    slots (all static per batch). All fields are stackable along a leading
+    batch dimension. The range half is a fixed-width vector of
+    ``(field, lo, hi)`` predicates — a conjunction over up to NR numeric
+    fields — with ``range_field = -1`` marking empty slots.
     """
     # --- approximate (in-memory) half ---
     merged_ids: jax.Array     # (CAP,) int32, sorted, padded with INT_PAD
@@ -51,21 +56,36 @@ class QueryFilter(NamedTuple):
     merged_mode: jax.Array    # ()  int32: M_NONE / M_OR / M_AND
     bloom_or_masks: jax.Array # (QL,) uint32 per-frequent-label masks (0 = pad)
     bloom_and_mask: jax.Array # ()  uint32 union mask of frequent labels (0 = none)
-    bucket_lo: jax.Array      # ()  int32 (range approx; 0..255)
-    bucket_hi: jax.Array      # ()  int32
+    bucket_lo: jax.Array      # (NR,) int32 (per-predicate range approx; 0..255)
+    bucket_hi: jax.Array      # (NR,) int32
     # --- exact half (verification against record attributes) ---
     q_labels: jax.Array       # (QL,) int32, padded with -1
     label_mode: jax.Array     # ()  int32: L_NONE / L_AND / L_OR
-    range_lo: jax.Array       # ()  float32
-    range_hi: jax.Array       # ()  float32
-    range_on: jax.Array       # ()  int32 (0/1)
+    range_field: jax.Array    # (NR,) int32 numeric-field index, -1 = empty slot
+    range_lo: jax.Array       # (NR,) float32
+    range_hi: jax.Array       # (NR,) float32
     combine: jax.Array        # ()  int32: C_AND / C_OR over (label, range) parts
 
 
 class InMemory(NamedTuple):
     """The replicated in-memory tier probed by is_member_approx."""
     blooms: jax.Array         # (N,) uint32
-    bucket_codes: jax.Array   # (N,) uint8/int32
+    bucket_codes: jax.Array   # (N, F) uint8/int32 — one code column per field
+
+
+def _range_parts(qf: QueryFilter, codes_or_values, lo, hi):
+    """Shared AND-of-slots range evaluation.
+
+    codes_or_values: (..., F) gathered per-field data; lo/hi: (NR,) bounds
+    in the same domain (bucket codes or float values). Returns
+    (range_ok (...,), range_present ())."""
+    active = qf.range_field >= 0                           # (NR,)
+    safe_f = jnp.where(active, qf.range_field, 0)
+    v = codes_or_values[..., safe_f]                       # (..., NR)
+    ok = (v >= lo) & (v < hi) if v.dtype.kind == "f" else \
+        (v >= lo) & (v <= hi)
+    range_ok = jnp.all(ok | ~active, axis=-1)
+    return range_ok, jnp.any(active)
 
 
 def is_member_approx(qf: QueryFilter, ids: jax.Array, mem: InMemory) -> jax.Array:
@@ -90,9 +110,12 @@ def is_member_approx(qf: QueryFilter, ids: jax.Array, mem: InMemory) -> jax.Arra
                          jnp.where(qf.label_mode == L_OR, label_or, True))
     label_present = qf.label_mode != L_NONE
 
-    code = mem.bucket_codes[ids].astype(jnp.int32)
-    range_ok = (code >= qf.bucket_lo) & (code <= qf.bucket_hi)
-    range_present = qf.range_on == 1
+    bc = mem.bucket_codes
+    if bc.ndim == 1:                                       # legacy (N,) tier
+        bc = bc[:, None]
+    codes = bc[ids].astype(jnp.int32)                      # (..., F)
+    range_ok, range_present = _range_parts(qf, codes, qf.bucket_lo,
+                                           qf.bucket_hi)
 
     ok_and = (label_ok | ~label_present) & (range_ok | ~range_present)
     ok_or = (label_ok & label_present) | (range_ok & range_present)
@@ -105,8 +128,11 @@ def is_member(qf: QueryFilter, rec_labels: jax.Array,
               rec_values: jax.Array) -> jax.Array:
     """Exact verification against record-resident attributes.
 
-    rec_labels: (..., ML) int32 padded -1; rec_values: (...,) float32.
+    rec_labels: (..., ML) int32 padded -1; rec_values: (..., F) float32
+    (a flat (...,) array is accepted as the single-field F=1 case).
     """
+    if rec_values.ndim == rec_labels.ndim - 1:             # legacy flat values
+        rec_values = rec_values[..., None]
     ql = qf.q_labels                                       # (QL,)
     present = (rec_labels[..., None, :] == ql[:, None]) & (ql[:, None] >= 0)
     contains = jnp.any(present, axis=-1)                   # (..., QL)
@@ -117,8 +143,8 @@ def is_member(qf: QueryFilter, rec_labels: jax.Array,
                          jnp.where(qf.label_mode == L_OR, lab_or, True))
     label_present = qf.label_mode != L_NONE
 
-    range_ok = (rec_values >= qf.range_lo) & (rec_values < qf.range_hi)
-    range_present = qf.range_on == 1
+    range_ok, range_present = _range_parts(qf, rec_values, qf.range_lo,
+                                           qf.range_hi)
 
     ok_and = (label_ok | ~label_present) & (range_ok | ~range_present)
     ok_or = (label_ok & label_present) | (range_ok & range_present)
@@ -127,16 +153,19 @@ def is_member(qf: QueryFilter, rec_labels: jax.Array,
                      jnp.where(qf.combine == C_OR, ok_or, ok_and), True)
 
 
-def always_true_filter(ql: int, cap: int) -> QueryFilter:
+def always_true_filter(ql: int, cap: int, nr: int = NR_DEFAULT) -> QueryFilter:
     """The post-filtering extreme: is_member_approx ≡ True (paper §3)."""
     return QueryFilter(
         merged_ids=np.full(cap, INT_PAD, np.int32), merged_len=np.int32(0),
         merged_mode=np.int32(M_NONE),
         bloom_or_masks=np.zeros(ql, np.uint32), bloom_and_mask=np.uint32(0),
-        bucket_lo=np.int32(0), bucket_hi=np.int32(255),
+        bucket_lo=np.zeros(nr, np.int32),
+        bucket_hi=np.full(nr, 255, np.int32),
         q_labels=np.full(ql, -1, np.int32), label_mode=np.int32(L_NONE),
-        range_lo=np.float32(-np.inf), range_hi=np.float32(np.inf),
-        range_on=np.int32(0), combine=np.int32(C_AND))
+        range_field=np.full(nr, -1, np.int32),
+        range_lo=np.full(nr, -np.inf, np.float32),
+        range_hi=np.full(nr, np.inf, np.float32),
+        combine=np.int32(C_AND))
 
 
 def stack_filters(filters: Sequence[QueryFilter]) -> QueryFilter:
@@ -167,7 +196,7 @@ class Plan:
 class Selector:
     """Base class. Subclasses implement plan()/pre_filter_approx()."""
 
-    def plan(self, ql: int, cap: int) -> Plan:
+    def plan(self, ql: int, cap: int, nr: int = NR_DEFAULT) -> Plan:
         raise NotImplementedError
 
     def pre_filter_approx(self) -> tuple[np.ndarray, int]:
@@ -232,11 +261,11 @@ class LabelOrSelector(LabelSelectorBase):
             s *= 1.0 - float(c) / max(1, self.store.n_vectors)
         return 1.0 - s
 
-    def plan(self, ql: int, cap: int) -> Plan:
+    def plan(self, ql: int, cap: int, nr: int = NR_DEFAULT) -> Plan:
         rare, freq = self._split_rare(cap)
         merged, pages = self._fetch_merged(rare, "or")
         merged = merged[:cap]
-        qf = always_true_filter(ql, cap)
+        qf = always_true_filter(ql, cap, nr)
         ids = np.full(cap, INT_PAD, np.int32)
         ids[:merged.size] = np.sort(merged)
         or_masks = np.zeros(ql, np.uint32)
@@ -280,11 +309,11 @@ class LabelAndSelector(LabelSelectorBase):
             s *= float(c) / max(1, self.store.n_vectors)
         return s
 
-    def plan(self, ql: int, cap: int) -> Plan:
+    def plan(self, ql: int, cap: int, nr: int = NR_DEFAULT) -> Plan:
         rare, freq = self._split_rare(cap)
         merged, pages = self._fetch_merged(rare, "and")
         merged = merged[:cap]
-        qf = always_true_filter(ql, cap)
+        qf = always_true_filter(ql, cap, nr)
         ids = np.full(cap, INT_PAD, np.int32)
         ids[:merged.size] = np.sort(merged)
         and_mask = np.uint32(0)
@@ -329,74 +358,135 @@ class LabelAndSelector(LabelSelectorBase):
 
 
 class RangeSelector(Selector):
-    """Vector passes if its numeric attribute falls in [lo, hi)."""
+    """Vector passes if numeric field ``field`` falls in [lo, hi).
 
-    def __init__(self, store: RangeStore, lo: float, hi: float):
-        self.store, self.lo, self.hi = store, float(lo), float(hi)
+    ``store`` may be a :class:`MultiRangeStore` (``field`` picks the
+    column) or a bare per-field :class:`RangeStore` (legacy single-field
+    call sites; ``field`` is then the column the emitted predicate refers
+    to inside the engine's value matrix, 0 by default).
+    """
+
+    def __init__(self, store, lo: float, hi: float, field: int = 0):
+        self.store = store
+        self.lo, self.hi = float(lo), float(hi)
+        self.field = int(field)
+        self._fs: RangeStore = store.field_store(self.field) \
+            if isinstance(store, MultiRangeStore) else store
 
     def selectivity(self) -> float:
-        return self.store.selectivity(self.lo, self.hi)
+        return self._fs.selectivity(self.lo, self.hi)
 
-    def plan(self, ql: int, cap: int) -> Plan:
-        qf = always_true_filter(ql, cap)
-        blo, bhi = self.store.bucket_range(self.lo, self.hi)
-        qf = qf._replace(bucket_lo=np.int32(blo), bucket_hi=np.int32(bhi),
-                         range_lo=np.float32(self.lo), range_hi=np.float32(self.hi),
-                         range_on=np.int32(1))
+    def plan(self, ql: int, cap: int, nr: int = NR_DEFAULT) -> Plan:
+        qf = _fill_range_slots(always_true_filter(ql, cap, nr), [self])
         s = self.selectivity()
-        prec = self.store.precision(self.lo, self.hi)
-        _, pages = self.store.scan(self.lo, self.hi)
+        prec = self._fs.precision(self.lo, self.hi)
+        _, pages = self._fs.scan(self.lo, self.hi)
         return Plan(qf, s, prec, 1.0, 0, pages)
 
     def pre_filter_approx(self) -> tuple[np.ndarray, int]:
-        ids, pages = self.store.scan(self.lo, self.hi)
+        ids, pages = self._fs.scan(self.lo, self.hi)
         return ids.astype(np.int32), pages
 
 
+def _fill_range_slots(qf: QueryFilter, range_sels) -> QueryFilter:
+    """Write a conjunction of range predicates into the NR filter slots."""
+    nr = qf.range_field.shape[-1]
+    if len(range_sels) > nr:
+        raise ValueError(
+            f"{len(range_sels)} range predicates exceed the filter's "
+            f"{nr} slots (IndexConfig.qr)")
+    field = np.full(nr, -1, np.int32)
+    lo = np.full(nr, -np.inf, np.float32)
+    hi = np.full(nr, np.inf, np.float32)
+    blo = np.zeros(nr, np.int32)
+    bhi = np.full(nr, 255, np.int32)
+    for j, rs in enumerate(range_sels):
+        field[j] = rs.field
+        lo[j], hi[j] = np.float32(rs.lo), np.float32(rs.hi)
+        blo[j], bhi[j] = rs._fs.bucket_range(rs.lo, rs.hi)
+    return qf._replace(range_field=field, range_lo=lo, range_hi=hi,
+                       bucket_lo=blo, bucket_hi=bhi)
+
+
 class _Combinator(Selector):
+    """Label × range composition shared by And/Or.
+
+    AND accepts one optional label selector plus any number of range
+    predicates (a multi-field conjunction — the schema-first query shape);
+    OR keeps the two-way (one label + one range) form the approximate
+    algebra can express.
+    """
+
+    _max_ranges: int | None = None
+    _label_required = True
+
     def __init__(self, children: Sequence[Selector]):
-        assert len(children) == 2, "built-in combinators take (label, range)"
         self.children = list(children)
         lab = [c for c in self.children if isinstance(c, LabelSelectorBase)]
         rng = [c for c in self.children if isinstance(c, RangeSelector)]
-        assert len(lab) == 1 and len(rng) == 1, \
-            "built-in combinators compose one label + one range selector; " \
-            "fuse or subclass Selector for other trees"
-        self.label_sel: LabelSelectorBase = lab[0]
-        self.range_sel: RangeSelector = rng[0]
+        assert len(lab) + len(rng) == len(self.children) and len(lab) <= 1, \
+            "built-in combinators compose ≤1 label selector with range " \
+            "selectors; fuse or subclass Selector for other trees"
+        assert rng, "built-in combinators need ≥1 range selector"
+        if self._label_required:
+            assert len(lab) == 1, \
+                f"{type(self).__name__} needs exactly one label selector"
+        if self._max_ranges is not None:
+            assert len(rng) <= self._max_ranges, \
+                f"{type(self).__name__} takes ≤{self._max_ranges} ranges"
+        self.label_sel = lab[0] if lab else None
+        self.range_sels: list = rng
 
-    def _merge_plans(self, ql, cap, combine_code) -> Plan:
-        lp = self.label_sel.plan(ql, cap)
-        rp = self.range_sel.plan(ql, cap)
-        qf = lp.qfilter._replace(
-            bucket_lo=rp.qfilter.bucket_lo, bucket_hi=rp.qfilter.bucket_hi,
-            range_lo=rp.qfilter.range_lo, range_hi=rp.qfilter.range_hi,
-            range_on=np.int32(1), combine=np.int32(combine_code))
-        return lp, rp, qf
+    @property
+    def range_sel(self) -> RangeSelector:
+        """First range child (legacy two-way accessor)."""
+        return self.range_sels[0]
+
+    def _merge_plans(self, ql, cap, nr, combine_code):
+        if self.label_sel is not None:
+            lp = self.label_sel.plan(ql, cap, nr)
+        else:
+            lp = Plan(always_true_filter(ql, cap, nr), 1.0, 1.0, 1.0, 0, 0)
+        rps = [r.plan(ql, cap, nr) for r in self.range_sels]
+        qf = _fill_range_slots(lp.qfilter, self.range_sels)
+        qf = qf._replace(combine=np.int32(combine_code))
+        return lp, rps, qf
 
 
 class AndSelector(_Combinator):
-    """AND of children; pre-filtering prunes the heavy branch (paper §4.3.3)."""
+    """AND of children; pre-filtering prunes the heavy branch (paper §4.3.3).
+
+    Joint selectivity is the clamped product of per-child marginals
+    (cost_model.joint_and_selectivity) — the independence estimate that
+    keeps route choice and ``effective_l`` sane for multi-field filters.
+    """
+
+    _label_required = False
 
     def selectivity(self) -> float:
-        return self.label_sel.selectivity() * self.range_sel.selectivity()
+        from repro.core import cost_model
+        margins = [c.selectivity() for c in self.children]
+        return cost_model.joint_and_selectivity(margins)
 
-    def plan(self, ql: int, cap: int) -> Plan:
-        lp, rp, qf = self._merge_plans(ql, cap, C_AND)
+    def plan(self, ql: int, cap: int, nr: int = NR_DEFAULT) -> Plan:
+        lp, rps, qf = self._merge_plans(ql, cap, nr, C_AND)
         s = self.selectivity()
-        p_pass = (lp.selectivity / max(lp.precision_in, 1e-12)) * \
-                 (rp.selectivity / max(rp.precision_in, 1e-12))
+        p_pass = lp.selectivity / max(lp.precision_in, 1e-12)
+        for rp in rps:
+            p_pass *= rp.selectivity / max(rp.precision_in, 1e-12)
         prec_in = s / max(p_pass, 1e-12)
-        # pre-filter: scan only the lower-selectivity child
-        cheap = lp if lp.selectivity <= rp.selectivity else rp
-        prec_pre = s / max(cheap.selectivity / max(cheap.precision_pre, 1e-12), 1e-12)
+        # pre-filter: scan only the lowest-selectivity child
+        cheap = min([lp] + rps, key=lambda p: p.selectivity) \
+            if self.label_sel is not None else min(rps,
+                                                   key=lambda p: p.selectivity)
+        prec_pre = s / max(cheap.selectivity / max(cheap.precision_pre, 1e-12),
+                           1e-12)
         return Plan(qf, s, min(1.0, prec_in), min(1.0, prec_pre),
                     lp.pages_prefetch, cheap.pages_prescan)
 
     def pre_filter_approx(self) -> tuple[np.ndarray, int]:
-        if self.label_sel.selectivity() <= self.range_sel.selectivity():
-            return self.label_sel.pre_filter_approx()
-        return self.range_sel.pre_filter_approx()
+        cheap = min(self.children, key=lambda c: c.selectivity())
+        return cheap.pre_filter_approx()
 
 
 class MatchAllSelector(Selector):
@@ -408,9 +498,9 @@ class MatchAllSelector(Selector):
     def selectivity(self) -> float:
         return 1.0
 
-    def plan(self, ql: int, cap: int) -> Plan:
+    def plan(self, ql: int, cap: int, nr: int = NR_DEFAULT) -> Plan:
         pages = max(1, self.n_vectors * 4 // PAGE_BYTES)
-        return Plan(always_true_filter(ql, cap), 1.0, 1.0, 1.0, 0, pages)
+        return Plan(always_true_filter(ql, cap, nr), 1.0, 1.0, 1.0, 0, pages)
 
     def pre_filter_approx(self) -> tuple[np.ndarray, int]:
         pages = max(1, self.n_vectors * 4 // PAGE_BYTES)
@@ -419,7 +509,8 @@ class MatchAllSelector(Selector):
 
 class MaskSelector(Selector):
     """Exact-membership fallback for constraints the built-in QueryFilter
-    algebra cannot express (arbitrary AND/OR trees, >QL label slots, …).
+    algebra cannot express (arbitrary AND/OR trees, >QL label slots, range
+    predicates over more fields than the NR slots, …).
 
     The valid-id set is computed exactly on the host (attribute-index
     scans, pages accounted by the caller) and the query is *forced* down
@@ -438,8 +529,8 @@ class MaskSelector(Selector):
     def selectivity(self) -> float:
         return self.valid_ids.size / max(1, self.n_vectors)
 
-    def plan(self, ql: int, cap: int) -> Plan:
-        return Plan(always_true_filter(ql, cap), self.selectivity(),
+    def plan(self, ql: int, cap: int, nr: int = NR_DEFAULT) -> Plan:
+        return Plan(always_true_filter(ql, cap, nr), self.selectivity(),
                     1.0, 1.0, 0, self.pages, force_mech="pre")
 
     def pre_filter_approx(self) -> tuple[np.ndarray, int]:
@@ -449,13 +540,17 @@ class MaskSelector(Selector):
 class OrSelector(_Combinator):
     """OR of children; pre-filtering must evaluate every branch."""
 
+    _max_ranges = 1
+    _label_required = True
+
     def selectivity(self) -> float:
         sl = self.label_sel.selectivity()
         sr = self.range_sel.selectivity()
         return 1.0 - (1.0 - sl) * (1.0 - sr)
 
-    def plan(self, ql: int, cap: int) -> Plan:
-        lp, rp, qf = self._merge_plans(ql, cap, C_OR)
+    def plan(self, ql: int, cap: int, nr: int = NR_DEFAULT) -> Plan:
+        lp, rps, qf = self._merge_plans(ql, cap, nr, C_OR)
+        rp = rps[0]
         s = self.selectivity()
         pl = lp.selectivity / max(lp.precision_in, 1e-12)
         pr = rp.selectivity / max(rp.precision_in, 1e-12)

@@ -10,6 +10,14 @@ Scalar params layout (int32[8], bitwise-compatible with uint32 masks):
   0: and_mask   1: n_or_masks  2: bucket_lo  3: bucket_hi
   4: label_mode (0 none / 1 and / 2 or)      5: range_on
   6: combine    (0 and / 1 or)               7: unused
+
+NOTE: this kernel models the *single-field* probe (one scalar
+bucket_lo/bucket_hi pair + range_on flag). The production
+``selectors.is_member_approx`` has since moved to a fixed-width vector of
+per-field ``(range_field, bucket_lo, bucket_hi)`` predicate slots over
+``(N, F)`` bucket codes — wiring this kernel into the search loop would
+need its param block widened to the NR-slot layout first. It remains the
+micro-benchmark / Pallas-idiom reference for the fused probe shape.
 """
 from __future__ import annotations
 

@@ -35,6 +35,8 @@ R_DENSE = 1100
 PQ_M = 32
 MAX_LABELS = 16
 QL, CAP = 8, 4096
+NF = 2                     # numeric attribute fields (schema nums)
+NR = 4                     # range-predicate slots per query (IndexConfig.qr)
 BATCH = int(os.environ.get("REPRO_ANN_BATCH", "64"))  # coalesced queries
 L_SEARCH = 128
 
@@ -47,27 +49,27 @@ def specs(n_shards: int):
         neighbors=jax.ShapeDtypeStruct((n, R), i32),
         dense_neighbors=jax.ShapeDtypeStruct((n, R_DENSE), i32),
         rec_labels=jax.ShapeDtypeStruct((n, MAX_LABELS), i32),
-        rec_values=jax.ShapeDtypeStruct((n,), f32),
+        rec_values=jax.ShapeDtypeStruct((n, NF), f32),
         pages_std=1, pages_dense=2)
     codes = jax.ShapeDtypeStruct((n, PQ_M), jnp.uint8)
     codebook = pq_mod.PQCodebook(
         centroids=jax.ShapeDtypeStruct((PQ_M, 256, DIM // PQ_M), f32),
         dim=DIM)
     mem = InMemory(blooms=jax.ShapeDtypeStruct((n,), jnp.uint32),
-                   bucket_codes=jax.ShapeDtypeStruct((n,), jnp.uint8))
+                   bucket_codes=jax.ShapeDtypeStruct((n, NF), jnp.uint8))
     qf = QueryFilter(
         merged_ids=jax.ShapeDtypeStruct((BATCH, CAP), i32),
         merged_len=jax.ShapeDtypeStruct((BATCH,), i32),
         merged_mode=jax.ShapeDtypeStruct((BATCH,), i32),
         bloom_or_masks=jax.ShapeDtypeStruct((BATCH, QL), jnp.uint32),
         bloom_and_mask=jax.ShapeDtypeStruct((BATCH,), jnp.uint32),
-        bucket_lo=jax.ShapeDtypeStruct((BATCH,), i32),
-        bucket_hi=jax.ShapeDtypeStruct((BATCH,), i32),
+        bucket_lo=jax.ShapeDtypeStruct((BATCH, NR), i32),
+        bucket_hi=jax.ShapeDtypeStruct((BATCH, NR), i32),
         q_labels=jax.ShapeDtypeStruct((BATCH, QL), i32),
         label_mode=jax.ShapeDtypeStruct((BATCH,), i32),
-        range_lo=jax.ShapeDtypeStruct((BATCH,), f32),
-        range_hi=jax.ShapeDtypeStruct((BATCH,), f32),
-        range_on=jax.ShapeDtypeStruct((BATCH,), i32),
+        range_field=jax.ShapeDtypeStruct((BATCH, NR), i32),
+        range_lo=jax.ShapeDtypeStruct((BATCH, NR), f32),
+        range_hi=jax.ShapeDtypeStruct((BATCH, NR), f32),
         combine=jax.ShapeDtypeStruct((BATCH,), i32))
     queries = jax.ShapeDtypeStruct((BATCH, DIM), f32)
     return store, codes, codebook, mem, qf, queries
@@ -96,7 +98,8 @@ def run(mesh_kind: str, out_dir: str) -> dict:
         ax = plan.shard_axes
         shard1 = lambda spec: NamedSharding(mesh, spec)
         in_sh = (shard1(P(ax, None)), shard1(P(ax, None)),
-                 shard1(P(ax, None)), shard1(P(ax, None)), shard1(P(ax)),
+                 shard1(P(ax, None)), shard1(P(ax, None)),
+                 shard1(P(ax, None)),
                  shard1(P(None, None)), shard1(P(None, None, None)),
                  jax.tree_util.tree_map(lambda _: shard1(P(None)), mem),
                  jax.tree_util.tree_map(

@@ -17,11 +17,24 @@ from repro.api.types import SearchRequest, SearchResult
 
 
 class RetrievalFrontend:
-    """Batched filtered retrieval for serving loops."""
+    """Batched filtered retrieval for serving loops.
+
+    Filters are ``Tag``/``Num`` expressions over the index
+    :class:`~repro.api.schema.Schema` — multi-field conjunctions like
+    ``(Tag("lang") == "en") & (Num("price") < 50) & (Num("year") >= 2020)``
+    compile onto the device verification path; unknown field names fail at
+    admission (compile time), not in the flush.
+    """
 
     def __init__(self, index, session_config: SessionConfig = SessionConfig()):
         self.index = index
         self.session = Session(index, session_config)
+
+    @property
+    def schema(self):
+        """The served index's attribute schema (field discovery for
+        request validation / UI layers)."""
+        return self.index.schema
 
     def submit(self, query_embedding: np.ndarray, filter=None,
                k: Optional[int] = None, **overrides) -> PendingSearch:

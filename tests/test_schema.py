@@ -1,0 +1,278 @@
+"""Schema-first attribute API: multi-field numeric filters end-to-end.
+
+Covers the tentpole acceptance path (a tag ∧ two-numeric-field conjunction
+compiling natively onto device verification and matching the exact host
+scan bit-for-bit on a ≥10K corpus), the DSL error paths (unknown fields
+fail at compile time, same-field intervals intersect, mixed-field ANDs
+avoid the MaskSelector fallback), and the format-1 → F=1 checkpoint shim.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (Index, IndexConfig, Num, Schema, SearchConfig,
+                       SearchRequest, Tag, UnknownFieldError, compile_expr)
+from repro.core.selectors import (AndSelector, MaskSelector, RangeSelector)
+
+pytestmark = pytest.mark.fast
+
+N = 10_000
+D = 24
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(42)
+    centers = rng.normal(0, 1.0, (12, D)).astype(np.float32)
+    assign = rng.integers(0, 12, N)
+    vecs = (centers[assign] + rng.normal(0, 0.3, (N, D))).astype(np.float32)
+    cats = rng.integers(0, 5, N)
+    prices = rng.uniform(0, 100, N).astype(np.float32)
+    years = rng.integers(2000, 2030, N).astype(np.float32)
+    meta = [{"cat": int(c), "price": float(p), "year": float(y)}
+            for c, p, y in zip(cats, prices, years)]
+    return vecs, meta, cats, prices, years
+
+
+@pytest.fixture(scope="module")
+def index(corpus):
+    vecs, meta, *_ = corpus
+    return Index.build(
+        vecs, meta,
+        IndexConfig(r=16, r_dense=160, l_build=32, pq_m=8),
+        schema=Schema(tags=["cat"], nums=["price", "year"]),
+        defaults=SearchConfig(k=10, l=64, max_hops=400, max_pool=1024))
+
+
+# ---------------------------------------------------------------------------
+# Schema object
+# ---------------------------------------------------------------------------
+
+def test_schema_inference_floats_become_nums():
+    meta = [{"cat": 1, "price": 9.5, "year": 2021.0},
+            {"cat": 2, "price": 1.0, "year": 2000.0, "lang": "en"}]
+    s = Schema.infer(meta)
+    assert s.nums == ("price", "year")          # sorted, deterministic
+    assert s.tags == ("cat", "lang")
+    assert s.num_index("year") == 1
+
+
+def test_schema_rejects_overlap_and_mixed_types():
+    with pytest.raises(ValueError, match="both"):
+        Schema(tags=["x"], nums=["x"])
+    with pytest.raises(ValueError, match="disambiguate"):
+        Schema.infer([{"x": 1.0}, {"x": "red"}])
+
+
+def test_schema_unknown_field_is_keyerror_style():
+    s = Schema(tags=["cat"], nums=["price"])
+    with pytest.raises(UnknownFieldError):
+        s.num_index("prize")
+    # KeyError-style *and* backward-compatible with ValueError handlers
+    assert issubclass(UnknownFieldError, KeyError)
+    assert issubclass(UnknownFieldError, ValueError)
+
+
+def test_build_infers_multi_field_schema(corpus):
+    vecs, meta, *_ = corpus
+    sub = Index.build(vecs[:200], meta[:200],
+                      IndexConfig(r=8, r_dense=32, l_build=16, pq_m=4))
+    assert sub.schema.nums == ("price", "year")
+    assert sub.schema.tags == ("cat",)
+    assert sub.store.rec_values.shape == (200, 2)
+
+
+# ---------------------------------------------------------------------------
+# DSL error paths + compilation targets (satellite: compile-time failures)
+# ---------------------------------------------------------------------------
+
+def test_unknown_fields_fail_at_compile_time(index):
+    with pytest.raises(UnknownFieldError, match="not indexed"):
+        compile_expr(Num("prize") < 5.0, index)
+    with pytest.raises(UnknownFieldError, match="not indexed"):
+        compile_expr(Tag("catt") == 1, index)
+    # ...and through ground_truth, which must validate too
+    with pytest.raises(UnknownFieldError, match="not indexed"):
+        index.ground_truth(SearchRequest(query=np.zeros(D, np.float32),
+                                         filter=Num("prize") < 5.0))
+
+
+def test_same_field_ranges_intersect_into_one_interval(index):
+    sel = compile_expr((Num("price") >= 10.0) & (Num("price") < 50.0), index)
+    assert isinstance(sel, RangeSelector)       # one interval, no combinator
+    assert sel.lo == 10.0 and sel.hi == 50.0
+    # intersecting with a tag keeps a single merged range slot
+    sel = compile_expr((Tag("cat") == 1) & (Num("price") >= 10.0)
+                       & (Num("price") < 50.0), index)
+    assert isinstance(sel, AndSelector)
+    assert len(sel.range_sels) == 1
+    assert sel.range_sels[0].lo == 10.0 and sel.range_sels[0].hi == 50.0
+
+
+def test_mixed_field_and_avoids_mask_fallback(index):
+    expr = ((Tag("cat") == 2) & (Num("price") < 50.0)
+            & (Num("year") >= 2020.0))
+    sel = compile_expr(expr, index)
+    assert isinstance(sel, AndSelector), type(sel).__name__
+    assert not isinstance(sel, MaskSelector)
+    fields = sorted(r.field for r in sel.range_sels)
+    assert fields == [0, 1]                     # price, year columns
+    plan = sel.plan(index.ql, index.config.cap, index.qr)
+    assert plan.force_mech is None              # native device route
+    # the emitted filter carries both predicates in distinct slots
+    active = np.asarray(plan.qfilter.range_field) >= 0
+    assert active.sum() == 2
+
+
+def test_ranges_only_multi_field_and(index):
+    sel = compile_expr((Num("price") < 30.0) & (Num("year") >= 2010.0),
+                       index)
+    assert isinstance(sel, AndSelector) and sel.label_sel is None
+    assert len(sel.range_sels) == 2
+
+
+def test_more_fields_than_qr_slots_falls_back(corpus):
+    """An AND over more numeric fields than IndexConfig.qr predicate slots
+    cannot ride the fixed-width filter: exact MaskSelector fallback."""
+    vecs, *_ = corpus
+    rng = np.random.default_rng(0)
+    meta = [{f"n{j}": float(rng.uniform(0, 1)) for j in range(3)}
+            for _ in range(150)]
+    sub = Index.build(vecs[:150], meta,
+                      IndexConfig(r=8, r_dense=32, l_build=16, pq_m=4, qr=2))
+    expr = ((Num("n0") < 0.9) & (Num("n1") < 0.9) & (Num("n2") < 0.9))
+    sel = compile_expr(expr, sub)
+    assert isinstance(sel, MaskSelector)
+    # still answers exactly (forced-pre route)
+    res = sub.search(SearchRequest(query=vecs[0], filter=expr, k=5))
+    gt = sub.ground_truth(SearchRequest(query=vecs[0], filter=expr, k=5))
+    assert set(res.ids[res.ids >= 0].tolist()) <= set(gt.tolist()) | {-1}
+
+
+# ---------------------------------------------------------------------------
+# Tentpole acceptance: tag ∧ two numeric ranges, end to end
+# ---------------------------------------------------------------------------
+
+def test_tag_and_two_numeric_ranges_matches_ground_truth(index, corpus):
+    """A query AND-ing one tag predicate with ranges over two *different*
+    numeric fields routes through device-side verification (no MaskSelector
+    fallback) and returns results bit-identical to the exact host scan."""
+    vecs, meta, cats, prices, years = corpus
+    rng = np.random.default_rng(5)
+    expr = ((Tag("cat") == 2) & (Num("price") < 15.0)
+            & (Num("year") >= 2020.0))
+    sel = compile_expr(expr, index)
+    assert isinstance(sel, AndSelector) and not isinstance(sel, MaskSelector)
+    assert sel.plan(index.ql, index.config.cap, index.qr).force_mech is None
+
+    # independent host truth over the raw metadata (no engine structures)
+    want = (cats == 2) & (prices < np.float32(15.0)) \
+        & (years >= np.float32(2020.0))
+    n_valid = int(want.sum())
+    assert 30 <= n_valid <= 500, n_valid        # realistic joint selectivity
+
+    for trial in range(6):
+        q = vecs[rng.integers(0, N)] + rng.normal(0, 0.1, D) \
+            .astype(np.float32)
+        req = SearchRequest(query=q, filter=expr, k=10)
+        gt = index.ground_truth(req)
+        res = index.search(req)
+        got = res.ids
+        assert res.stats.mechanism in ("pre", "in", "post")
+        np.testing.assert_array_equal(
+            got[:gt.size], gt, err_msg=f"trial {trial}")
+        assert np.all(got[gt.size:] == -1)
+        # every hit exactly satisfies the three-predicate conjunction
+        for rec_id, _, m in res.matches:
+            assert m["cat"] == 2 and m["price"] < 15.0 and m["year"] >= 2020
+
+
+def test_multi_field_or_still_exact(index, corpus):
+    """OR over two numeric fields is outside the approximate algebra —
+    falls back to the exact mask route and stays correct."""
+    vecs, _, cats, prices, years = corpus
+    expr = (Num("price") < 5.0) | (Num("year") >= 2028.0)
+    sel = compile_expr(expr, index)
+    assert isinstance(sel, MaskSelector)
+    want = (prices < np.float32(5.0)) | (years >= np.float32(2028.0))
+    got = np.zeros(N, bool)
+    got[sel.valid_ids] = True
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Persistence: format-2 roundtrip + format-1 (legacy F=1) shim
+# ---------------------------------------------------------------------------
+
+def test_save_load_roundtrip_two_fields(index, tmp_path):
+    path = str(tmp_path / "idx2f")
+    index.save(path)
+    loaded = Index.load(path)
+    assert loaded.schema == index.schema
+    assert loaded.range_store.n_fields == 2
+    rng = np.random.default_rng(11)
+    q = rng.normal(0, 1, D).astype(np.float32)
+    expr = ((Tag("cat") == 1) & (Num("price") < 40.0)
+            & (Num("year") >= 2010.0))
+    for policy in ("speculative", "post"):
+        req = SearchRequest(query=q, filter=expr, policy=policy)
+        a, b = index.search(req), loaded.search(req)
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_allclose(a.dists, b.dists, rtol=1e-6)
+
+
+def _rewrite_as_legacy_checkpoint(src: str, dst: str):
+    """Down-convert a freshly-saved F=1 checkpoint to the format-1 layout
+    (flat (n,) range arrays, ``numeric_field`` sidecar key, no schema)."""
+    import jax
+    from repro.ckpt import checkpoint as ckpt
+    with open(os.path.join(src, "index_meta.json")) as fh:
+        meta = json.load(fh)
+    target = {k: jax.ShapeDtypeStruct(tuple(v["shape"]), np.dtype(v["dtype"]))
+              for k, v in meta["arrays"].items()}
+    t = {k: np.asarray(v) for k, v in ckpt.restore(src, 0, target).items()}
+    assert t["rs_values"].shape[1] == 1
+    for key in ("store_rec_values", "rs_values", "rs_bucket_codes"):
+        t[key] = t[key][:, 0]
+    for key in ("rs_sorted_values", "rs_sorted_ids", "rs_bucket_bounds",
+                "rs_quantiles"):
+        t[key] = t[key][0]
+    ckpt.save(dst, step=0, tree=t, async_write=False, keep_last=1)
+    schema = meta.pop("schema")
+    meta["format"] = 1
+    meta["numeric_field"] = schema["nums"][0] if schema["nums"] else None
+    meta["arrays"] = {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                      for k, a in t.items()}
+    with open(os.path.join(dst, "index_meta.json"), "w") as fh:
+        json.dump(meta, fh)
+
+
+def test_legacy_single_field_checkpoint_shim(tmp_path):
+    """A pre-schema (format-1) single-numeric-field checkpoint loads through
+    the F=1 shim and answers unchanged."""
+    rng = np.random.default_rng(23)
+    vecs = rng.normal(0, 1, (500, 16)).astype(np.float32)
+    meta = [{"cat": int(rng.integers(0, 4)), "v": float(rng.uniform(0, 100))}
+            for _ in range(500)]
+    idx = Index.build(vecs, meta,
+                      IndexConfig(r=8, r_dense=48, l_build=16, pq_m=4),
+                      defaults=SearchConfig(k=5, l=32))
+    new_path = str(tmp_path / "new")
+    legacy_path = str(tmp_path / "legacy")
+    idx.save(new_path)
+    _rewrite_as_legacy_checkpoint(new_path, legacy_path)
+
+    loaded = Index.load(legacy_path)
+    assert loaded.schema == Schema(tags=("cat",), nums=("v",))
+    assert loaded.numeric_field == "v"          # deprecated accessor shims
+    assert loaded.store.rec_values.shape == (500, 1)
+    for seed in (0, 1, 2):
+        q = np.random.default_rng(seed).normal(0, 1, 16).astype(np.float32)
+        for f in (None, (Tag("cat") == 2) & (Num("v") < 50.0)):
+            req = SearchRequest(query=q, filter=f)
+            a, b = idx.search(req), loaded.search(req)
+            np.testing.assert_array_equal(a.ids, b.ids)
+            np.testing.assert_allclose(a.dists, b.dists, rtol=1e-6)
+    assert loaded.record_metadata(3) == idx.record_metadata(3)
