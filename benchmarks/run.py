@@ -9,6 +9,8 @@
   kernels — hot-loop micro-benchmarks
   build  — Vamana build throughput: batched pipeline vs numpy reference
            (writes BENCH_build.json)
+  search — fused hop pipeline vs the pre-fused baseline per mode
+           (writes BENCH_search.json)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig2,...]
 """
@@ -26,9 +28,10 @@ def main() -> None:
                     help="comma-separated subset of benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import (bench_build, fig2_selectivity, fig5_6_label,
-                            fig7_9_workloads, fig10_11_cost_model,
-                            kernels_bench, table3_memory)
+    from benchmarks import (bench_build, bench_search, fig2_selectivity,
+                            fig5_6_label, fig7_9_workloads,
+                            fig10_11_cost_model, kernels_bench,
+                            table3_memory)
     suites = {
         "fig2": fig2_selectivity.run,
         "fig5_6": fig5_6_label.run,
@@ -37,6 +40,7 @@ def main() -> None:
         "table3": table3_memory.run,
         "kernels": kernels_bench.run,
         "build": bench_build.run,
+        "search": bench_search.run,
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -85,7 +85,17 @@ def store_shardings(plan: ShardPlan, store: RecordStore) -> RecordStore:
 
 
 def make_sharded_fetch(plan: ShardPlan, n_total: int) -> Callable:
-    """Fetch-by-global-id inside shard_map: masked local gather + psum."""
+    """Fetch-by-global-id inside shard_map: masked local gather + psum.
+
+    Fetch contract (shared with ``search.local_fetch``): ``ids`` may be
+    any shape — the fused batched hop loop issues ONE flat ``(B·W,)``
+    fetch per hop for the whole query batch (and one ``(B·W·R,)`` fetch
+    in strict mode), so the psum coalesces every query's reads into a
+    single collective; returned arrays are ``ids.shape + record_dims``.
+    Inside the loop the search only consults the replicated in-memory
+    tier (PQ codes, Bloom words, bucket codes, the visited slot table),
+    so the id space is defined by ``codes.shape[0]``, never by the local
+    shard size."""
     n_shards = plan.n_shards
     shard_size = n_total // n_shards
     axis_names = plan.shard_axes

@@ -269,12 +269,22 @@ class FilteredANNEngine:
             blooms = self.mem.blooms
             buckets = self.mem.bucket_codes
 
-        rec_labels = rec_labels.at[n0:n_new].set(jnp.asarray(new_rec_labels))
-        rec_values = rec_values.at[n0:n_new].set(jnp.asarray(new_values))
-        self.codes = codes.at[n0:n_new].set(new_codes)
+        # donated row writes (graph.write_rows): steady-state inserts reuse
+        # the capacity-padded buffers in place instead of paying the
+        # O(capacity) functional-update copy per array (ROADMAP item). The
+        # pre-insert arrays are consumed — holders of a stale
+        # ``engine.store``/``engine.mem`` must re-read after insert.
+        rec_labels = graph.write_rows(
+            rec_labels, jnp.asarray(new_rec_labels, rec_labels.dtype), n0)
+        rec_values = graph.write_rows(
+            rec_values, jnp.asarray(new_values, rec_values.dtype), n0)
+        self.codes = graph.write_rows(codes, new_codes.astype(codes.dtype),
+                                      n0)
         self.mem = InMemory(
-            blooms=blooms.at[n0:n_new].set(jnp.asarray(new_blooms)),
-            bucket_codes=buckets.at[n0:n_new].set(jnp.asarray(new_buckets)))
+            blooms=graph.write_rows(
+                blooms, jnp.asarray(new_blooms, blooms.dtype), n0),
+            bucket_codes=graph.write_rows(
+                buckets, jnp.asarray(new_buckets, buckets.dtype), n0))
         self.store = RecordStore(
             vectors=self._builder.data_device, neighbors=adj_dev,
             dense_neighbors=jnp.asarray(dense), rec_labels=rec_labels,

@@ -340,10 +340,29 @@ def _scatter_pairs(adj_ext: jax.Array, tgt: jax.Array, src: jax.Array):
     return adj_ext, st, ss, overflow
 
 
-@functools.partial(jax.jit, static_argnames=("r", "alpha"))
+@functools.partial(jax.jit, donate_argnums=(0,))
+def write_rows(buf: jax.Array, rows: jax.Array, start) -> jax.Array:
+    """Donated in-place row write: ``buf[start:start+len(rows)] = rows``.
+
+    The capacity-padded insert path funnels every device-array row write
+    through this jitted helper so XLA reuses the input buffer
+    (``donate_argnums``) instead of materializing the O(capacity)
+    functional-update copy a bare ``.at[...].set`` outside jit pays.
+    ``start`` is traced (dynamic), so steady-state inserts of one batch
+    shape compile exactly once. The donated input is DELETED — callers
+    must own ``buf`` exclusively and rebind the result.
+    """
+    idx = (jnp.asarray(start, jnp.int32),) + (0,) * (buf.ndim - 1)
+    return jax.lax.dynamic_update_slice(buf, rows, idx)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "alpha"),
+                   donate_argnums=(1,))
 def _link_batch(data: jax.Array, adj_ext: jax.Array, ids: jax.Array,
                 live: jax.Array, pool_ids: jax.Array, r: int, alpha: float):
-    """Prune an insertion batch's rows and scatter their reverse edges."""
+    """Prune an insertion batch's rows and scatter their reverse edges.
+    ``adj_ext`` is donated: the row set + reverse scatter reuse its buffer
+    (callers rebind the returned array)."""
     dump = adj_ext.shape[0] - 1
     cand = jnp.concatenate([pool_ids, adj_ext[ids]], axis=1)
     cand = _dedup_ascending(cand, ids)
@@ -581,8 +600,8 @@ class IncrementalBuilder:
         self._grow(self.n + m)
         new_ids = np.arange(self.n, self.n + m, dtype=np.int64)
         self._data_host[self.n:self.n + m] = vectors
-        self._data_dev = self._data_dev.at[self.n:self.n + m].set(
-            jnp.asarray(vectors))
+        self._data_dev = write_rows(self._data_dev, jnp.asarray(vectors),
+                                    self.n)
         for s in range(0, m, self.batch):
             ids = new_ids[s:s + self.batch].astype(np.int32)
             ids, live = _pad_batch(

@@ -22,6 +22,37 @@ Modes
 
 Exact verification piggybacks on the re-rank fetch: every explored record's
 full vector *and* attributes arrive in the same (already-counted) pages.
+
+Hop pipeline (docs/perf.md has the diagram)
+-------------------------------------------
+The hot loop is built from shape-static, near-linear primitives:
+
+* **Probabilistic visited set** — a per-query hashed slot table (the
+  device analogue of the paper's Bloom superset) replaces the pairwise
+  dedup broadcasts against the pool and the explored buffer. Candidates
+  are marked when *admitted* to the pool merge (entries at init); a slot
+  collision only skips re-exploration of a node, it can never admit an
+  invalid result (verification is exact). Below ``VISITED_SLOTS_MAX`` ids
+  the table covers the id space and the set is exact.
+* **Sorted-pool invariant** — the pool stays key-ascending, so the merge
+  is a fixed-size concatenate + one ``top_k`` instead of a full argsort,
+  and the early-termination bound (the l_valid-th verified distance) is
+  tracked incrementally in a small sorted buffer instead of re-sorting
+  the whole explored buffer every iteration.
+* **Fused candidate pass** — PQ ADC distance + approximate membership +
+  invalid-penalty key for the whole ``(B, W·(R+R_d))`` candidate slab in
+  one kernel (``kernels/ops.hop_fused``); the loop itself runs genuinely
+  batched (no ``vmap``) so the kernel amortizes across queries.
+
+Three implementations share the semantics:
+
+* :func:`filtered_search` — the fused batched pipeline (production path).
+* :func:`filtered_search_ref` — the jnp oracle: same dedup/admission
+  semantics, naive primitives (``vmap`` over queries, full argsorts,
+  unfused gathers). A/B parity: identical ``io_pages``/``explored``.
+* :func:`filtered_search_legacy` — the pre-fused-pipeline implementation
+  (pairwise dedup broadcasts, per-iteration result re-sort), kept as the
+  baseline that ``benchmarks/bench_search.py`` measures speedups against.
 """
 from __future__ import annotations
 
@@ -34,10 +65,14 @@ import jax.numpy as jnp
 
 from repro.core import pq as pq_mod
 from repro.core.records import RecordStore
-from repro.core.selectors import InMemory, QueryFilter, is_member, is_member_approx
+from repro.core.selectors import (InMemory, QueryFilter, is_member,
+                                  is_member_approx, kernel_filter_params,
+                                  kernel_view)
+from repro.kernels import ops as kops
+from repro.kernels.ref import INVALID_PENALTY   # single source (1e12)
 
-INVALID_PENALTY = jnp.float32(1e12)
 BIG = jnp.float32(1e30)
+VISITED_SLOTS_MAX = 1 << 20   # beyond this the visited set hashes (approx.)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,8 +107,12 @@ def _exact_sq_dist(vecs, q):
 
 
 def local_fetch(store: RecordStore, ids: jax.Array) -> dict:
-    """Single-host record fetch: plain gathers. The distributed engine
-    (core/distributed.py) swaps in a psum-combined sharded fetch."""
+    """Single-host record fetch: plain gathers.
+
+    ``ids`` may be any shape — the batched hop loop passes one flat
+    ``(B·W,)`` vector per hop so the whole batch's reads coalesce. The
+    distributed engine (core/distributed.py) swaps in a psum-combined
+    sharded fetch honouring the same contract."""
     return {
         "vectors": store.vectors[ids],
         "neighbors": store.neighbors[ids],
@@ -82,6 +121,89 @@ def local_fetch(store: RecordStore, ids: jax.Array) -> dict:
         "rec_values": store.rec_values[ids],
     }
 
+
+# ---------------------------------------------------------------------------
+# Hop-pipeline primitives
+# ---------------------------------------------------------------------------
+
+def _visited_spec(n_ids: int) -> tuple[int, int]:
+    """(n_slots, shift) for the visited slot table over ``n_ids`` ids.
+
+    Exact (identity-indexed) while the id space fits in VISITED_SLOTS_MAX
+    slots; hashed (multiply-shift) beyond — false positives then skip
+    re-exploration of the colliding node (Bloom-superset semantics), never
+    break result validity."""
+    bits = max(8, int(max(n_ids - 1, 1)).bit_length())
+    bits = min(bits, VISITED_SLOTS_MAX.bit_length() - 1)
+    return 1 << bits, 32 - bits
+
+
+def _visited_slot(ids: jax.Array, n_ids: int) -> jax.Array:
+    n_slots, shift = _visited_spec(n_ids)
+    if n_slots >= n_ids:
+        return ids
+    h = ids.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+    return (h >> shift).astype(jnp.int32)
+
+
+def _first_occurrence(cand: jax.Array, live: jax.Array,
+                      n_ids: int) -> jax.Array:
+    """True at the first slab-order occurrence of each id (last axis).
+
+    Exact intra-slab dedup in O(C log C) — the 2-hop sample repeats ids
+    and W beams collide; the legacy path paid an O(C²) pairwise tril
+    broadcast for the same mask. ``(id, position)`` pairs pack into one
+    int32 so a single-key sort + binary search replaces the variadic
+    sort + argsort + invert dance (XLA's CPU variadic sort is a scalar
+    loop — the packed form is ~7× faster there, and no worse on TPU);
+    past ~2^31/C ids the packing would overflow and the exact two-key
+    sort takes over (static branch)."""
+    c = cand.shape[-1]
+    key = jnp.where(live, cand, n_ids)
+    pos = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32), key.shape)
+    if (n_ids + 1) * c >= 2 ** 31:
+        # packed key would overflow int32 (and int64 silently truncates
+        # without jax_enable_x64): fall back to the exact two-key sort.
+        # Slower per hop, but only reachable past ~2^31/C ids.
+        skey, spos = jax.lax.sort((key, pos), num_keys=2)
+        prev = jnp.concatenate(
+            [jnp.full(skey.shape[:-1] + (1,), -2, skey.dtype),
+             skey[..., :-1]], axis=-1)
+        first_sorted = skey != prev
+        inv = jnp.argsort(spos, axis=-1)
+        return jnp.take_along_axis(first_sorted, inv, axis=-1)
+    packed = key * c + pos
+    sp = jnp.sort(packed, axis=-1)
+    # leftmost occurrence of each key: unrolled binary search over the
+    # packed keys (cheaper than vmapped searchsorted on CPU)
+    tgt = key * c
+    lo = jnp.zeros_like(tgt)
+    hi = jnp.full_like(tgt, c)
+    # c.bit_length() halvings collapse the [lo, hi) range of width c to
+    # empty; one fewer leaves a 1-wide range when c is a power of two
+    for _ in range(c.bit_length()):
+        mid = (lo + hi) >> 1
+        v = jnp.take_along_axis(sp, mid, axis=-1)
+        right = v < tgt
+        lo = jnp.where(right, mid + 1, lo)
+        hi = jnp.where(right, hi, mid)
+    firstpos = jnp.take_along_axis(sp, jnp.minimum(lo, c - 1), axis=-1) % c
+    return firstpos == pos
+
+
+def _slab_pq(codes: jax.Array, ids: jax.Array, tables: jax.Array) -> jax.Array:
+    """Batched ADC distances for a gathered candidate slab.
+
+    codes (N, M); ids (B, S); tables (B, M, K) -> (B, S) float32.
+    Delegates to the single bitwise-pinned gather+reduce in
+    ``kernels.ref.adc_slab_ref`` (== ``pq.adc_lookup`` values)."""
+    from repro.kernels.ref import adc_slab_ref
+    return adc_slab_ref(codes[ids], tables)
+
+
+# ---------------------------------------------------------------------------
+# Fused batched pipeline (production path)
+# ---------------------------------------------------------------------------
 
 @functools.partial(
     jax.jit,
@@ -95,7 +217,9 @@ def filtered_search(store: RecordStore, codes: jax.Array,
                     entries: jax.Array | None = None) -> SearchResult:
     """Run the filtered beam search for a batch of queries.
 
-    codes: (N, M) uint8 PQ codes (the replicated in-memory tier).
+    codes: (N, M) uint8 PQ codes (the replicated in-memory tier — its
+    leading dim, not the possibly-sharded record store's, defines the
+    global id space).
     qfilters: batched QueryFilter (leading dim B).
     entries: optional (B, E) int32 per-query entry seeds (-1 pad; each row
     must hold distinct ids). Defaults to the shared ``entry`` (medoid).
@@ -103,6 +227,470 @@ def filtered_search(store: RecordStore, codes: jax.Array,
     analogue of Filtered-DiskANN's precomputed per-label entry points —
     because its valid-only pool dies immediately when the medoid's
     neighborhood contains no valid record.
+    """
+    p = params
+    l_valid = p.l_valid or p.l_search
+    P, W = p.l_search, p.beam_width
+    R = store.degree
+    Rd = store.dense_degree if p.mode == "spec_in" else 0
+    C = R + Rd                                   # candidates per beam row
+    res_cap = p.max_hops * W                     # explored-record buffer
+    rec_pages = store.pages_dense if p.mode == "spec_in" else store.pages_std
+    B, D = queries.shape
+    n_ids = codes.shape[0]
+    n_slots, _ = _visited_spec(n_ids)
+    if entries is None:
+        entries = jnp.full((B, 1), entry, jnp.int32)
+    E = entries.shape[1]
+    assert E <= P, "entry seeds exceed the pool length"
+
+    # ---- hoisted per-call constants (nothing below re-materializes them
+    # per hop: tested by the compile-artifact suite) ----
+    tables = jax.vmap(lambda q: pq_mod.distance_table(codebook, q))(queries)
+    bW = jnp.arange(B, dtype=jnp.int32)[:, None]
+    w_iota = jnp.arange(W, dtype=jnp.int32)[None, :]
+    is_direct = jnp.concatenate(
+        [jnp.ones((R,), bool), jnp.zeros((Rd,), bool)])
+    if p.mode == "spec_in":
+        bl_i32, bc_i32 = kernel_view(mem)
+        f_scal, f_om, f_rf, f_blo, f_bhi = kernel_filter_params(qfilters)
+        # rare-list membership as a per-query table, built once: one
+        # scatter here replaces a (B, W·C)-wide binary search over the
+        # CAP-length merged list every hop. Pad ids (INT_PAD) clip to the
+        # sentinel column. One BYTE per id per query (jnp.bool_ is
+        # byte-backed; jnp has no OR-scatter to pack words) — ~N·B bytes,
+        # fine at this repo's corpus scales; a Pallas word-packed variant
+        # is the TPU-scale follow-up (see ROADMAP).
+        merged_tbl = jnp.zeros((B, n_ids + 1), jnp.bool_).at[
+            bW, jnp.minimum(qfilters.merged_ids, n_ids)].set(True)
+
+    # ---- entry seeding (pool kept key-ascending from the start) ----
+    ent_valid = entries >= 0
+    safe_ent = jnp.where(ent_valid, entries, 0)
+    entry_d = jax.vmap(distance_fn)(codes[safe_ent], tables)       # (B, E)
+    entry_ok = jax.vmap(is_member_approx, in_axes=(0, 0, None))(
+        qfilters, safe_ent, mem) & ent_valid
+    entry_key = jnp.where(
+        ent_valid, entry_d + jnp.where(entry_ok, 0.0, INVALID_PENALTY), BIG)
+    order0 = jnp.argsort(entry_key, axis=1)
+    pool_ids = jnp.full((B, P), -1, jnp.int32).at[:, :E].set(
+        jnp.take_along_axis(jnp.where(ent_valid, entries, -1), order0, 1))
+    pool_key = jnp.full((B, P), BIG, jnp.float32).at[:, :E].set(
+        jnp.take_along_axis(entry_key, order0, 1))
+    pool_exp = jnp.ones((B, P), jnp.bool_).at[:, :E].set(
+        jnp.take_along_axis(~ent_valid, order0, 1))
+
+    visited = jnp.zeros((B, n_slots), jnp.bool_)
+    visited = visited.at[
+        bW, jnp.where(ent_valid, _visited_slot(safe_ent, n_ids), n_slots)
+    ].set(True, mode="drop")
+
+    res_ids = jnp.full((B, res_cap), -1, jnp.int32)
+    res_d = jnp.full((B, res_cap), BIG, jnp.float32)
+    res_valid = jnp.zeros((B, res_cap), jnp.bool_)
+    vtop = jnp.full((B, l_valid), BIG, jnp.float32)   # sorted valid top-l
+    n_okc = jnp.zeros((B,), jnp.int32)
+    counters = jnp.zeros((B, 4), jnp.int32)   # io, dist_comps, approx, hops
+    active = jnp.any(~pool_exp & (pool_key < BIG), axis=1)
+
+    def body(state):
+        (pool_ids, pool_key, pool_exp, visited, res_ids, res_d, res_valid,
+         vtop, n_okc, counters, active) = state
+        hops = counters[:, 3]
+
+        # ---- 1. pick best-W unexplored (pool is sorted; key masked) ----
+        masked = jnp.where(pool_exp, BIG, pool_key)
+        negk, sel = jax.lax.top_k(-masked, W)              # (B, W)
+        cur_ids = jnp.take_along_axis(pool_ids, sel, 1)
+        cur_live = (-negk < BIG) & active[:, None]
+        pool_exp = pool_exp.at[
+            bW, jnp.where(active[:, None], sel, P)].set(True, mode="drop")
+        safe_cur = jnp.where(cur_live, cur_ids, 0)
+
+        # ---- 2. fetch records: one coalesced gather for the whole batch ----
+        rec = fetch_fn(store, safe_cur.reshape(-1))
+        vecs = rec["vectors"].reshape(B, W, D)
+        nbrs = rec["neighbors"].reshape(B, W, R)
+        rl = rec["rec_labels"].reshape(B, W, -1)
+        rv = rec["rec_values"].reshape(B, W, -1)
+        io = counters[:, 0] + jnp.sum(cur_live, axis=1) * rec_pages
+
+        # ---- 3. re-rank + piggybacked exact verification ----
+        diff = vecs - queries[:, None, :]
+        ex_d = jnp.where(cur_live, jnp.sum(diff * diff, axis=-1), BIG)
+        ex_ok = jax.vmap(is_member)(qfilters, rl, rv) & cur_live
+        pos = jnp.where(active[:, None], hops[:, None] * W + w_iota, res_cap)
+        res_ids = res_ids.at[bW, pos].set(
+            jnp.where(cur_live, cur_ids, -1), mode="drop")
+        res_d = res_d.at[bW, pos].set(ex_d, mode="drop")
+        res_valid = res_valid.at[bW, pos].set(ex_ok, mode="drop")
+        # incremental early-termination bound: merge the W new verified
+        # distances into the sorted top-l_valid buffer (no res re-sort)
+        vtop = -jax.lax.top_k(
+            -jnp.concatenate([vtop, jnp.where(ex_ok, ex_d, BIG)], axis=1),
+            l_valid)[0]
+        n_okc = n_okc + jnp.sum(ex_ok, axis=1)
+
+        # ---- 4. candidate slab + visited-set dedup ----
+        if p.mode == "spec_in":
+            dn = rec["dense_neighbors"].reshape(B, W, Rd)
+            cand = jnp.concatenate([nbrs, dn], axis=2)     # (B, W, C)
+        else:
+            cand = nbrs
+        cand = jnp.where(cur_live[:, :, None], cand, -1).reshape(B, W * C)
+        live = cand >= 0
+        safe_cand = jnp.where(live, cand, 0)
+        slots = _visited_slot(safe_cand, n_ids)
+        seen = jnp.take_along_axis(visited, slots, axis=1)
+        fresh = live & ~seen & _first_occurrence(cand, live, n_ids)
+
+        # ---- 5. fused candidate pass (distance + membership + key) ----
+        # the fused kernel computes the ADC distance itself (bitwise equal
+        # to pq.adc_lookup); a non-default distance_fn routes every slab
+        # through the caller's function instead, keeping A/B parity with
+        # the oracle — resolved statically, no cost on the default path
+        default_dist = distance_fn is pq_mod.adc_lookup
+
+        def slab_dist(ids_slab):
+            if default_dist:
+                return _slab_pq(codes, ids_slab, tables)
+            return jax.vmap(distance_fn)(codes[ids_slab], tables)
+
+        if p.mode == "post":
+            ok = fresh
+            key_slab = slab_dist(safe_cand)
+            approx_c = counters[:, 2]
+        elif p.mode == "spec_in":
+            if default_dist:
+                in_merged = jnp.take_along_axis(merged_tbl, safe_cand,
+                                                axis=1)
+                key_slab, ok_approx = kops.hop_fused(
+                    codes[safe_cand], bl_i32[safe_cand], bc_i32[safe_cand],
+                    in_merged, tables, f_scal, f_om, f_rf, f_blo, f_bhi)
+            else:
+                ok_approx = jax.vmap(is_member_approx, in_axes=(0, 0, None))(
+                    qfilters, safe_cand, mem)
+                key_slab = slab_dist(safe_cand) + jnp.where(
+                    ok_approx, 0.0, INVALID_PENALTY)
+            ok = ok_approx & fresh
+            approx_c = counters[:, 2] + jnp.sum(live, axis=1)
+        else:  # strict_in: read every fresh neighbor's attrs from "SSD"
+            nrec = fetch_fn(store, safe_cand.reshape(-1))
+            n_rl = nrec["rec_labels"].reshape(B, W * C, -1)
+            n_rv = nrec["rec_values"].reshape(B, W * C, store.n_fields)
+            ok = jax.vmap(is_member)(qfilters, n_rl, n_rv) & fresh
+            io = io + jnp.sum(fresh, axis=1)               # 1 page / neighbor
+            key_slab = slab_dist(safe_cand)
+            approx_c = counters[:, 2]
+
+        # ---- 6. slot selection: up to R approx-valid, bridge back-fill ----
+        if p.mode == "spec_in":
+            okr = ok.reshape(B, W, C)
+            fill = (fresh.reshape(B, W, C) & ~okr
+                    & is_direct[None, None, :])
+            rank_ok = jnp.cumsum(okr.astype(jnp.int32), axis=2) - 1
+            rank_fill = jnp.cumsum(fill.astype(jnp.int32), axis=2) - 1
+            n_ok_row = jnp.sum(okr, axis=2, keepdims=True)
+            order_key = jnp.where(
+                okr, rank_ok.astype(jnp.float32),
+                jnp.where(fill, (n_ok_row + rank_fill).astype(jnp.float32),
+                          BIG))
+            _, take = jax.lax.top_k(-order_key, R)         # (B, W, R)
+            sel_ok = jnp.take_along_axis(okr, take, 2).reshape(B, W * R)
+            sel_fill = jnp.take_along_axis(fill, take, 2).reshape(B, W * R)
+            sel_live = sel_ok | sel_fill
+            sel_ids = jnp.take_along_axis(
+                cand.reshape(B, W, C), take, 2).reshape(B, W * R)
+            sel_key = jnp.take_along_axis(
+                key_slab.reshape(B, W, C), take, 2).reshape(B, W * R)
+            new_ids = jnp.where(sel_live, sel_ids, -1)
+            new_key = jnp.where(sel_live, sel_key, BIG)
+        else:
+            sel_live = ok
+            new_ids = jnp.where(ok, cand, -1)
+            new_key = jnp.where(ok, key_slab, BIG)
+        dist_c = counters[:, 1] + jnp.sum(sel_live, axis=1)
+        # mark *admitted* candidates visited (pool entries are marked from
+        # init, explored ones were admitted earlier): a fresh candidate
+        # that loses slot selection stays unmarked and may be re-proposed
+        # through another parent — the legacy pool/explored-membership
+        # dedup behaves the same way
+        visited = visited.at[
+            bW, jnp.where(sel_live,
+                          _visited_slot(jnp.where(sel_live, new_ids, 0),
+                                        n_ids),
+                          n_slots)].set(True, mode="drop")
+
+        # ---- 7. sorted-pool merge: concatenate + one top_k ----
+        all_key = jnp.concatenate([pool_key, new_key], axis=1)
+        negm, midx = jax.lax.top_k(-all_key, P)
+        pool_key = -negm
+        pool_ids = jnp.take_along_axis(
+            jnp.concatenate([pool_ids, new_ids], axis=1), midx, 1)
+        pool_exp = jnp.take_along_axis(
+            jnp.concatenate(
+                [pool_exp, jnp.zeros(new_ids.shape, jnp.bool_)], axis=1),
+            midx, 1)
+
+        # ---- 8. per-query termination ----
+        hops_new = hops + active.astype(jnp.int32)
+        frontier = jnp.any(~pool_exp & (pool_key < BIG), axis=1)
+        best_unexp = jnp.min(jnp.where(pool_exp, BIG, pool_key), axis=1)
+        settled = (n_okc >= l_valid) & (best_unexp > vtop[:, l_valid - 1])
+        active = active & (hops_new < p.max_hops) & frontier & ~settled
+        counters = jnp.stack([io, dist_c, approx_c, hops_new], axis=1)
+        return (pool_ids, pool_key, pool_exp, visited, res_ids, res_d,
+                res_valid, vtop, n_okc, counters, active)
+
+    state = (pool_ids, pool_key, pool_exp, visited, res_ids, res_d,
+             res_valid, vtop, n_okc, counters, active)
+    state = jax.lax.while_loop(lambda s: jnp.any(s[-1]), body, state)
+    (pool_ids, pool_key, pool_exp, visited, res_ids, res_d, res_valid,
+     vtop, n_okc, counters, active) = state
+
+    # ---- final: top-k verified-valid by exact distance (once) ----
+    final_key = jnp.where(res_valid, res_d, BIG)
+    _, order = jax.lax.top_k(-final_key, p.k)
+    top_valid = jnp.take_along_axis(res_valid, order, 1)
+    out_ids = jnp.where(top_valid, jnp.take_along_axis(res_ids, order, 1), -1)
+    out_d = jnp.where(top_valid, jnp.take_along_axis(res_d, order, 1),
+                      jnp.inf)
+    n_valid = jnp.sum(res_valid, axis=1)
+    n_explored = jnp.sum(res_ids >= 0, axis=1)
+    fp = jnp.sum((res_ids >= 0) & ~res_valid, axis=1)
+    return SearchResult(out_ids, out_d, counters[:, 0], counters[:, 3],
+                        counters[:, 1], counters[:, 2], n_valid, fp,
+                        n_explored)
+
+
+# ---------------------------------------------------------------------------
+# jnp reference oracle (same semantics, naive primitives)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "distance_fn", "fetch_fn"))
+def filtered_search_ref(store: RecordStore, codes: jax.Array,
+                        codebook: pq_mod.PQCodebook, mem: InMemory,
+                        qfilters: QueryFilter, queries: jax.Array, entry: int,
+                        params: SearchParams,
+                        distance_fn: Callable = pq_mod.adc_lookup,
+                        fetch_fn: Callable = local_fetch,
+                        entries: jax.Array | None = None) -> SearchResult:
+    """The A/B oracle for :func:`filtered_search`.
+
+    Same hop semantics — an *exact* ever-proposed visited set, the same
+    admission keys and early termination — expressed with the naive
+    primitives the fused path replaces: ``vmap`` over queries, a full
+    argsort pool merge, a full re-sort of the explored buffer in the loop
+    condition, and separate unfused distance/membership gathers. Parity
+    bar: identical ``io_pages``/``explored`` counters, recall within 1%.
+    """
+    p = params
+    l_valid = p.l_valid or p.l_search
+    P, W = p.l_search, p.beam_width
+    R = store.degree
+    Rd = store.dense_degree if p.mode == "spec_in" else 0
+    res_cap = p.max_hops * W
+    rec_pages = store.pages_dense if p.mode == "spec_in" else store.pages_std
+    n_ids = codes.shape[0]
+    if entries is None:
+        entries = jnp.full((queries.shape[0], 1), entry, jnp.int32)
+
+    def one(q, qf, ent):
+        table = pq_mod.distance_table(codebook, q)            # (M, ksub)
+
+        e_n = ent.shape[0]
+        ent_valid = ent >= 0
+        safe_ent = jnp.where(ent_valid, ent, 0)
+        entry_d = distance_fn(codes[safe_ent], table)         # (E,)
+        entry_ok = is_member_approx(qf, safe_ent, mem) & ent_valid
+        entry_key = jnp.where(
+            ent_valid, entry_d + jnp.where(entry_ok, 0.0, INVALID_PENALTY),
+            BIG)
+
+        pool_ids = jnp.full((P,), -1, jnp.int32).at[:e_n].set(
+            jnp.where(ent_valid, ent, -1))
+        pool_key = jnp.full((P,), BIG, jnp.float32).at[:e_n].set(entry_key)
+        explored = jnp.ones((P,), jnp.bool_).at[:e_n].set(~ent_valid)
+        seen = jnp.zeros((n_ids,), jnp.bool_).at[
+            jnp.where(ent_valid, safe_ent, n_ids)].set(True, mode="drop")
+
+        res_ids = jnp.full((res_cap,), -1, jnp.int32)
+        res_d = jnp.full((res_cap,), BIG, jnp.float32)
+        res_valid = jnp.zeros((res_cap,), jnp.bool_)
+
+        counters = jnp.zeros((4,), jnp.int32)    # io, dist_comps, approx, hops
+
+        def cond(state):
+            (pool_ids, pool_key, explored, seen, res_ids, res_d, res_valid,
+             counters) = state
+            hops = counters[3]
+            frontier = jnp.any(~explored[:P] & (pool_key[:P] < BIG))
+            # paper early termination: top-l_valid verified & no closer
+            # frontier (full re-sort every iteration — the oracle keeps the
+            # naive form the fused path's incremental bound replaces)
+            n_ok = jnp.sum(res_valid)
+            kth = jnp.sort(jnp.where(res_valid, res_d, BIG))[
+                jnp.minimum(l_valid, res_cap) - 1]
+            best_unexp = jnp.min(jnp.where(explored, BIG, pool_key))
+            settled = (n_ok >= l_valid) & (best_unexp > kth)
+            return (hops < p.max_hops) & frontier & ~settled
+
+        def body(state):
+            (pool_ids, pool_key, explored, seen, res_ids, res_d, res_valid,
+             counters) = state
+            # ---- 1. pick best-W unexplored (by priority key) ----
+            masked = jnp.where(explored, BIG, pool_key)
+            _, sel = jax.lax.top_k(-masked, W)
+            cur_ids = pool_ids[sel]                            # (W,)
+            cur_live = masked[sel] < BIG
+            explored = explored.at[sel].set(True)
+            safe_cur = jnp.where(cur_live, cur_ids, 0)
+
+            # ---- 2. fetch records (vector + neighbors + attrs: one I/O) ----
+            rec = fetch_fn(store, safe_cur)
+            vecs = rec["vectors"]                              # (W, D)
+            nbrs = rec["neighbors"]                            # (W, R)
+            rl = rec["rec_labels"]                             # (W, ML)
+            rv = rec["rec_values"]                             # (W, F)
+            io = counters[0] + jnp.sum(cur_live) * rec_pages
+
+            # ---- 3. re-rank + piggybacked exact verification ----
+            ex_d = jnp.where(cur_live, _exact_sq_dist(vecs, q), BIG)
+            ex_ok = is_member(qf, rl, rv) & cur_live
+            hops = counters[3]
+            start = hops * W
+            res_ids = jax.lax.dynamic_update_slice(
+                res_ids, jnp.where(cur_live, cur_ids, -1), (start,))
+            res_d = jax.lax.dynamic_update_slice(res_d, ex_d, (start,))
+            res_valid = jax.lax.dynamic_update_slice(res_valid, ex_ok,
+                                                     (start,))
+
+            # ---- 4. candidate generation per mode ----
+            if p.mode == "spec_in":
+                dn = rec["dense_neighbors"]                    # (W, Rd)
+                cand = jnp.concatenate([nbrs, dn], axis=1)     # (W, R+Rd)
+                is_direct = jnp.concatenate(
+                    [jnp.ones((W, R), bool), jnp.zeros((W, Rd), bool)],
+                    axis=1)
+            else:
+                cand = nbrs
+                is_direct = jnp.ones((W, R), bool)
+            cand = jnp.where(cur_live[:, None], cand, -1)
+            live = cand >= 0
+            safe_cand = jnp.where(live, cand, 0)
+
+            # exact visited set (ever-admitted ∪ entries) + intra-slab
+            # first-occurrence — the O(N)-memory oracle form of the fused
+            # path's hashed slot table
+            c = cand.shape[1]
+            first = _first_occurrence(
+                cand.reshape(-1), live.reshape(-1), n_ids).reshape(W, c)
+            fresh = live & ~seen[safe_cand] & first
+
+            approx_n = jnp.sum(live)
+            if p.mode == "post":
+                ok = fresh
+                counters_approx = counters[2]
+            elif p.mode == "spec_in":
+                ok = is_member_approx(qf, safe_cand, mem) & fresh
+                counters_approx = counters[2] + approx_n
+            else:  # strict_in: read every fresh neighbor's attrs from "SSD"
+                nrec = fetch_fn(store, safe_cand.reshape(-1))
+                n_rl = nrec["rec_labels"].reshape(W, R, -1)    # (W, R, ML)
+                n_rv = nrec["rec_values"].reshape(W, R, store.n_fields)
+                ok = is_member(qf, n_rl, n_rv) & fresh
+                io = io + jnp.sum(fresh)                       # 1 page / nbr
+                counters_approx = counters[2]
+
+            # ---- 5. slot selection: up to R approx-valid, bridge fill ----
+            if p.mode == "spec_in":
+                # first-come order (cheap, matches Table-1 compute accounting)
+                rank_ok = jnp.cumsum(ok.astype(jnp.int32), axis=1) - 1
+                fill = fresh & ~ok & is_direct
+                rank_fill = jnp.cumsum(fill.astype(jnp.int32), axis=1) - 1
+                n_ok_row = jnp.sum(ok, axis=1, keepdims=True)
+                order_key = jnp.where(
+                    ok, rank_ok.astype(jnp.float32),
+                    jnp.where(fill,
+                              (n_ok_row + rank_fill).astype(jnp.float32),
+                              BIG))
+                _, take = jax.lax.top_k(-order_key, R)          # (W, R)
+                sel_ids = jnp.take_along_axis(cand, take, axis=1)
+                sel_ok = jnp.take_along_axis(ok, take, axis=1)
+                sel_fill = jnp.take_along_axis(fill, take, axis=1)
+                sel_live = sel_ok | sel_fill
+            else:
+                sel_ids, sel_ok, sel_live = cand, ok, ok
+
+            # ---- 6. PQ distances for selected candidates (unfused) ----
+            flat_ids = sel_ids.reshape(-1)
+            flat_live = sel_live.reshape(-1)
+            flat_ok = sel_ok.reshape(-1)
+            pq_d = distance_fn(codes[jnp.where(flat_live, flat_ids, 0)],
+                               table)
+            key = pq_d + jnp.where(flat_ok, 0.0, INVALID_PENALTY)
+            key = jnp.where(flat_live, key, BIG)
+            dist_comps = counters[1] + jnp.sum(flat_live)
+            seen = seen.at[jnp.where(flat_live, flat_ids, n_ids)].set(
+                True, mode="drop")
+
+            # ---- 7. merge into pool (full argsort — the naive form) ----
+            all_ids = jnp.concatenate(
+                [pool_ids, jnp.where(flat_live, flat_ids, -1)])
+            all_key = jnp.concatenate([pool_key, key])
+            all_exp = jnp.concatenate([explored,
+                                       jnp.zeros_like(flat_live)])
+            order = jnp.argsort(all_key)[:P]
+            new_counters = jnp.stack([io, dist_comps, counters_approx,
+                                      hops + 1])
+            return (all_ids[order], all_key[order], all_exp[order], seen,
+                    res_ids, res_d, res_valid, new_counters)
+
+        state = (pool_ids, pool_key, explored, seen, res_ids, res_d,
+                 res_valid, counters)
+        state = jax.lax.while_loop(cond, body, state)
+        (pool_ids, pool_key, explored, seen, res_ids, res_d, res_valid,
+         counters) = state
+
+        # ---- final: top-k verified-valid by exact distance ----
+        final_key = jnp.where(res_valid, res_d, BIG)
+        order = jnp.argsort(final_key)[:p.k]
+        out_ids = jnp.where(res_valid[order], res_ids[order], -1)
+        out_d = jnp.where(res_valid[order], res_d[order], jnp.inf)
+        n_valid = jnp.sum(res_valid)
+        n_explored = jnp.sum(res_ids >= 0)
+        fp = jnp.sum((res_ids >= 0) & ~res_valid)
+        return (out_ids, out_d, counters[0], counters[3], counters[1],
+                counters[2], n_valid, fp, n_explored)
+
+    outs = jax.vmap(one)(queries, qfilters, entries)
+    return SearchResult(*outs)
+
+
+# ---------------------------------------------------------------------------
+# Pre-fused-pipeline implementation (benchmark baseline)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "distance_fn", "fetch_fn"))
+def filtered_search_legacy(store: RecordStore, codes: jax.Array,
+                           codebook: pq_mod.PQCodebook, mem: InMemory,
+                           qfilters: QueryFilter, queries: jax.Array,
+                           entry: int, params: SearchParams,
+                           distance_fn: Callable = pq_mod.adc_lookup,
+                           fetch_fn: Callable = local_fetch,
+                           entries: jax.Array | None = None) -> SearchResult:
+    """The pre-fused-pipeline search, kept verbatim as the benchmark
+    baseline (``benchmarks/bench_search.py`` asserts the fused path's
+    speedup against it). Its hop loop does quadratic work: pairwise dedup
+    broadcasts against the pool and the whole explored buffer, a full
+    argsort merge, and a full explored-buffer re-sort in the loop
+    condition. Dedup semantics differ slightly from the fused path (a
+    candidate dropped from the pool may be re-proposed), so counters are
+    not comparable — use :func:`filtered_search_ref` for A/B parity.
     """
     p = params
     l_valid = p.l_valid or p.l_search

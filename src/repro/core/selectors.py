@@ -91,10 +91,7 @@ def _range_parts(qf: QueryFilter, codes_or_values, lo, hi):
 def is_member_approx(qf: QueryFilter, ids: jax.Array, mem: InMemory) -> jax.Array:
     """No-false-negative superset predicate. ids: (...,) int32 -> bool (...,)."""
     g_bloom = mem.blooms[ids]
-    # pre-merged rare-label list membership (binary search)
-    pos = jnp.searchsorted(qf.merged_ids, ids)
-    pos = jnp.clip(pos, 0, qf.merged_ids.shape[-1] - 1)
-    in_merged = (jnp.take(qf.merged_ids, pos) == ids) & (pos < qf.merged_len)
+    in_merged = merged_membership(qf, ids)
     # frequent-label Bloom probes
     masks = qf.bloom_or_masks                              # (QL,)
     hit_any = jnp.any((masks[None, :] != 0)
@@ -151,6 +148,62 @@ def is_member(qf: QueryFilter, rec_labels: jax.Array,
     any_present = label_present | range_present
     return jnp.where(any_present,
                      jnp.where(qf.combine == C_OR, ok_or, ok_and), True)
+
+
+def merged_membership(qf: QueryFilter, ids: jax.Array) -> jax.Array:
+    """Rare-list membership of ``ids`` for ONE query (vmap for a batch).
+
+    The binary-search half of :func:`is_member_approx`, split out so the
+    fused hop kernel can consume it as a precomputed mask: searchsorted
+    does not vectorize inside a Pallas tile, but it is cheap in XLA
+    (O(c log CAP)) and the bloom/bucket half fuses on-chip.
+    """
+    pos = jnp.searchsorted(qf.merged_ids, ids)
+    pos = jnp.clip(pos, 0, qf.merged_ids.shape[-1] - 1)
+    return (jnp.take(qf.merged_ids, pos) == ids) & (pos < qf.merged_len)
+
+
+def kernel_view(mem: InMemory) -> tuple[jax.Array, jax.Array]:
+    """The in-memory tier in the fused-kernel layout.
+
+    Returns ``(blooms_i32 (N,), bucket_codes_i32 (N, F))`` — bit-exact
+    int32 views (Pallas TPU tiles have no uint32 lanes; bitwise ops on the
+    reinterpreted words are identical). Hoist the conversion out of the
+    hop loop: it is a one-time relayout per search call, not per hop.
+    """
+    bl = mem.blooms
+    if bl.dtype == jnp.uint32:
+        bl = jax.lax.bitcast_convert_type(bl, jnp.int32)
+    else:
+        bl = bl.astype(jnp.int32)
+    bc = mem.bucket_codes
+    if bc.ndim == 1:                                       # legacy (N,) tier
+        bc = bc[:, None]
+    return bl, bc.astype(jnp.int32)
+
+
+def kernel_filter_params(qf: QueryFilter) -> tuple:
+    """Flatten the approx half of a (possibly batched) QueryFilter into the
+    fused hop kernel's parameter block:
+
+    ``(scalars (..., 4) int32 [bloom_and_mask, label_mode, merged_mode,
+    combine], or_masks (..., QL) int32, range_field (..., NR) int32,
+    bucket_lo (..., NR) int32, bucket_hi (..., NR) int32)``.
+
+    uint32 masks are reinterpreted (not value-converted) so bit 31
+    survives.
+    """
+    def as_i32(x):
+        x = jnp.asarray(x)
+        if x.dtype == jnp.uint32:
+            return jax.lax.bitcast_convert_type(x, jnp.int32)
+        return x.astype(jnp.int32)
+
+    scalars = jnp.stack(
+        [as_i32(qf.bloom_and_mask), as_i32(qf.label_mode),
+         as_i32(qf.merged_mode), as_i32(qf.combine)], axis=-1)
+    return (scalars, as_i32(qf.bloom_or_masks), as_i32(qf.range_field),
+            as_i32(qf.bucket_lo), as_i32(qf.bucket_hi))
 
 
 def always_true_filter(ql: int, cap: int, nr: int = NR_DEFAULT) -> QueryFilter:

@@ -140,3 +140,22 @@ def make_selectors(ds: SynthFilteredDataset, engine, workload: str,
         else:
             raise ValueError(workload)
     return sels
+
+
+def make_sliding_range_selectors(engine, selectivity: float,
+                                 n_queries: int, field: int = 0) -> list:
+    """Per-query range filters of one controlled selectivity, sliding the
+    window across the value distribution so queries don't share a filter
+    — the mid-selectivity workload shape of the paper's Fig. 2 sweeps.
+    Shared by benchmarks/bench_search.py and the search A/B parity suite
+    (one definition, so both measure the same workload)."""
+    values = np.sort(np.asarray(engine.range_store.field_store(field).values))
+    n = values.size
+    width = max(1, int(round(selectivity * n)))
+    out = []
+    for i in range(n_queries):
+        lo_i = int((n - width) * (i / max(1, n_queries - 1)))
+        lo = float(values[lo_i])
+        hi = float(values[min(lo_i + width, n - 1)]) + 1e-3
+        out.append(RangeSelector(engine.range_store, lo, hi, field=field))
+    return out

@@ -1,0 +1,170 @@
+"""Pallas TPU kernel: fused per-hop candidate pass for filtered search.
+
+One VMEM pass over a whole ``(B, W·C)`` candidate slab computes, per
+candidate, everything the hop loop needs before the pool merge:
+
+  * **PQ ADC distance** — ``sum_m table[m, codes[c, m]]`` via the one-hot
+    compare + select + lane-reduction trick of ``kernels/pq_scan.py`` (the
+    gather rephrased so it vectorizes on the VPU).
+  * **approximate membership** — the bloom-word AND/OR probes plus the
+    NR-slot bucket-code range test of ``selectors.is_member_approx``. The
+    rare-list binary search arrives precomputed as the ``in_merged`` input
+    (see ``selectors.merged_membership``): searchsorted does not tile, the
+    bitwise half does.
+  * **invalid-penalty key** — ``distance + INVALID_PENALTY·(¬ok)``, the
+    pool-admission priority of speculative in-filtering.
+
+Per-query parameters (distance table, bloom masks, range slots) index by
+the grid's batch coordinate, so one launch serves the whole query batch —
+this is what makes the batched hop loop amortize: B queries × W beams ×
+(R+R_d) candidates in a single kernel instead of 3 unfused gathers per
+query under ``vmap``.
+
+Grid: ``(B, WC_pad // tile_c)``. VMEM per program (tile_c=512, M=16,
+K=256, F=4): codes 32 KB + table 16 KB + one-hot temp 512 KB — far under
+the ~16 MB v5e budget. The jnp oracle is ``kernels/ref.hop_fused_ref``;
+dispatch lives in ``kernels/ops.hop_fused`` (compiled on TPU,
+reference on CPU, interpret mode for tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import INVALID_PENALTY
+
+TILE_C = 512
+_PENALTY_LITERAL = 1e12   # the kernel body's copy: bodies cannot capture
+import numpy as _np                                 # traced array constants
+assert float(INVALID_PENALTY) == float(_np.float32(_PENALTY_LITERAL))
+
+
+def _hop_fused_kernel(codes_ref, blooms_ref, buckets_ref, merged_ref,
+                      table_ref, scal_ref, om_ref, rf_ref, blo_ref, bhi_ref,
+                      key_ref, ok_ref):
+    codes = codes_ref[0].astype(jnp.int32)            # (T, M)
+    blooms = blooms_ref[0]                            # (T,)
+    buckets = buckets_ref[0]                          # (T, F)
+    in_merged = merged_ref[0] != 0                    # (T,)
+    table = table_ref[0]                              # (M, K)
+    scal = scal_ref[0]                                # (4,)
+    om = om_ref[0]                                    # (QL,)
+    rf, blo, bhi = rf_ref[0], blo_ref[0], bhi_ref[0]  # (NR,)
+
+    t, f = buckets.shape
+    m, k = table.shape
+
+    # --- PQ ADC distance: one-hot gather, unrolled over static M ---
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (t, k), 1)
+    d = jnp.zeros((t,), jnp.float32)
+    for sub in range(m):
+        onehot = codes[:, sub][:, None] == lanes      # (T, K)
+        d = d + jnp.sum(jnp.where(onehot, table[sub, :][None, :], 0.0),
+                        axis=1)
+
+    # --- frequent-label Bloom probes ---
+    and_mask, label_mode = scal[0], scal[1]
+    merged_mode, combine = scal[2], scal[3]
+    and_ok = (blooms & and_mask) == and_mask          # (T,)
+    hit_any = jnp.zeros((t,), jnp.bool_)
+    for j in range(om.shape[0]):                      # QL static: unrolled
+        mask = om[j]
+        hit_any = hit_any | ((mask != 0) & ((blooms & mask) == mask))
+    has_or = jnp.any(om != 0)
+
+    label_or = jnp.where(merged_mode == 1, in_merged | hit_any,    # M_OR
+                         jnp.where(has_or, hit_any, False))
+    label_and = jnp.where(merged_mode == 2, in_merged & and_ok,    # M_AND
+                          and_ok)
+    label_ok = jnp.where(label_mode == 1, label_and,               # L_AND
+                         jnp.where(label_mode == 2, label_or, True))
+    label_present = label_mode != 0
+
+    # --- NR bucket-range slots: one-hot field select, unrolled ---
+    fields = jax.lax.broadcasted_iota(jnp.int32, (t, f), 1)
+    range_ok = jnp.ones((t,), jnp.bool_)
+    range_present = False
+    for j in range(rf.shape[0]):                      # NR static: unrolled
+        fj = rf[j]
+        v = jnp.sum(jnp.where(fields == fj, buckets, 0), axis=1)   # (T,)
+        ok_j = (v >= blo[j]) & (v <= bhi[j])
+        range_ok = range_ok & jnp.where(fj >= 0, ok_j, True)
+        range_present = range_present | (fj >= 0)
+
+    ok_and = (label_ok | ~label_present) & (range_ok | ~range_present)
+    ok_or = (label_ok & label_present) | (range_ok & range_present)
+    any_present = label_present | range_present
+    ok = jnp.where(any_present,
+                   jnp.where(combine == 1, ok_or, ok_and), True)   # C_OR
+
+    # _PENALTY_LITERAL (== ref.INVALID_PENALTY, asserted at import):
+    # pallas_call kernels cannot capture traced array constants
+    key_ref[0] = d + jnp.where(ok, 0.0, _PENALTY_LITERAL).astype(jnp.float32)
+    ok_ref[0] = ok.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_c"))
+def hop_fused(codes_slab: jax.Array, blooms: jax.Array, buckets: jax.Array,
+              in_merged: jax.Array, table: jax.Array, scalars: jax.Array,
+              or_masks: jax.Array, range_field: jax.Array,
+              bucket_lo: jax.Array, bucket_hi: jax.Array, *,
+              interpret: bool = False,
+              tile_c: int = TILE_C) -> tuple[jax.Array, jax.Array]:
+    """Fused hop pass over a (B, C) candidate slab.
+
+    codes_slab (B, C, M) uint8/int32; blooms (B, C) int32; buckets
+    (B, C, F) int32; in_merged (B, C) bool; table (B, M, K) float32;
+    scalars (B, 4) / or_masks (B, QL) / range_field, bucket_lo, bucket_hi
+    (B, NR) int32 — the ``selectors.kernel_filter_params`` layout.
+    Returns (key (B, C) float32, ok (B, C) bool).
+    """
+    b, c, m = codes_slab.shape
+    k = table.shape[-1]
+    f = buckets.shape[-1]
+    tile = min(tile_c, max(128, 1 << max(c - 1, 1).bit_length()))
+    c_pad = -(-c // tile) * tile
+
+    def pad(arr, fill=0):
+        if arr.shape[1] == c_pad:
+            return arr
+        widths = [(0, 0), (0, c_pad - c)] + [(0, 0)] * (arr.ndim - 2)
+        return jnp.pad(arr, widths, constant_values=fill)
+
+    codes_p = pad(codes_slab.astype(jnp.int32))
+    blooms_p = pad(blooms.astype(jnp.int32))
+    buckets_p = pad(buckets.astype(jnp.int32))
+    merged_p = pad(in_merged.astype(jnp.int32))
+
+    grid = (b, c_pad // tile)
+    key, ok = pl.pallas_call(
+        _hop_fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile, m), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((1, tile, f), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((1, m, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, or_masks.shape[-1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, range_field.shape[-1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bucket_lo.shape[-1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bucket_hi.shape[-1]), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((1, tile), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, c_pad), jnp.float32),
+            jax.ShapeDtypeStruct((b, c_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(codes_p, blooms_p, buckets_p, merged_p, table.astype(jnp.float32),
+      scalars.astype(jnp.int32), or_masks.astype(jnp.int32),
+      range_field.astype(jnp.int32), bucket_lo.astype(jnp.int32),
+      bucket_hi.astype(jnp.int32))
+    return key[:, :c], ok[:, :c].astype(jnp.bool_)

@@ -11,6 +11,7 @@ import functools
 import jax
 
 from repro.kernels import approx_probe as _probe
+from repro.kernels import hop_fused as _hop
 from repro.kernels import l2_rerank as _l2
 from repro.kernels import pq_scan as _pq
 from repro.kernels import prune_scan as _prune
@@ -32,6 +33,31 @@ def pq_scan(codes, table):
 def pq_scan_interpret(codes, table):
     """Force the Pallas kernel in interpret mode (tests)."""
     return _pq.pq_scan(codes, table, interpret=True)
+
+
+def hop_fused(codes_slab, blooms, buckets, in_merged, table, scalars,
+              or_masks, range_field, bucket_lo, bucket_hi):
+    """Fused hop candidate pass (B, C) slab -> (key, ok).
+
+    The speculative in-filtering hot path: PQ ADC distance + bloom/bucket
+    approximate membership + invalid-penalty key in one pass (see
+    kernels/hop_fused.py)."""
+    if on_tpu():
+        return _hop.hop_fused(codes_slab, blooms, buckets, in_merged, table,
+                              scalars, or_masks, range_field, bucket_lo,
+                              bucket_hi, interpret=False)
+    return ref.hop_fused_ref(codes_slab, blooms, buckets, in_merged, table,
+                             scalars, or_masks, range_field, bucket_lo,
+                             bucket_hi)
+
+
+def hop_fused_interpret(codes_slab, blooms, buckets, in_merged, table,
+                        scalars, or_masks, range_field, bucket_lo,
+                        bucket_hi):
+    """Force the Pallas kernel in interpret mode (tests)."""
+    return _hop.hop_fused(codes_slab, blooms, buckets, in_merged, table,
+                          scalars, or_masks, range_field, bucket_lo,
+                          bucket_hi, interpret=True)
 
 
 def approx_probe(blooms, buckets, or_masks, params):

@@ -36,6 +36,93 @@ def approx_probe_ref(blooms: jax.Array, buckets: jax.Array,
                      jnp.where(prm[6] == 1, ok_or, ok_and), True)
 
 
+# The single source of the invalid-candidate admission penalty;
+# core.search imports it, and kernels/hop_fused.py asserts its in-kernel
+# literal against it at import time (Pallas bodies cannot capture traced
+# constants).
+INVALID_PENALTY = jnp.float32(1e12)
+
+
+def adc_slab_ref(codes_slab: jax.Array, table: jax.Array) -> jax.Array:
+    """ADC distances for a pre-gathered code slab.
+
+    codes_slab (..., C, M) uint8/int32; table (..., M, K) float32 ->
+    (..., C) float32. Flattened-table gather (one 1-D gather per batch
+    row instead of a 4-D take_along_axis) + M-axis reduction —
+    bitwise-identical to ``pq.adc_lookup`` (pinned by
+    tests/test_kernels.py); the single copy of that invariant, shared by
+    ``hop_fused_ref`` and the search loop's post/strict slab pass."""
+    m, k = table.shape[-2:]
+    c = codes_slab.shape[-2]
+    idx = codes_slab.astype(jnp.int32)                     # (..., C, M)
+    flat = idx + (jnp.arange(m, dtype=jnp.int32) * k)
+    t = jnp.take_along_axis(
+        table.reshape(table.shape[:-2] + (m * k,)),
+        flat.reshape(flat.shape[:-2] + (c * m,)), axis=-1)
+    return jnp.sum(t.reshape(flat.shape), axis=-1).astype(jnp.float32)
+
+
+def hop_fused_ref(codes_slab: jax.Array, blooms: jax.Array,
+                  buckets: jax.Array, in_merged: jax.Array,
+                  table: jax.Array, scalars: jax.Array, or_masks: jax.Array,
+                  range_field: jax.Array, bucket_lo: jax.Array,
+                  bucket_hi: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused per-hop candidate pass: PQ ADC distance + approximate
+    membership + invalid-penalty key over a pre-gathered candidate slab.
+
+    codes_slab (..., C, M) uint8/int32; blooms (..., C) int32 bit-words;
+    buckets (..., C, F) int32; in_merged (..., C) bool (rare-list half,
+    precomputed — see selectors.merged_membership); table (..., M, K)
+    float32; scalars (..., 4) int32 [and_mask, label_mode, merged_mode,
+    combine]; or_masks (..., QL); range_field/bucket_lo/bucket_hi (..., NR)
+    (see selectors.kernel_filter_params).
+
+    Returns ``(key, ok)``: key (..., C) = pq_distance + INVALID_PENALTY
+    where not ok; ok (..., C) bool — identical to
+    ``selectors.is_member_approx`` on the same ids. The PQ sum matches
+    ``pq.adc_lookup`` bitwise (same gather + same reduction axis).
+    """
+    d = adc_slab_ref(codes_slab, table)
+
+    # --- frequent-label Bloom probes ---
+    and_mask = scalars[..., 0:1]
+    label_mode = scalars[..., 1:2]
+    merged_mode = scalars[..., 2:3]
+    combine = scalars[..., 3:4]
+    and_ok = (blooms & and_mask) == and_mask               # (..., C)
+    om = or_masks                                          # (..., QL)
+    hit_any = jnp.any((om[..., None, :] != 0)
+                      & ((blooms[..., None] & om[..., None, :])
+                         == om[..., None, :]), axis=-1)
+    has_or = jnp.any(om != 0, axis=-1, keepdims=True)
+
+    label_or = jnp.where(merged_mode == 1, in_merged | hit_any,    # M_OR
+                         jnp.where(has_or, hit_any, False))
+    label_and = jnp.where(merged_mode == 2, in_merged & and_ok,    # M_AND
+                          and_ok)
+    label_ok = jnp.where(label_mode == 1, label_and,               # L_AND
+                         jnp.where(label_mode == 2, label_or, True))
+    label_present = label_mode != 0
+
+    # --- bucket-code range slots (AND over NR predicates) ---
+    active = range_field >= 0                              # (..., NR)
+    safe_f = jnp.where(active, range_field, 0)
+    bsel = jnp.broadcast_to(safe_f[..., None, :],
+                            buckets.shape[:-1] + safe_f.shape[-1:])
+    v = jnp.take_along_axis(buckets, bsel, axis=-1)        # (..., C, NR)
+    rok = (v >= bucket_lo[..., None, :]) & (v <= bucket_hi[..., None, :])
+    range_ok = jnp.all(rok | ~active[..., None, :], axis=-1)
+    range_present = jnp.any(active, axis=-1, keepdims=True)
+
+    ok_and = (label_ok | ~label_present) & (range_ok | ~range_present)
+    ok_or = (label_ok & label_present) | (range_ok & range_present)
+    any_present = label_present | range_present
+    ok = jnp.where(any_present,
+                   jnp.where(combine == 1, ok_or, ok_and), True)   # C_OR
+    key = d + jnp.where(ok, jnp.float32(0.0), INVALID_PENALTY)
+    return key, ok
+
+
 def l2_rerank_ref(vecs: jax.Array, query: jax.Array) -> jax.Array:
     d = vecs.astype(jnp.float32) - query.astype(jnp.float32)[None, :]
     return jnp.sum(d * d, axis=1)

@@ -89,6 +89,90 @@ def test_approx_probe_all_mode_combos():
 
 
 # ---------------------------------------------------------------------------
+# hop_fused (the filtered-search hot loop's candidate pass)
+# ---------------------------------------------------------------------------
+
+def _rand_hop_inputs(rng, b, c, m=8, k=256, f=3, ql=8, nr=4):
+    codes = jnp.asarray(rng.integers(0, k, (b, c, m)).astype(np.uint8))
+    blooms = jnp.asarray(rng.integers(0, 2 ** 31, (b, c), dtype=np.int64)
+                         .astype(np.int32))
+    buckets = jnp.asarray(rng.integers(0, 256, (b, c, f)).astype(np.int32))
+    in_merged = jnp.asarray(rng.integers(0, 2, (b, c)).astype(bool))
+    table = jnp.asarray(rng.normal(0, 1, (b, m, k)).astype(np.float32))
+    scalars = jnp.asarray(np.stack([
+        rng.integers(0, 2 ** 16, b),      # and_mask
+        rng.integers(0, 3, b),            # label_mode
+        rng.integers(0, 3, b),            # merged_mode
+        rng.integers(0, 2, b)], axis=1).astype(np.int32))   # combine
+    or_masks = jnp.asarray(rng.integers(0, 2 ** 12, (b, ql)).astype(np.int32))
+    range_field = jnp.asarray(
+        np.where(rng.random((b, nr)) < 0.5,
+                 rng.integers(0, f, (b, nr)), -1).astype(np.int32))
+    lo = rng.integers(0, 128, (b, nr)).astype(np.int32)
+    hi = rng.integers(128, 256, (b, nr)).astype(np.int32)
+    return (codes, blooms, buckets, in_merged, table, scalars, or_masks,
+            range_field, jnp.asarray(lo), jnp.asarray(hi))
+
+
+@pytest.mark.parametrize("b,c", [(1, 7), (3, 64), (4, 300), (2, 520)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_hop_fused_matches_ref(b, c, seed):
+    rng = np.random.default_rng(seed * 100 + b * c)
+    args = _rand_hop_inputs(rng, b, c)
+    key_k, ok_k = ops.hop_fused_interpret(*args)
+    key_r, ok_r = ref.hop_fused_ref(*args)
+    np.testing.assert_array_equal(np.asarray(ok_k), np.asarray(ok_r))
+    np.testing.assert_allclose(np.asarray(key_k), np.asarray(key_r),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_hop_fused_ref_matches_selectors_and_pq():
+    """The decomposed kernel inputs must reproduce the production
+    primitives exactly: ok == selectors.is_member_approx on the gathered
+    ids, and the distance term == pq.adc_lookup (bitwise)."""
+    from repro.core import pq as core_pq
+    from repro.core.selectors import (InMemory, is_member_approx,
+                                      kernel_filter_params, kernel_view,
+                                      merged_membership)
+    from repro.data.synth import make_filtered_dataset, make_selectors
+    from repro.core import engine as eng
+
+    ds = make_filtered_dataset(n=800, d=16, n_queries=6, n_labels=20, seed=2)
+    cfg = eng.IndexConfig(r=8, r_dense=32, l_build=16, pq_m=8, max_labels=8)
+    e = eng.FilteredANNEngine.build(ds.vectors, ds.label_offsets,
+                                   ds.label_flat, ds.n_labels, ds.values,
+                                   cfg)
+    rng = np.random.default_rng(0)
+    for workload in ("label_or", "label_and", "range", "hybrid"):
+        sels = make_selectors(ds, e, workload)
+        from repro.core.selectors import stack_filters
+        qf = stack_filters([s.plan(cfg.ql, cfg.cap).qfilter for s in sels])
+        B = len(sels)
+        ids = jnp.asarray(rng.integers(0, 800, (B, 50)).astype(np.int32))
+        tables = jax.vmap(
+            lambda q: core_pq.distance_table(e.codebook, q))(
+                jnp.asarray(ds.queries[:B]))
+        bl, bc = kernel_view(e.mem)
+        in_merged = jax.vmap(merged_membership)(qf, ids)
+        key, ok = ref.hop_fused_ref(e.codes[ids], bl[ids], bc[ids],
+                                    in_merged, tables,
+                                    *kernel_filter_params(qf))
+        want_ok = jax.vmap(is_member_approx, in_axes=(0, 0, None))(
+            qf, ids, e.mem)
+        np.testing.assert_array_equal(np.asarray(ok), np.asarray(want_ok))
+        want_d = np.asarray(
+            jax.vmap(core_pq.adc_lookup)(e.codes[ids], tables))
+        ok_np = np.asarray(ok)
+        key_np = np.asarray(key)
+        # valid candidates: key IS the distance, bitwise
+        np.testing.assert_array_equal(key_np[ok_np], want_d[ok_np])
+        # invalid: distance + penalty, in the same f32 arithmetic
+        np.testing.assert_array_equal(
+            key_np[~ok_np],
+            (want_d.astype(np.float32) + np.float32(1e12))[~ok_np])
+
+
+# ---------------------------------------------------------------------------
 # l2_rerank
 # ---------------------------------------------------------------------------
 
