@@ -1,22 +1,35 @@
-"""Search-latency benchmark: fused hop pipeline vs the pre-fused baseline.
+"""Search-latency benchmark: pipelined vs fused vs the pre-fused baseline.
 
-Runs the batched ``filtered_search`` of every mode (post / spec_in /
-strict_in) over the 12 K benchmark corpus at L=64 and times it against
-``filtered_search_legacy`` — the pre-fused-pipeline implementation whose
-hop loop pays pairwise dedup broadcasts, a full argsort merge, and a
-per-iteration explored-buffer re-sort. Writes ``BENCH_search.json`` so
-the *search*-side perf trajectory is tracked across PRs (BENCH_build.json
-covers the build side).
+Runs every mode (post / spec_in / strict_in) over the 12 K benchmark
+corpus at L=64 and times three implementations of the batched search:
 
-Acceptance bars (the fused pipeline is an implementation change, not an
-algorithm change):
-  * warm batched spec_in latency ≥ 3× better than the legacy path in the
-    pipelined-beam configuration (``spec_in_beam4``: W=4, the analogue of
-    PipeANN's multiple in-flight reads; the W=1 ratio is recorded too);
-  * recall@10 within 1% of the ``filtered_search_ref`` oracle per config.
+  * ``filtered_search_pipelined`` — the production path (PR 5): chunked
+    hop runner + straggler compaction over the double-buffered loop;
+  * ``filtered_search``          — the single-shot fused jit (PR 4's
+    structure, now also carrying the cross-hop prefetch and the
+    precomputed per-record dedup mask);
+  * ``filtered_search_legacy``   — the pre-fused-pipeline implementation
+    (pairwise dedup broadcasts, full argsort merges).
+
+Writes ``BENCH_search.json`` so the search-side perf trajectory is
+tracked across PRs (BENCH_build.json covers the build side). The per-mode
+stats now include ``mean_approx_checks`` — together with ``dist_comps``
+and ``hops`` it feeds ``cost_model.Calibration`` (measured per-hop
+compute for the router).
+
+Acceptance bars (all implementation changes, never algorithm changes —
+the three paths return bit-identical results, asserted here):
+  * pipelined spec_in W=1 ≥ ``PIPELINE_SPEEDUP_FLOOR`` (1.5×) faster than
+    the committed PR-4 fused numbers (``PR4_FUSED_MS``, same container);
+  * pipelined post / strict_in no slower than PR 4 (small jitter
+    allowance);
+  * warm fused spec_in_beam4 ≥ 3× the legacy path (the PR-4 floor).
 
 ``--smoke`` builds a tiny corpus and runs every mode end-to-end with no
 perf bars and no JSON — the bitrot check ``scripts/test_fast.sh`` runs.
+``--active-trace`` additionally records per-hop active-query counts, the
+driver's compaction buckets, and the modeled SSD latency with/without
+prefetch (``io_sim.IOModel.latency_us``) for the spec_in W=1 config.
 """
 from __future__ import annotations
 
@@ -29,6 +42,7 @@ import numpy as np
 from benchmarks.common import BenchResult, get_engine
 from repro.core import engine as eng
 from repro.core import search as S
+from repro.core.io_sim import IOModel
 from repro.core.selectors import stack_filters
 
 N, N_SMOKE = 12_000, 600
@@ -37,13 +51,19 @@ SELECTIVITY = 0.30          # mid-selectivity range filters (paper Fig. 2)
 OUT_PATH = "BENCH_search.json"
 # (bench name, search mode, beam width). ``spec_in_beam4`` is the
 # pipelined-beam configuration — PipeANN keeps W reads in flight per
-# step; its TPU-batch analogue is beam_width>1 — and carries the
+# step; its TPU-batch analogue is beam_width>1 — and carries the legacy
 # speedup floor: the legacy path's dedup broadcast is O(W·C·res_cap)
 # while the fused pipeline stays near-linear in the slab, so the gap is
 # widest exactly where the paper operates.
 CONFIGS = (("post", "post", 1), ("spec_in", "spec_in", 1),
            ("spec_in_beam4", "spec_in", 4), ("strict_in", "strict_in", 1))
-SPEC_IN_SPEEDUP_FLOOR = 3.0        # asserted on spec_in_beam4
+SPEC_IN_SPEEDUP_FLOOR = 3.0        # fused vs legacy, on spec_in_beam4
+# PR-4 warm fused_ms on this container (committed BENCH_search.json @
+# PR 4) — the pipelined path is measured against them:
+PR4_FUSED_MS = {"post": 75.80, "spec_in": 501.46, "spec_in_beam4": 627.23,
+                "strict_in": 96.83}
+PIPELINE_SPEEDUP_FLOOR = 1.5       # pipelined vs PR-4 fused, spec_in W=1
+NO_SLOWER_TOL = 1.05               # post/strict_in jitter allowance
 RECALL_TOL = 0.01
 
 
@@ -99,7 +119,57 @@ def _recall(ds, e, sels, res, k=K):
     return float(np.mean(rec))
 
 
-def run(out_path: str = OUT_PATH, smoke: bool = False) -> list:
+def _assert_bit_identical(a: S.SearchResult, b: S.SearchResult, tag: str):
+    for field in S.SearchResult._fields:
+        av, bv = np.asarray(getattr(a, field)), np.asarray(getattr(b, field))
+        assert np.array_equal(av, bv), f"{tag}: {field} diverged"
+
+
+def active_trace(e, ds, smoke: bool, warm_us_per_query: float) -> dict:
+    """Per-hop active-query counts + compaction buckets + modeled SSD
+    latency for the spec_in W=1 config (the straggler-bound case the
+    compaction attacks)."""
+    params = S.SearchParams(l_search=L, k=K, beam_width=1,
+                            max_hops=MAX_HOPS, mode="spec_in")
+    _, qf, queries, entries = _mode_inputs(e, ds, "spec_in")
+    res, chunks = S.filtered_search_pipelined(
+        e.store, e.codes, e.codebook, e.mem, qf, queries, e.medoid, params,
+        entries=entries, collect_trace=True)
+    hops = np.asarray(res.hops)
+    # a query is active at hop t iff its final hop count exceeds t — the
+    # per-hop active width is exact from the counters, no loop probes
+    per_hop_active = [int((hops > t).sum()) for t in range(int(hops.max()))]
+    io = IOModel()
+    mean_hops = float(hops.mean())
+    pages_hop = e.store.pages_dense
+    compute_us = warm_us_per_query
+    modeled = {
+        "t_page_us": io.t_page_us,
+        "mean_dependent_pages": mean_hops * pages_hop,
+        "compute_us_per_query": compute_us,
+        # serial issue order (prefetch_depth=1): read + compute add up
+        "latency_us_prefetch1": io.latency_us(
+            int(round(mean_hops * pages_hop)), 0, prefetch_depth=1,
+            compute_us=compute_us),
+        # double-buffered loop: compute hides behind the in-flight read
+        "latency_us_prefetch2": io.latency_us(
+            int(round(mean_hops * pages_hop)), 0, prefetch_depth=2,
+            compute_us=compute_us),
+    }
+    trace = {"mode": "spec_in", "beam_width": 1,
+             "hop_chunk": S.DEFAULT_HOP_CHUNK,
+             "min_bucket": S.MIN_COMPACT_BUCKET,
+             "per_hop_active": per_hop_active,
+             "chunks": chunks, "modeled": modeled}
+    if not smoke:
+        # the whole point of compaction: the batch thins out long before
+        # the last straggler settles
+        assert per_hop_active[-1] < per_hop_active[0], "no straggler tail?"
+    return trace
+
+
+def run(out_path: str = OUT_PATH, smoke: bool = False,
+        with_trace: bool = False) -> list:
     n = N_SMOKE if smoke else N
     ds, index, _ = get_engine(n=n)
     e = index.engine if hasattr(index, "engine") else index
@@ -110,12 +180,16 @@ def run(out_path: str = OUT_PATH, smoke: bool = False) -> list:
                           "batch": B, "selectivity": SELECTIVITY},
                "modes": {}}
     results = []
+    warm_p_spec_us = 0.0
     for name, mode, w in CONFIGS:
         params = S.SearchParams(l_search=L, k=K, beam_width=w,
                                 max_hops=MAX_HOPS, mode=mode)
         sels, qf, queries, entries = _mode_inputs(e, ds, mode)
 
         reps = 3 if not smoke else 2
+        cold_p, warm_p, res_p = _time_impl(S.filtered_search_pipelined, e,
+                                           qf, queries, params, entries,
+                                           repeats=reps)
         cold_f, warm_f, res_f = _time_impl(S.filtered_search, e, qf,
                                            queries, params, entries,
                                            repeats=reps)
@@ -124,26 +198,39 @@ def run(out_path: str = OUT_PATH, smoke: bool = False) -> list:
                                        repeats=reps)
         _, _, res_r = _time_impl(S.filtered_search_ref, e, qf, queries,
                                  params, entries, repeats=1)
+        # compaction is pure re-indexing; prefetch only moves fetch issue
+        # time — all three production-path results must agree bit-exactly
+        _assert_bit_identical(res_p, res_f, f"{name}: pipelined vs fused")
         rec_f = _recall(ds, e, sels, res_f)
         rec_r = _recall(ds, e, sels, res_r)
         speedup = warm_l / warm_f
+        if name == "spec_in":
+            warm_p_spec_us = warm_p * 1e6 / B
         stats = {
             "mode": mode, "beam_width": w,
+            "pipelined_ms": warm_p * 1e3, "pipelined_ms_cold": cold_p * 1e3,
             "fused_ms": warm_f * 1e3, "fused_ms_cold": cold_f * 1e3,
             "legacy_ms": warm_l * 1e3, "legacy_ms_cold": cold_l * 1e3,
             "speedup_vs_legacy": speedup,
-            "qps": B / warm_f,
-            "latency_ms_per_query": warm_f * 1e3 / B,
-            "mean_hops": float(np.mean(np.asarray(res_f.hops))),
-            "mean_io_pages": float(np.mean(np.asarray(res_f.io_pages))),
-            "mean_dist_comps": float(np.mean(np.asarray(res_f.dist_comps))),
+            "speedup_pipelined_vs_fused": warm_f / warm_p,
+            "speedup_pipelined_vs_pr4": (PR4_FUSED_MS[name]
+                                         / (warm_p * 1e3))
+            if not smoke else None,
+            "qps": B / warm_p,
+            "latency_ms_per_query": warm_p * 1e3 / B,
+            "mean_hops": float(np.mean(np.asarray(res_p.hops))),
+            "mean_io_pages": float(np.mean(np.asarray(res_p.io_pages))),
+            "mean_dist_comps": float(np.mean(np.asarray(res_p.dist_comps))),
+            "mean_approx_checks": float(
+                np.mean(np.asarray(res_p.approx_checks))),
             "recall_at_10": rec_f, "recall_at_10_ref": rec_r,
         }
         payload["modes"][name] = stats
         results.append(BenchResult(
-            name=f"search/{name}", us_per_call=warm_f * 1e6 / B,
+            name=f"search/{name}", us_per_call=warm_p * 1e6 / B,
             derived={"qps": f"{stats['qps']:.0f}",
                      "speedup": f"{speedup:.1f}x",
+                     "vs_fused": f"{warm_f / warm_p:.2f}x",
                      "hops": f"{stats['mean_hops']:.0f}",
                      "recall@10": f"{rec_f:.3f}"}))
 
@@ -158,10 +245,23 @@ def run(out_path: str = OUT_PATH, smoke: bool = False) -> list:
             assert np.array_equal(np.asarray(res_f.explored),
                                   np.asarray(res_r.explored)), name
 
+    if with_trace:
+        payload["active_trace"] = active_trace(e, ds, smoke, warm_p_spec_us)
+
     if not smoke:
         sp = payload["modes"]["spec_in_beam4"]["speedup_vs_legacy"]
         assert sp >= SPEC_IN_SPEEDUP_FLOOR, \
             f"fused spec_in (W=4) only {sp:.1f}x vs the pre-fused vmap path"
+        pip = payload["modes"]["spec_in"]["pipelined_ms"]
+        floor = PR4_FUSED_MS["spec_in"] / PIPELINE_SPEEDUP_FLOOR
+        assert pip <= floor, \
+            f"pipelined spec_in W=1 {pip:.0f}ms misses the " \
+            f"{PIPELINE_SPEEDUP_FLOOR}x floor vs PR-4 ({floor:.0f}ms)"
+        for name in ("post", "strict_in"):
+            ms = payload["modes"][name]["pipelined_ms"]
+            assert ms <= PR4_FUSED_MS[name] * NO_SLOWER_TOL, \
+                f"{name} pipelined {ms:.0f}ms slower than PR-4 " \
+                f"({PR4_FUSED_MS[name]:.0f}ms)"
         with open(out_path, "w") as fh:
             json.dump(payload, fh, indent=2)
     return results
@@ -172,9 +272,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny end-to-end run, no perf bars / JSON output")
+    ap.add_argument("--active-trace", action="store_true",
+                    help="also record per-hop active counts, compaction "
+                         "buckets and modeled SSD latency (spec_in W=1)")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args()
-    for res in run(out_path=args.out, smoke=args.smoke):
+    for res in run(out_path=args.out, smoke=args.smoke,
+                   with_trace=args.active_trace):
         print(res.csv())
 
 

@@ -7,5 +7,5 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_build --smoke
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_search --smoke
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_search --smoke --active-trace
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -q -m fast "$@"

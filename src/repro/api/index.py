@@ -429,13 +429,18 @@ class Index:
         if legacy:
             t, meta = _shim_legacy_checkpoint(t, meta)
 
+        from repro.core.records import candidate_first_mask
         store = RecordStore(
             vectors=jnp.asarray(t["store_vectors"]),
             neighbors=jnp.asarray(t["store_neighbors"]),
             dense_neighbors=jnp.asarray(t["store_dense_neighbors"]),
             rec_labels=jnp.asarray(t["store_rec_labels"]),
             rec_values=jnp.asarray(t["store_rec_values"]),
-            pages_std=meta["pages_std"], pages_dense=meta["pages_dense"])
+            pages_std=meta["pages_std"], pages_dense=meta["pages_dense"],
+            # derived, not checkpointed: re-precompute the per-record
+            # dedup mask from the loaded graph rows
+            cand_first=jnp.asarray(candidate_first_mask(
+                t["store_neighbors"], t["store_dense_neighbors"])))
         label_store = LabelStore(
             n_vectors=store.n, n_labels=meta["n_labels"],
             vec_offsets=t["ls_vec_offsets"], vec_labels=t["ls_vec_labels"],

@@ -86,6 +86,22 @@ class Session:
     def submit_many(self, requests: Sequence[SearchRequest]) -> list:
         return [self.submit(r) for r in requests]
 
+    def warmup(self, requests: Sequence[SearchRequest]) -> None:
+        """Run a throwaway batch to populate the search jit caches before
+        serving traffic.
+
+        The engine's pipelined search compiles one artifact per
+        (mechanism, pool bucket, GROUP WIDTH) and per power-of-two
+        compaction bucket (``search.run_hops``); repeat flushes reuse
+        every entry — asserted by the compile-count test. Caches are
+        keyed by batch width, so warm with request mixes whose *group
+        sizes* match production flushes (e.g. a full ``max_batch`` of
+        each filter family), not just one of each shape — widths the
+        warmup never formed still compile on their first real flush.
+        Results are discarded; session counters are untouched."""
+        if requests:
+            self.index.search_batch(list(requests), with_metadata=False)
+
     def _should_flush(self) -> bool:
         if len(self._pending) >= self.config.max_batch:
             return True

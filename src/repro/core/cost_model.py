@@ -8,10 +8,20 @@ excluded; the traversal is equivalent to a standard search with effective
 pool length (L/s)·(R/R_d).
 
 Total cost = α·IO_pages + β·distance_comps, α=10, β=1 by default.
+
+The analytic compute terms assume every admitted candidate costs one
+distance comparison per out-edge (R, or R + γ·R_d with approximate
+checks). The fused hop pipeline measures the real counters per query
+(``SearchResult.dist_comps`` / ``approx_checks`` / ``hops``), and
+``benchmarks/bench_search.py`` persists their per-mode means in
+BENCH_search.json — a :class:`Calibration` built from that payload
+replaces the hardcoded per-hop constants, so the router trades I/O
+against *measured* compute (engine: ``FilteredANNEngine.calibrate``).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 
 
 GAMMA = 0.05   # relative cost of is_member_approx vs one distance comparison
@@ -56,14 +66,60 @@ class MechanismCost:
         return alpha * self.io_pages + beta * self.compute
 
 
-def pre_filtering_cost(c: CostInputs) -> MechanismCost:
+@dataclasses.dataclass(frozen=True)
+class ModeCal:
+    """Measured per-hop compute for one search mode."""
+    dist_per_hop: float       # mean dist_comps / mean hops
+    approx_per_hop: float     # mean approx_checks / mean hops
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Per-hop compute constants measured by the fused search pipeline.
+
+    Built from a BENCH_search.json payload (``from_bench``): the bench
+    records mean ``dist_comps``/``approx_checks``/``hops`` per mode, and
+    their per-hop ratios replace the analytic R / γ·R_d constants in the
+    compute terms below. The analytic *hop-count* scaling (1/s, 1/p —
+    Table 1) is untouched: calibration refines how much compute one hop
+    costs, not how many hops a filter needs. I/O terms stay analytic too
+    (page counters are exact by construction)."""
+    spec_in: ModeCal
+    post: ModeCal
+
+    @classmethod
+    def from_bench(cls, payload: dict) -> "Calibration":
+        def mode(name: str) -> ModeCal:
+            m = payload["modes"][name]
+            hops = max(float(m["mean_hops"]), 1e-9)
+            return ModeCal(
+                dist_per_hop=float(m["mean_dist_comps"]) / hops,
+                approx_per_hop=float(m.get("mean_approx_checks", 0.0))
+                / hops)
+        return cls(spec_in=mode("spec_in"), post=mode("post"))
+
+
+def load_calibration(path: str = "BENCH_search.json") -> Calibration | None:
+    """Calibration from a committed bench payload; None when the file is
+    missing or predates the approx-checks counter era."""
+    try:
+        with open(path) as fh:
+            payload = json.load(fh)
+        return Calibration.from_bench(payload)
+    except (OSError, KeyError, ValueError):
+        return None
+
+
+def pre_filtering_cost(c: CostInputs,
+                       calib: Calibration | None = None) -> MechanismCost:
     p = max(c.p_pre, 1e-9)
     io = c.x_pre + (c.l / p) * c.s_r
     compute = c.s * c.n / p
     return MechanismCost(io, compute)
 
 
-def in_filtering_cost(c: CostInputs) -> MechanismCost:
+def in_filtering_cost(c: CostInputs,
+                      calib: Calibration | None = None) -> MechanismCost:
     s = max(c.s, 1e-9)
     p = max(c.p_in, 1e-9)
     if s * c.r_d / p <= c.r:     # low selectivity: false positives = bridges
@@ -74,14 +130,18 @@ def in_filtering_cost(c: CostInputs) -> MechanismCost:
         hops = c.l / p
         io = c.x_in + hops * c.s_d
         compute = hops * (c.r + c.gamma * c.r_d)
+    if calib is not None:
+        m = calib.spec_in
+        compute = hops * (m.dist_per_hop + c.gamma * m.approx_per_hop)
     return MechanismCost(io, compute)
 
 
-def post_filtering_cost(c: CostInputs) -> MechanismCost:
+def post_filtering_cost(c: CostInputs,
+                        calib: Calibration | None = None) -> MechanismCost:
     s = max(c.s, 1e-9)
     hops = c.l / s
     io = hops * c.s_r
-    compute = hops * c.r
+    compute = hops * c.r if calib is None else hops * calib.post.dist_per_hop
     return MechanismCost(io, compute)
 
 
@@ -127,12 +187,13 @@ def effective_l(mech: str, c: CostInputs, max_pool: int,
 
 
 def route_query(c: CostInputs, alpha: float = 10.0, beta: float = 1.0,
-                max_pool: int = 4096) -> Route:
+                max_pool: int = 4096,
+                calib: Calibration | None = None) -> Route:
     """Pick the cheapest mechanism and size its search parameters."""
     costs = {
-        "pre": pre_filtering_cost(c),
-        "in": in_filtering_cost(c),
-        "post": post_filtering_cost(c),
+        "pre": pre_filtering_cost(c, calib),
+        "in": in_filtering_cost(c, calib),
+        "post": post_filtering_cost(c, calib),
     }
     totals = {k: v.total(alpha, beta) for k, v in costs.items()}
     mech = min(totals, key=totals.get)

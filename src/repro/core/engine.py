@@ -29,6 +29,7 @@ from repro.core.labels import (LabelStore, build_label_store,
                                padded_vec_labels)
 from repro.core.ranges import (MultiRangeStore, RangeStore,
                                build_multi_range_store)
+from repro.core import records as records_mod
 from repro.core.records import RecordStore, make_record_store
 from repro.core.selectors import (InMemory, Selector, stack_filters)
 
@@ -60,6 +61,11 @@ class SearchConfig:
     max_pool: int = 1024      # effective-L cap
     l_rerank_delta: int = 16  # δ extra re-ranked vectors for pre-filtering
     policy: str = "speculative"
+    hop_chunk: int = 32       # hops between straggler-compaction checks in
+                              # the bucketed search driver (0 = single-shot
+                              # jit, the pre-pipelined execution)
+    prefetch_depth: int = 2   # record slabs in flight per query (feeds the
+                              # modeled SSD latency; results are invariant)
 
 
 @dataclasses.dataclass
@@ -101,6 +107,27 @@ class FilteredANNEngine:
         self.config = config
         self.n = label_store.n_vectors  # valid records (store may hold pads)
         self._builder = None      # lazy IncrementalBuilder (insert path)
+        self.calibration: cost_model.Calibration | None = None
+
+    def calibrate(self, source="BENCH_search.json") -> bool:
+        """Swap the router's hardcoded per-hop compute constants for the
+        fused pipeline's measured counters (dist_comps / approx_checks /
+        hops per hop, from a BENCH_search.json payload or a prebuilt
+        :class:`~repro.core.cost_model.Calibration`). Opt-in: routing
+        stays analytic until called. Returns True when calibration data
+        was found and installed; ``calibrate(None)`` reverts."""
+        if source is None or isinstance(source, cost_model.Calibration):
+            self.calibration = source
+        elif isinstance(source, dict):
+            try:
+                self.calibration = cost_model.Calibration.from_bench(source)
+            except (KeyError, TypeError, ValueError):
+                # malformed/trimmed payload: degrade to uncalibrated, the
+                # same contract as an unreadable path
+                self.calibration = None
+        else:
+            self.calibration = cost_model.load_calibration(source)
+        return self.calibration is not None
 
     @property
     def n_fields(self) -> int:
@@ -245,6 +272,12 @@ class FilteredANNEngine:
         new_blooms = ls.blooms[n0:n_new]
         new_buckets = np.stack([s.bucket_codes[n0:n_new]
                                 for s in self.range_store.stores], axis=1)
+        # a skewed-stream quantile refresh re-derives the bucket bounds and
+        # re-codes EVERY row (ranges.RangeStore.append): the device code
+        # column must be replaced wholesale — writing only the new rows
+        # would mix codes from two incompatible bounds generations and
+        # break the no-false-negative contract of is_member_approx
+        rebucketed = self.range_store.bounds_refreshed
 
         grown = self.store.vectors.shape[0] != cap
         if grown:
@@ -280,16 +313,27 @@ class FilteredANNEngine:
             rec_values, jnp.asarray(new_values, rec_values.dtype), n0)
         self.codes = graph.write_rows(codes, new_codes.astype(codes.dtype),
                                       n0)
+        if rebucketed:
+            full_buckets = np.zeros((cap, self.n_fields), np.uint8)
+            full_buckets[:n_new] = self.range_store.bucket_codes
+            buckets_dev = jnp.asarray(full_buckets).astype(buckets.dtype)
+        else:
+            buckets_dev = graph.write_rows(
+                buckets, jnp.asarray(new_buckets, buckets.dtype), n0)
         self.mem = InMemory(
             blooms=graph.write_rows(
                 blooms, jnp.asarray(new_blooms, blooms.dtype), n0),
-            bucket_codes=graph.write_rows(
-                buckets, jnp.asarray(new_buckets, buckets.dtype), n0))
+            bucket_codes=buckets_dev)
         self.store = RecordStore(
             vectors=self._builder.data_device, neighbors=adj_dev,
             dense_neighbors=jnp.asarray(dense), rec_labels=rec_labels,
             rec_values=rec_values, pages_std=self.store.pages_std,
-            pages_dense=self.store.pages_dense)
+            pages_dense=self.store.pages_dense,
+            # the 2-hop sample was just resampled, so the per-record
+            # first-occurrence mask is re-derived with it (pad rows are
+            # all -1 ⇒ all-False, unreachable anyway)
+            cand_first=jnp.asarray(records_mod.candidate_first_mask(
+                np.asarray(adj_dev), dense)))
 
     # ------------------------------------------------------------------
     def _route(self, plan, scfg: SearchConfig) -> cost_model.Route:
@@ -300,7 +344,8 @@ class FilteredANNEngine:
             r=self.store.degree,
             r_d=self.store.degree + self.store.dense_degree,
             s_r=self.store.pages_std, s_d=self.store.pages_dense)
-        full = cost_model.route_query(c, scfg.alpha, scfg.beta, scfg.max_pool)
+        full = cost_model.route_query(c, scfg.alpha, scfg.beta,
+                                      scfg.max_pool, calib=self.calibration)
         if plan.force_mech is not None:
             # the selector cannot be expressed by the device filter algebra;
             # only the forced mechanism preserves correctness (MaskSelector)
@@ -398,7 +443,8 @@ class FilteredANNEngine:
                         else "spec_in", "post": "post"}[mech]
                 sp = search.SearchParams(
                     l_search=eff_l, k=scfg.k, beam_width=scfg.beam_width,
-                    max_hops=scfg.max_hops, mode=mode, l_valid=scfg.l)
+                    max_hops=scfg.max_hops, mode=mode, l_valid=scfg.l,
+                    prefetch_depth=scfg.prefetch_depth)
                 entries = None
                 seed_pages = np.zeros(len(idxs), np.int64)
                 if mode == "strict_in":
@@ -417,9 +463,13 @@ class FilteredANNEngine:
                         ents[j, :seeds.size] = seeds
                         seed_pages[j] = pages
                     entries = jnp.asarray(ents)
-                res = search.filtered_search(
+                # the bucketed pipelined driver: chunked hops + straggler
+                # compaction (search.filtered_search_pipelined); hop_chunk=0
+                # falls back to the single-shot jit
+                res = search.filtered_search_pipelined(
                     self.store, self.codes, self.codebook, self.mem, sub_qf,
-                    sub_q, self.medoid, sp, entries=entries)
+                    sub_q, self.medoid, sp, entries=entries,
+                    hop_chunk=scfg.hop_chunk)
                 prefetch = np.array([plans[i].pages_prefetch for i in idxs]) \
                     if mode == "spec_in" else 0
                 for j, i in enumerate(idxs):

@@ -32,11 +32,29 @@ class IOModel:
         return max(1, math.ceil(nbytes / self.page_bytes))
 
     def latency_us(self, pages_sequentially_dependent: int,
-                   pages_parallel: int = 0) -> float:
-        """Modeled I/O latency: dependent pages serialize (graph hops), batched
-        pages overlap up to ``parallelism``."""
+                   pages_parallel: int = 0, prefetch_depth: int = 1,
+                   compute_us: float = 0.0) -> float:
+        """Modeled I/O latency: dependent pages serialize (graph hops),
+        batched pages overlap up to ``parallelism``.
+
+        ``prefetch_depth`` is the search loop's in-flight record-slab
+        count (``SearchParams.prefetch_depth``) and ``compute_us`` the
+        total per-query compute on the hop critical path. With depth ≥ 2
+        (the double-buffered loop) the next hop's dependent read is
+        issued before the current hop's distance/membership pass runs, so
+        compute hides behind I/O (and vice versa): the serial term is
+        ``max(read, compute)`` per the paper's pipeline, instead of their
+        sum. Beam reads within a hop (``pages_parallel``) overlap through
+        device parallelism either way; the dependent *chain length* never
+        shrinks — hop t+1's target still comes out of hop t's merge.
+        """
         par = math.ceil(pages_parallel / max(1, self.parallelism))
-        return (pages_sequentially_dependent + par) * self.t_page_us
+        read_us = pages_sequentially_dependent * self.t_page_us
+        if prefetch_depth >= 2:
+            serial_us = max(read_us, compute_us)
+        else:
+            serial_us = read_us + compute_us
+        return serial_us + par * self.t_page_us
 
 
 def record_bytes(dim: int, vec_dtype_size: int, n_neighbors: int,

@@ -22,6 +22,24 @@ from repro.core.io_sim import PAGE_BYTES
 
 N_BUCKETS = 256
 N_QUANTILES = 1000
+REFRESH_FRAC = 0.25   # re-derive bucket bounds once un-refreshed inserts
+                      # exceed this fraction of the store
+
+
+def _quantile_bounds(values: np.ndarray) -> np.ndarray:
+    """Strictly-increasing global bucket boundaries from value quantiles."""
+    qs = np.quantile(values, np.linspace(0.0, 1.0, N_BUCKETS + 1)) \
+        if values.size else np.zeros(N_BUCKETS + 1)
+    qs = np.maximum.accumulate(qs)
+    bounds = qs.astype(np.float32)
+    bounds[0] = -np.inf if values.size == 0 \
+        else np.nextafter(bounds[0], -np.inf)
+    return bounds
+
+
+def _bucket_codes(values: np.ndarray, bounds: np.ndarray) -> np.ndarray:
+    return np.clip(np.searchsorted(bounds, values, side="right") - 1,
+                   0, N_BUCKETS - 1).astype(np.uint8)
 
 
 @dataclasses.dataclass
@@ -35,6 +53,11 @@ class RangeStore:
     bucket_bounds: np.ndarray    # (N_BUCKETS+1,) float32 — global boundaries
     bucket_codes: np.ndarray     # (N,) uint8 — per-vector 1-byte code
     quantiles: np.ndarray        # (N_QUANTILES,) float32 — for selectivity
+    # staleness tracking for skewed insert streams (not checkpointed:
+    # the saved bounds are whatever the last refresh produced, and the
+    # counter restarts — a loaded index is treated as freshly bucketed)
+    inserted_since_refresh: int = 0
+    bounds_refreshed: bool = False   # did the LAST append re-bucket?
 
     def selectivity(self, lo: float, hi: float) -> float:
         """Estimated fraction of vectors with value in [lo, hi)."""
@@ -79,15 +102,29 @@ class RangeStore:
 
 
     def append(self, new_values: np.ndarray) -> "RangeStore":
-        """Incremental insert-path extension (no re-sort, no re-bucketing).
+        """Incremental insert-path extension (no re-sort; re-bucket only
+        when stale).
 
         New <id, value> pairs merge into the sorted index at their
         searchsorted positions (one vectorized memcpy instead of an
-        O(N log N) rebuild); bucket boundaries stay *fixed* so new codes
-        remain comparable with existing ones — the no-false-negative
-        contract of ``is_member_approx`` is anchored to the build-time
-        bounds. Quantiles are re-read from the merged sorted array
-        (O(N_QUANTILES) indexing), so selectivity estimates track inserts.
+        O(N log N) rebuild); bucket boundaries normally stay *fixed* so
+        new codes remain comparable with existing ones — the
+        no-false-negative contract of ``is_member_approx`` is anchored to
+        one shared set of bounds. Quantiles are re-read from the merged
+        sorted array (O(N_QUANTILES) indexing), so selectivity estimates
+        track inserts.
+
+        **Staleness guard (skewed streams):** once the rows inserted
+        since the last refresh exceed ``REFRESH_FRAC`` of the store, the
+        bounds no longer describe the distribution (e.g. a stream of
+        values above the build-time max piles every new row into bucket
+        255, collapsing ``is_member_approx`` precision over the new
+        region). The append then re-derives the global bounds from the
+        merged values and re-codes *every* row against them — bounds and
+        codes move together, so the no-false-negative contract is
+        preserved. ``bounds_refreshed`` flags the returned store so the
+        engine re-uploads the full in-memory code column (a row-tail
+        write would leave device codes inconsistent with the new bounds).
         """
         new_values = np.asarray(new_values, np.float32)
         m = new_values.size
@@ -99,20 +136,29 @@ class RangeStore:
         pos = np.searchsorted(self.sorted_values, sv, side="left")
         sorted_values = np.insert(self.sorted_values, pos, sv)
         sorted_ids = np.insert(self.sorted_ids, pos, si)
-        new_codes = np.clip(
-            np.searchsorted(self.bucket_bounds, new_values, side="right") - 1,
-            0, N_BUCKETS - 1).astype(np.uint8)
         n = self.n_vectors + m
+        values = np.concatenate([self.values, new_values])
         quantiles = sorted_values[
             np.minimum((np.linspace(0.0, 1.0, N_QUANTILES) * (n - 1))
                        .round().astype(np.int64), n - 1)]
+        inserted = self.inserted_since_refresh + m
+        if inserted > REFRESH_FRAC * n:
+            bounds = _quantile_bounds(values)
+            return RangeStore(
+                n_vectors=n, values=values,
+                sorted_values=sorted_values, sorted_ids=sorted_ids,
+                bucket_bounds=bounds,
+                bucket_codes=_bucket_codes(values, bounds),
+                quantiles=quantiles,
+                inserted_since_refresh=0, bounds_refreshed=True)
+        new_codes = _bucket_codes(new_values, self.bucket_bounds)
         return RangeStore(
-            n_vectors=n,
-            values=np.concatenate([self.values, new_values]),
+            n_vectors=n, values=values,
             sorted_values=sorted_values, sorted_ids=sorted_ids,
             bucket_bounds=self.bucket_bounds,
             bucket_codes=np.concatenate([self.bucket_codes, new_codes]),
-            quantiles=quantiles)
+            quantiles=quantiles,
+            inserted_since_refresh=inserted, bounds_refreshed=False)
 
 
 def build_range_store(values: np.ndarray) -> RangeStore:
@@ -122,13 +168,9 @@ def build_range_store(values: np.ndarray) -> RangeStore:
     sorted_values = values[order]
     sorted_ids = order.astype(np.int32)
 
-    qs = np.quantile(values, np.linspace(0.0, 1.0, N_BUCKETS + 1))
     # strictly increasing boundaries (dedupe plateaus)
-    qs = np.maximum.accumulate(qs)
-    bucket_bounds = qs.astype(np.float32)
-    bucket_bounds[0] = -np.inf if n == 0 else np.nextafter(bucket_bounds[0], -np.inf)
-    codes = np.clip(np.searchsorted(bucket_bounds, values, side="right") - 1,
-                    0, N_BUCKETS - 1).astype(np.uint8)
+    bucket_bounds = _quantile_bounds(values)
+    codes = _bucket_codes(values, bucket_bounds)
     quantiles = np.quantile(values, np.linspace(0.0, 1.0, N_QUANTILES)) \
         .astype(np.float32)
     return RangeStore(n_vectors=n, values=values,
@@ -169,6 +211,13 @@ class MultiRangeStore:
 
     def field_store(self, field: int) -> RangeStore:
         return self.stores[field]
+
+    @property
+    def bounds_refreshed(self) -> bool:
+        """True when the last append re-bucketed any field — the engine
+        must then re-upload the full device code matrix, not just the
+        appended rows."""
+        return any(s.bounds_refreshed for s in self.stores)
 
     def selectivity(self, lo: float, hi: float, field: int = 0) -> float:
         return self.stores[field].selectivity(lo, hi)

@@ -30,6 +30,15 @@ class RecordStore(NamedTuple):
     rec_values: jax.Array     # (N, F) float32 — one column per numeric field
     pages_std: int            # pages per standard-record fetch
     pages_dense: int          # pages per densified-record fetch
+    # (N, R+R_d) bool: first slab-order occurrence of each id within this
+    # record's candidate list [neighbors ++ dense_neighbors] (-1 pads
+    # False). Query-independent, so it is precomputed when the graph is
+    # (re)built and rides the record like the other co-located fields —
+    # R+R_d BITS in the final-page slack, no extra pages. The W=1 hop
+    # loop reads it instead of paying a per-hop packed-sort dedup; when
+    # absent (None: legacy checkpoints, sharded local stores) the search
+    # falls back to computing first-occurrence on the fly.
+    cand_first: jax.Array | None = None
 
     @property
     def n(self) -> int:
@@ -50,6 +59,29 @@ class RecordStore(NamedTuple):
     @property
     def n_fields(self) -> int:
         return self.rec_values.shape[1]
+
+
+def candidate_first_mask(neighbors: np.ndarray,
+                         dense_neighbors: np.ndarray) -> np.ndarray:
+    """(N, R+R_d) bool — True at the first occurrence of each id within
+    one record's candidate list ``[neighbors ++ dense_neighbors]``; -1
+    pads are False.
+
+    The 2-hop sample repeats ids (and may repeat direct neighbors), so
+    the hop loop needs an intra-record first-occurrence mask every time a
+    record's candidates are proposed. The mask depends only on the graph
+    rows — never on the query — so it is derived here once per (re)build
+    instead of per hop. Row-wise stable argsort keeps equal ids in slab
+    order, making "first in sorted run" ≡ "first in slab order"."""
+    cand = np.concatenate([np.asarray(neighbors), np.asarray(dense_neighbors)],
+                          axis=1)
+    order = np.argsort(cand, axis=1, kind="stable")
+    s = np.take_along_axis(cand, order, 1)
+    first_sorted = np.concatenate(
+        [np.ones((cand.shape[0], 1), bool), s[:, 1:] != s[:, :-1]], axis=1)
+    out = np.zeros_like(first_sorted)
+    np.put_along_axis(out, order, first_sorted, 1)
+    return out & (cand >= 0)
 
 
 def make_record_store(vectors: np.ndarray, neighbors: np.ndarray,
@@ -73,4 +105,6 @@ def make_record_store(vectors: np.ndarray, neighbors: np.ndarray,
         dense_neighbors=jnp.asarray(dense_neighbors, jnp.int32),
         rec_labels=jnp.asarray(rec_labels, jnp.int32),
         rec_values=jnp.asarray(rec_values, jnp.float32),
-        pages_std=pages_std, pages_dense=pages_dense)
+        pages_std=pages_std, pages_dense=pages_dense,
+        cand_first=jnp.asarray(
+            candidate_first_mask(neighbors, dense_neighbors)))

@@ -44,9 +44,35 @@ The hot loop is built from shape-static, near-linear primitives:
   one kernel (``kernels/ops.hop_fused``); the loop itself runs genuinely
   batched (no ``vmap``) so the kernel amortizes across queries.
 
-Three implementations share the semantics:
+Pipelined execution (PR 5; docs/perf.md has the timeline)
+----------------------------------------------------------
+Two mechanisms restructure the loop into the paper's genuine pipeline:
 
-* :func:`filtered_search` — the fused batched pipeline (production path).
+* **Cross-hop prefetch (double-buffering)** — after the sorted-pool merge
+  the next hop's best-W frontier is fully determined, so the loop selects
+  it and issues its record fetch at the *end* of the body, carrying the
+  fetched slab in loop state: hop t+1's gather overlaps hop t's fused
+  candidate pass instead of heading the critical path. The fetch *set*
+  and every counter are unchanged — only the issue time moves — so the
+  oracle parity below still holds bit-exactly. ``SearchParams.
+  prefetch_depth`` records the in-flight slab count for the modeled SSD
+  latency (``io_sim.IOModel.latency_us``).
+* **Straggler compaction** — :func:`run_hops` advances a batch by up to
+  ``n_hops`` hops over an explicit :class:`HopState`; the host driver
+  :func:`filtered_search_pipelined` re-checks the active set every chunk
+  and compacts surviving queries into power-of-two buckets (B → B/2 → …,
+  padded with inert rows), so late hops run at the active-set width
+  instead of full B. No hop-loop op mixes query rows, so compaction is
+  pure re-indexing: the driver's results are bit-identical to the
+  single-shot :func:`filtered_search`.
+
+Implementations sharing the semantics:
+
+* :func:`filtered_search` — the fused batched pipeline in one jit
+  (single-shot; also the distributed/shard_map entry).
+* :func:`filtered_search_pipelined` — the bucketed host driver over
+  :func:`init_search` / :func:`run_hops` / :func:`finalize_search`
+  (the engine's production path).
 * :func:`filtered_search_ref` — the jnp oracle: same dedup/admission
   semantics, naive primitives (``vmap`` over queries, full argsorts,
   unfused gathers). A/B parity: identical ``io_pages``/``explored``.
@@ -62,17 +88,22 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import pq as pq_mod
 from repro.core.records import RecordStore
 from repro.core.selectors import (InMemory, QueryFilter, is_member,
                                   is_member_approx, kernel_filter_params,
-                                  kernel_view)
+                                  kernel_view, merged_table)
 from repro.kernels import ops as kops
 from repro.kernels.ref import INVALID_PENALTY   # single source (1e12)
+from repro.utils.tree import tree_put_rows, tree_take_rows
 
 BIG = jnp.float32(1e30)
 VISITED_SLOTS_MAX = 1 << 20   # beyond this the visited set hashes (approx.)
+
+DEFAULT_HOP_CHUNK = 32    # hops between the driver's compaction checks (K)
+MIN_COMPACT_BUCKET = 8    # narrowest bucket worth a dedicated compile
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,9 +115,16 @@ class SearchParams:
     mode: str = "spec_in"   # 'post' | 'spec_in' | 'strict_in'
     l_valid: int = 0        # early-exit once this many verified-valid found
                             # (0 -> defaults to l_search)
+    prefetch_depth: int = 2  # record slabs in flight per query: 2 = the
+                            # double-buffered loop (next hop's fetch issued
+                            # behind the current hop's compute), 1 = model
+                            # the serial issue order. The executed fetch
+                            # set is identical either way — the knob feeds
+                            # io_sim.IOModel.latency_us, never results.
 
     def __post_init__(self):
         assert self.mode in ("post", "spec_in", "strict_in")
+        assert self.prefetch_depth in (1, 2)
 
 
 class SearchResult(NamedTuple):
@@ -112,14 +150,20 @@ def local_fetch(store: RecordStore, ids: jax.Array) -> dict:
     ``ids`` may be any shape — the batched hop loop passes one flat
     ``(B·W,)`` vector per hop so the whole batch's reads coalesce. The
     distributed engine (core/distributed.py) swaps in a psum-combined
-    sharded fetch honouring the same contract."""
-    return {
+    sharded fetch honouring the same contract (minus the optional
+    ``cand_first`` precompute — absent keys make the search fall back to
+    the on-the-fly dedup). Unused keys cost nothing: XLA dead-code
+    eliminates gathers whose results a mode never consumes."""
+    rec = {
         "vectors": store.vectors[ids],
         "neighbors": store.neighbors[ids],
         "dense_neighbors": store.dense_neighbors[ids],
         "rec_labels": store.rec_labels[ids],
         "rec_values": store.rec_values[ids],
     }
+    if store.cand_first is not None:
+        rec["cand_first"] = store.cand_first[ids]
+    return rec
 
 
 # ---------------------------------------------------------------------------
@@ -202,40 +246,69 @@ def _slab_pq(codes: jax.Array, ids: jax.Array, tables: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Fused batched pipeline (production path)
+# Pipelined search state
 # ---------------------------------------------------------------------------
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("params", "distance_fn", "fetch_fn"))
-def filtered_search(store: RecordStore, codes: jax.Array,
-                    codebook: pq_mod.PQCodebook, mem: InMemory,
-                    qfilters: QueryFilter, queries: jax.Array, entry: int,
-                    params: SearchParams,
-                    distance_fn: Callable = pq_mod.adc_lookup,
-                    fetch_fn: Callable = local_fetch,
-                    entries: jax.Array | None = None) -> SearchResult:
-    """Run the filtered beam search for a batch of queries.
+class QueryCtx(NamedTuple):
+    """Per-query constants of one search call (leading dim B).
 
-    codes: (N, M) uint8 PQ codes (the replicated in-memory tier — its
-    leading dim, not the possibly-sharded record store's, defines the
-    global id space).
-    qfilters: batched QueryFilter (leading dim B).
-    entries: optional (B, E) int32 per-query entry seeds (-1 pad; each row
-    must hold distinct ids). Defaults to the shared ``entry`` (medoid).
-    Strict in-filtering passes exactly-valid seeds here — the query-time
-    analogue of Filtered-DiskANN's precomputed per-label entry points —
-    because its valid-only pool dies immediately when the medoid's
-    neighborhood contains no valid record.
-    """
+    Built once by :func:`init_search`. The bucketed driver gathers query
+    rows out of it when compacting stragglers, so every per-query input
+    the hop loop reads must live here rather than be re-derived inside
+    the loop."""
+    queries: jax.Array        # (B, D) float32
+    tables: jax.Array         # (B, M, ksub) ADC distance tables
+    qf: QueryFilter           # batched filter pytree
+    merged_tbl: jax.Array     # (B, n_ids+1) bool rare-list table
+                              # ((B, 1) dummy outside spec_in)
+
+
+class HopState(NamedTuple):
+    """Per-query mutable search state carried across hops (leading dim B).
+
+    ``cur_ids``/``cur_live`` hold the *already-selected* next frontier
+    whose record fetch is in flight (cross-hop prefetch): the loop body
+    consumes the carried slab, merges, selects the following frontier and
+    issues its fetch at the END of the body. No hop-loop operation mixes
+    query rows, so gathering/scattering rows of this pytree (straggler
+    compaction) leaves each query's trajectory bit-identical."""
+    pool_ids: jax.Array       # (B, P) int32
+    pool_key: jax.Array       # (B, P) float32, key-ascending
+    pool_exp: jax.Array       # (B, P) bool
+    visited: jax.Array        # (B, n_slots) bool
+    res_ids: jax.Array        # (B, res_cap) int32
+    res_d: jax.Array          # (B, res_cap) float32
+    res_valid: jax.Array      # (B, res_cap) bool
+    vtop: jax.Array           # (B, l_valid) float32 sorted valid top-l
+    n_okc: jax.Array          # (B,) int32
+    counters: jax.Array       # (B, 4) int32: io, dist, approx, hops
+    active: jax.Array         # (B,) bool
+    cur_ids: jax.Array        # (B, W) int32 — prefetched frontier
+    cur_live: jax.Array       # (B, W) bool
+
+
+def _select_frontier(pool_ids, pool_key, pool_exp, active, W: int, P: int):
+    """Best-W unexplored pool rows (sorted pool ⇒ one top_k), marked
+    explored — gated by ``active`` exactly like the pre-pipelined loop
+    head. Returns (cur_ids, cur_live, pool_exp')."""
+    B = pool_ids.shape[0]
+    bW = jnp.arange(B, dtype=jnp.int32)[:, None]
+    masked = jnp.where(pool_exp, BIG, pool_key)
+    negk, sel = jax.lax.top_k(-masked, W)                  # (B, W)
+    cur_ids = jnp.take_along_axis(pool_ids, sel, 1)
+    cur_live = (-negk < BIG) & active[:, None]
+    pool_exp = pool_exp.at[
+        bW, jnp.where(active[:, None], sel, P)].set(True, mode="drop")
+    return cur_ids, cur_live, pool_exp
+
+
+def _init(store, codes, codebook, mem, qfilters, queries, entry, params,
+          distance_fn, entries):
+    """Seed the pool/visited/result state and select the first frontier."""
     p = params
     l_valid = p.l_valid or p.l_search
     P, W = p.l_search, p.beam_width
-    R = store.degree
-    Rd = store.dense_degree if p.mode == "spec_in" else 0
-    C = R + Rd                                   # candidates per beam row
     res_cap = p.max_hops * W                     # explored-record buffer
-    rec_pages = store.pages_dense if p.mode == "spec_in" else store.pages_std
     B, D = queries.shape
     n_ids = codes.shape[0]
     n_slots, _ = _visited_spec(n_ids)
@@ -244,25 +317,15 @@ def filtered_search(store: RecordStore, codes: jax.Array,
     E = entries.shape[1]
     assert E <= P, "entry seeds exceed the pool length"
 
-    # ---- hoisted per-call constants (nothing below re-materializes them
-    # per hop: tested by the compile-artifact suite) ----
     tables = jax.vmap(lambda q: pq_mod.distance_table(codebook, q))(queries)
     bW = jnp.arange(B, dtype=jnp.int32)[:, None]
-    w_iota = jnp.arange(W, dtype=jnp.int32)[None, :]
-    is_direct = jnp.concatenate(
-        [jnp.ones((R,), bool), jnp.zeros((Rd,), bool)])
     if p.mode == "spec_in":
-        bl_i32, bc_i32 = kernel_view(mem)
-        f_scal, f_om, f_rf, f_blo, f_bhi = kernel_filter_params(qfilters)
         # rare-list membership as a per-query table, built once: one
-        # scatter here replaces a (B, W·C)-wide binary search over the
-        # CAP-length merged list every hop. Pad ids (INT_PAD) clip to the
-        # sentinel column. One BYTE per id per query (jnp.bool_ is
-        # byte-backed; jnp has no OR-scatter to pack words) — ~N·B bytes,
-        # fine at this repo's corpus scales; a Pallas word-packed variant
-        # is the TPU-scale follow-up (see ROADMAP).
-        merged_tbl = jnp.zeros((B, n_ids + 1), jnp.bool_).at[
-            bW, jnp.minimum(qfilters.merged_ids, n_ids)].set(True)
+        # scatter replaces a (B, W·C)-wide binary search over the
+        # CAP-length merged list every hop (selectors.merged_table)
+        merged_tbl = merged_table(qfilters, n_ids)
+    else:
+        merged_tbl = jnp.zeros((B, 1), jnp.bool_)
 
     # ---- entry seeding (pool kept key-ascending from the start) ----
     ent_valid = entries >= 0
@@ -293,174 +356,416 @@ def filtered_search(store: RecordStore, codes: jax.Array,
     counters = jnp.zeros((B, 4), jnp.int32)   # io, dist_comps, approx, hops
     active = jnp.any(~pool_exp & (pool_key < BIG), axis=1)
 
-    def body(state):
-        (pool_ids, pool_key, pool_exp, visited, res_ids, res_d, res_valid,
-         vtop, n_okc, counters, active) = state
-        hops = counters[:, 3]
+    cur_ids, cur_live, pool_exp = _select_frontier(
+        pool_ids, pool_key, pool_exp, active, W, P)
+    st = HopState(pool_ids, pool_key, pool_exp, visited, res_ids, res_d,
+                  res_valid, vtop, n_okc, counters, active, cur_ids,
+                  cur_live)
+    return QueryCtx(queries, tables, qfilters, merged_tbl), st
 
-        # ---- 1. pick best-W unexplored (pool is sorted; key masked) ----
-        masked = jnp.where(pool_exp, BIG, pool_key)
-        negk, sel = jax.lax.top_k(-masked, W)              # (B, W)
-        cur_ids = jnp.take_along_axis(pool_ids, sel, 1)
-        cur_live = (-negk < BIG) & active[:, None]
-        pool_exp = pool_exp.at[
-            bW, jnp.where(active[:, None], sel, P)].set(True, mode="drop")
-        safe_cur = jnp.where(cur_live, cur_ids, 0)
 
-        # ---- 2. fetch records: one coalesced gather for the whole batch ----
-        rec = fetch_fn(store, safe_cur.reshape(-1))
-        vecs = rec["vectors"].reshape(B, W, D)
-        nbrs = rec["neighbors"].reshape(B, W, R)
-        rl = rec["rec_labels"].reshape(B, W, -1)
-        rv = rec["rec_values"].reshape(B, W, -1)
-        io = counters[:, 0] + jnp.sum(cur_live, axis=1) * rec_pages
-
-        # ---- 3. re-rank + piggybacked exact verification ----
-        diff = vecs - queries[:, None, :]
-        ex_d = jnp.where(cur_live, jnp.sum(diff * diff, axis=-1), BIG)
-        ex_ok = jax.vmap(is_member)(qfilters, rl, rv) & cur_live
-        pos = jnp.where(active[:, None], hops[:, None] * W + w_iota, res_cap)
-        res_ids = res_ids.at[bW, pos].set(
-            jnp.where(cur_live, cur_ids, -1), mode="drop")
-        res_d = res_d.at[bW, pos].set(ex_d, mode="drop")
-        res_valid = res_valid.at[bW, pos].set(ex_ok, mode="drop")
-        # incremental early-termination bound: merge the W new verified
-        # distances into the sorted top-l_valid buffer (no res re-sort)
-        vtop = -jax.lax.top_k(
-            -jnp.concatenate([vtop, jnp.where(ex_ok, ex_d, BIG)], axis=1),
-            l_valid)[0]
-        n_okc = n_okc + jnp.sum(ex_ok, axis=1)
-
-        # ---- 4. candidate slab + visited-set dedup ----
-        if p.mode == "spec_in":
-            dn = rec["dense_neighbors"].reshape(B, W, Rd)
-            cand = jnp.concatenate([nbrs, dn], axis=2)     # (B, W, C)
-        else:
-            cand = nbrs
-        cand = jnp.where(cur_live[:, :, None], cand, -1).reshape(B, W * C)
-        live = cand >= 0
-        safe_cand = jnp.where(live, cand, 0)
-        slots = _visited_slot(safe_cand, n_ids)
-        seen = jnp.take_along_axis(visited, slots, axis=1)
-        fresh = live & ~seen & _first_occurrence(cand, live, n_ids)
-
-        # ---- 5. fused candidate pass (distance + membership + key) ----
-        # the fused kernel computes the ADC distance itself (bitwise equal
-        # to pq.adc_lookup); a non-default distance_fn routes every slab
-        # through the caller's function instead, keeping A/B parity with
-        # the oracle — resolved statically, no cost on the default path
-        default_dist = distance_fn is pq_mod.adc_lookup
-
-        def slab_dist(ids_slab):
-            if default_dist:
-                return _slab_pq(codes, ids_slab, tables)
-            return jax.vmap(distance_fn)(codes[ids_slab], tables)
-
-        if p.mode == "post":
-            ok = fresh
-            key_slab = slab_dist(safe_cand)
-            approx_c = counters[:, 2]
-        elif p.mode == "spec_in":
-            if default_dist:
-                in_merged = jnp.take_along_axis(merged_tbl, safe_cand,
-                                                axis=1)
-                key_slab, ok_approx = kops.hop_fused(
-                    codes[safe_cand], bl_i32[safe_cand], bc_i32[safe_cand],
-                    in_merged, tables, f_scal, f_om, f_rf, f_blo, f_bhi)
-            else:
-                ok_approx = jax.vmap(is_member_approx, in_axes=(0, 0, None))(
-                    qfilters, safe_cand, mem)
-                key_slab = slab_dist(safe_cand) + jnp.where(
-                    ok_approx, 0.0, INVALID_PENALTY)
-            ok = ok_approx & fresh
-            approx_c = counters[:, 2] + jnp.sum(live, axis=1)
-        else:  # strict_in: read every fresh neighbor's attrs from "SSD"
-            nrec = fetch_fn(store, safe_cand.reshape(-1))
-            n_rl = nrec["rec_labels"].reshape(B, W * C, -1)
-            n_rv = nrec["rec_values"].reshape(B, W * C, store.n_fields)
-            ok = jax.vmap(is_member)(qfilters, n_rl, n_rv) & fresh
-            io = io + jnp.sum(fresh, axis=1)               # 1 page / neighbor
-            key_slab = slab_dist(safe_cand)
-            approx_c = counters[:, 2]
-
-        # ---- 6. slot selection: up to R approx-valid, bridge back-fill ----
-        if p.mode == "spec_in":
-            okr = ok.reshape(B, W, C)
-            fill = (fresh.reshape(B, W, C) & ~okr
-                    & is_direct[None, None, :])
-            rank_ok = jnp.cumsum(okr.astype(jnp.int32), axis=2) - 1
-            rank_fill = jnp.cumsum(fill.astype(jnp.int32), axis=2) - 1
-            n_ok_row = jnp.sum(okr, axis=2, keepdims=True)
-            order_key = jnp.where(
-                okr, rank_ok.astype(jnp.float32),
-                jnp.where(fill, (n_ok_row + rank_fill).astype(jnp.float32),
-                          BIG))
-            _, take = jax.lax.top_k(-order_key, R)         # (B, W, R)
-            sel_ok = jnp.take_along_axis(okr, take, 2).reshape(B, W * R)
-            sel_fill = jnp.take_along_axis(fill, take, 2).reshape(B, W * R)
-            sel_live = sel_ok | sel_fill
-            sel_ids = jnp.take_along_axis(
-                cand.reshape(B, W, C), take, 2).reshape(B, W * R)
-            sel_key = jnp.take_along_axis(
-                key_slab.reshape(B, W, C), take, 2).reshape(B, W * R)
-            new_ids = jnp.where(sel_live, sel_ids, -1)
-            new_key = jnp.where(sel_live, sel_key, BIG)
-        else:
-            sel_live = ok
-            new_ids = jnp.where(ok, cand, -1)
-            new_key = jnp.where(ok, key_slab, BIG)
-        dist_c = counters[:, 1] + jnp.sum(sel_live, axis=1)
-        # mark *admitted* candidates visited (pool entries are marked from
-        # init, explored ones were admitted earlier): a fresh candidate
-        # that loses slot selection stays unmarked and may be re-proposed
-        # through another parent — the legacy pool/explored-membership
-        # dedup behaves the same way
-        visited = visited.at[
-            bW, jnp.where(sel_live,
-                          _visited_slot(jnp.where(sel_live, new_ids, 0),
-                                        n_ids),
-                          n_slots)].set(True, mode="drop")
-
-        # ---- 7. sorted-pool merge: concatenate + one top_k ----
-        all_key = jnp.concatenate([pool_key, new_key], axis=1)
-        negm, midx = jax.lax.top_k(-all_key, P)
-        pool_key = -negm
-        pool_ids = jnp.take_along_axis(
-            jnp.concatenate([pool_ids, new_ids], axis=1), midx, 1)
-        pool_exp = jnp.take_along_axis(
-            jnp.concatenate(
-                [pool_exp, jnp.zeros(new_ids.shape, jnp.bool_)], axis=1),
-            midx, 1)
-
-        # ---- 8. per-query termination ----
-        hops_new = hops + active.astype(jnp.int32)
-        frontier = jnp.any(~pool_exp & (pool_key < BIG), axis=1)
-        best_unexp = jnp.min(jnp.where(pool_exp, BIG, pool_key), axis=1)
-        settled = (n_okc >= l_valid) & (best_unexp > vtop[:, l_valid - 1])
-        active = active & (hops_new < p.max_hops) & frontier & ~settled
-        counters = jnp.stack([io, dist_c, approx_c, hops_new], axis=1)
-        return (pool_ids, pool_key, pool_exp, visited, res_ids, res_d,
-                res_valid, vtop, n_okc, counters, active)
-
-    state = (pool_ids, pool_key, pool_exp, visited, res_ids, res_d,
-             res_valid, vtop, n_okc, counters, active)
-    state = jax.lax.while_loop(lambda s: jnp.any(s[-1]), body, state)
+def _hop_step(store, codes, mem, params, distance_fn, fetch_fn, ctx, mc,
+              st, rec) -> "HopState":
+    """Consume the in-flight record slab for one hop, merge, and select
+    the next frontier. Steps keep the pre-pipelined numbering (the fetch
+    that used to be step 2 now happens at the end of the previous
+    iteration — same records, same counters, earlier issue)."""
+    p = params
+    l_valid = p.l_valid or p.l_search
+    P, W = p.l_search, p.beam_width
+    R = store.degree
+    Rd = store.dense_degree if p.mode == "spec_in" else 0
+    C = R + Rd                                   # candidates per beam row
+    res_cap = p.max_hops * W
+    rec_pages = store.pages_dense if p.mode == "spec_in" else store.pages_std
+    n_ids = codes.shape[0]
+    n_slots, _ = _visited_spec(n_ids)
     (pool_ids, pool_key, pool_exp, visited, res_ids, res_d, res_valid,
-     vtop, n_okc, counters, active) = state
+     vtop, n_okc, counters, active, cur_ids, cur_live) = st
+    queries, tables, qfilters, merged_tbl = ctx
+    B, D = queries.shape
+    bW = jnp.arange(B, dtype=jnp.int32)[:, None]
+    w_iota = jnp.arange(W, dtype=jnp.int32)[None, :]
+    is_direct = jnp.concatenate(
+        [jnp.ones((R,), bool), jnp.zeros((Rd,), bool)])
+    hops = counters[:, 3]
 
-    # ---- final: top-k verified-valid by exact distance (once) ----
-    final_key = jnp.where(res_valid, res_d, BIG)
+    # ---- 2'. the carried slab (fetched at the end of the previous
+    # iteration / by the loop prologue) ----
+    vecs = rec["vectors"].reshape(B, W, D)
+    nbrs = rec["neighbors"].reshape(B, W, R)
+    rl = rec["rec_labels"].reshape(B, W, -1)
+    rv = rec["rec_values"].reshape(B, W, -1)
+    io = counters[:, 0] + jnp.sum(cur_live, axis=1) * rec_pages
+
+    # ---- 3. re-rank + piggybacked exact verification ----
+    diff = vecs - queries[:, None, :]
+    ex_d = jnp.where(cur_live, jnp.sum(diff * diff, axis=-1), BIG)
+    ex_ok = jax.vmap(is_member)(qfilters, rl, rv) & cur_live
+    pos = jnp.where(active[:, None], hops[:, None] * W + w_iota, res_cap)
+    res_ids = res_ids.at[bW, pos].set(
+        jnp.where(cur_live, cur_ids, -1), mode="drop")
+    res_d = res_d.at[bW, pos].set(ex_d, mode="drop")
+    res_valid = res_valid.at[bW, pos].set(ex_ok, mode="drop")
+    # incremental early-termination bound: merge the W new verified
+    # distances into the sorted top-l_valid buffer (no res re-sort)
+    vtop = -jax.lax.top_k(
+        -jnp.concatenate([vtop, jnp.where(ex_ok, ex_d, BIG)], axis=1),
+        l_valid)[0]
+    n_okc = n_okc + jnp.sum(ex_ok, axis=1)
+
+    # ---- 4. candidate slab + visited-set dedup ----
+    if p.mode == "spec_in":
+        dn = rec["dense_neighbors"].reshape(B, W, Rd)
+        cand = jnp.concatenate([nbrs, dn], axis=2)     # (B, W, C)
+    else:
+        cand = nbrs
+    cand = jnp.where(cur_live[:, :, None], cand, -1).reshape(B, W * C)
+    live = cand >= 0
+    safe_cand = jnp.where(live, cand, 0)
+    slots = _visited_slot(safe_cand, n_ids)
+    seen = jnp.take_along_axis(visited, slots, axis=1)
+    if W == 1 and "cand_first" in rec:
+        # W=1: the slab is exactly one record's candidate list, whose
+        # intra-slab duplicate structure is query-independent — read the
+        # precomputed mask off the record (records.candidate_first_mask)
+        # instead of paying the packed-sort dedup per hop. Bit-identical
+        # to _first_occurrence on the one-row slab; the first C columns of
+        # the [nbrs ++ dense] mask are the nbrs-only mask (prefix
+        # property), so post/strict slice cleanly.
+        first = rec["cand_first"].reshape(B, -1)[:, :C]
+    else:
+        first = _first_occurrence(cand, live, n_ids)
+    fresh = live & ~seen & first
+
+    # ---- 5. fused candidate pass (distance + membership + key) ----
+    # the fused kernel computes the ADC distance itself (bitwise equal
+    # to pq.adc_lookup); a non-default distance_fn routes every slab
+    # through the caller's function instead, keeping A/B parity with
+    # the oracle — resolved statically, no cost on the default path
+    default_dist = distance_fn is pq_mod.adc_lookup
+
+    def slab_dist(ids_slab):
+        if default_dist:
+            return _slab_pq(codes, ids_slab, tables)
+        return jax.vmap(distance_fn)(codes[ids_slab], tables)
+
+    if p.mode == "post":
+        ok = fresh
+        key_slab = slab_dist(safe_cand)
+        approx_c = counters[:, 2]
+    elif p.mode == "spec_in":
+        if default_dist:
+            bl_i32, bc_i32, (f_scal, f_om, f_rf, f_blo, f_bhi) = mc
+            in_merged = jnp.take_along_axis(merged_tbl, safe_cand,
+                                            axis=1)
+            key_slab, ok_approx = kops.hop_fused(
+                codes[safe_cand], bl_i32[safe_cand], bc_i32[safe_cand],
+                in_merged, tables, f_scal, f_om, f_rf, f_blo, f_bhi)
+        else:
+            ok_approx = jax.vmap(is_member_approx, in_axes=(0, 0, None))(
+                qfilters, safe_cand, mem)
+            key_slab = slab_dist(safe_cand) + jnp.where(
+                ok_approx, 0.0, INVALID_PENALTY)
+        ok = ok_approx & fresh
+        approx_c = counters[:, 2] + jnp.sum(live, axis=1)
+    else:  # strict_in: read every fresh neighbor's attrs from "SSD"
+        nrec = fetch_fn(store, safe_cand.reshape(-1))
+        n_rl = nrec["rec_labels"].reshape(B, W * C, -1)
+        n_rv = nrec["rec_values"].reshape(B, W * C, store.n_fields)
+        ok = jax.vmap(is_member)(qfilters, n_rl, n_rv) & fresh
+        io = io + jnp.sum(fresh, axis=1)               # 1 page / neighbor
+        key_slab = slab_dist(safe_cand)
+        approx_c = counters[:, 2]
+
+    # ---- 6. slot selection: up to R approx-valid, bridge back-fill ----
+    if p.mode == "spec_in":
+        okr = ok.reshape(B, W, C)
+        fill = (fresh.reshape(B, W, C) & ~okr
+                & is_direct[None, None, :])
+        rank_ok = jnp.cumsum(okr.astype(jnp.int32), axis=2) - 1
+        rank_fill = jnp.cumsum(fill.astype(jnp.int32), axis=2) - 1
+        n_ok_row = jnp.sum(okr, axis=2, keepdims=True)
+        order_key = jnp.where(
+            okr, rank_ok.astype(jnp.float32),
+            jnp.where(fill, (n_ok_row + rank_fill).astype(jnp.float32),
+                      BIG))
+        _, take = jax.lax.top_k(-order_key, R)         # (B, W, R)
+        sel_ok = jnp.take_along_axis(okr, take, 2).reshape(B, W * R)
+        sel_fill = jnp.take_along_axis(fill, take, 2).reshape(B, W * R)
+        sel_live = sel_ok | sel_fill
+        sel_ids = jnp.take_along_axis(
+            cand.reshape(B, W, C), take, 2).reshape(B, W * R)
+        sel_key = jnp.take_along_axis(
+            key_slab.reshape(B, W, C), take, 2).reshape(B, W * R)
+        new_ids = jnp.where(sel_live, sel_ids, -1)
+        new_key = jnp.where(sel_live, sel_key, BIG)
+    else:
+        sel_live = ok
+        new_ids = jnp.where(ok, cand, -1)
+        new_key = jnp.where(ok, key_slab, BIG)
+    dist_c = counters[:, 1] + jnp.sum(sel_live, axis=1)
+    # mark *admitted* candidates visited (pool entries are marked from
+    # init, explored ones were admitted earlier): a fresh candidate
+    # that loses slot selection stays unmarked and may be re-proposed
+    # through another parent — the legacy pool/explored-membership
+    # dedup behaves the same way
+    visited = visited.at[
+        bW, jnp.where(sel_live,
+                      _visited_slot(jnp.where(sel_live, new_ids, 0),
+                                    n_ids),
+                      n_slots)].set(True, mode="drop")
+
+    # ---- 7. sorted-pool merge: concatenate + one top_k ----
+    all_key = jnp.concatenate([pool_key, new_key], axis=1)
+    negm, midx = jax.lax.top_k(-all_key, P)
+    pool_key = -negm
+    pool_ids = jnp.take_along_axis(
+        jnp.concatenate([pool_ids, new_ids], axis=1), midx, 1)
+    pool_exp = jnp.take_along_axis(
+        jnp.concatenate(
+            [pool_exp, jnp.zeros(new_ids.shape, jnp.bool_)], axis=1),
+        midx, 1)
+
+    # ---- 8. per-query termination ----
+    hops_new = hops + active.astype(jnp.int32)
+    frontier = jnp.any(~pool_exp & (pool_key < BIG), axis=1)
+    best_unexp = jnp.min(jnp.where(pool_exp, BIG, pool_key), axis=1)
+    settled = (n_okc >= l_valid) & (best_unexp > vtop[:, l_valid - 1])
+    active = active & (hops_new < p.max_hops) & frontier & ~settled
+    counters = jnp.stack([io, dist_c, approx_c, hops_new], axis=1)
+
+    # ---- 1'. select the NEXT frontier (its fetch is issued right after
+    # this step returns — the cross-hop prefetch) ----
+    cur_ids, cur_live, pool_exp = _select_frontier(
+        pool_ids, pool_key, pool_exp, active, W, P)
+    return HopState(pool_ids, pool_key, pool_exp, visited, res_ids, res_d,
+                    res_valid, vtop, n_okc, counters, active, cur_ids,
+                    cur_live)
+
+
+def _hop_loop(store, codes, mem, params, distance_fn, fetch_fn, ctx, st,
+              n_hops) -> "HopState":
+    """Run up to ``n_hops`` double-buffered hops over ``st``.
+
+    The body consumes the carried slab, then issues the next frontier's
+    fetch as its last action — the slab rides the loop carry, so hop
+    t+1's gather sits behind hop t's candidate pass in program order
+    (``prefetch_depth`` = 2 slabs in flight)."""
+    p = params
+    if p.mode == "spec_in" and distance_fn is pq_mod.adc_lookup:
+        bl_i32, bc_i32 = kernel_view(mem)
+        mc = (bl_i32, bc_i32, kernel_filter_params(ctx.qf))
+    else:
+        mc = None
+
+    def issue(st):
+        return fetch_fn(store,
+                        jnp.where(st.cur_live, st.cur_ids, 0).reshape(-1))
+
+    def cond(carry):
+        st, _, i = carry
+        return jnp.any(st.active) & (i < n_hops)
+
+    def body(carry):
+        st, rec, i = carry
+        st = _hop_step(store, codes, mem, p, distance_fn, fetch_fn, ctx,
+                       mc, st, rec)
+        return st, issue(st), i + 1
+
+    st, _, _ = jax.lax.while_loop(cond, body, (st, issue(st), jnp.int32(0)))
+    return st
+
+
+def _finalize(st: "HopState", params: SearchParams) -> SearchResult:
+    """Top-k verified-valid by exact distance (once, outside the loop)."""
+    p = params
+    final_key = jnp.where(st.res_valid, st.res_d, BIG)
     _, order = jax.lax.top_k(-final_key, p.k)
-    top_valid = jnp.take_along_axis(res_valid, order, 1)
-    out_ids = jnp.where(top_valid, jnp.take_along_axis(res_ids, order, 1), -1)
-    out_d = jnp.where(top_valid, jnp.take_along_axis(res_d, order, 1),
+    top_valid = jnp.take_along_axis(st.res_valid, order, 1)
+    out_ids = jnp.where(top_valid,
+                        jnp.take_along_axis(st.res_ids, order, 1), -1)
+    out_d = jnp.where(top_valid, jnp.take_along_axis(st.res_d, order, 1),
                       jnp.inf)
-    n_valid = jnp.sum(res_valid, axis=1)
-    n_explored = jnp.sum(res_ids >= 0, axis=1)
-    fp = jnp.sum((res_ids >= 0) & ~res_valid, axis=1)
-    return SearchResult(out_ids, out_d, counters[:, 0], counters[:, 3],
-                        counters[:, 1], counters[:, 2], n_valid, fp,
-                        n_explored)
+    n_valid = jnp.sum(st.res_valid, axis=1)
+    n_explored = jnp.sum(st.res_ids >= 0, axis=1)
+    fp = jnp.sum((st.res_ids >= 0) & ~st.res_valid, axis=1)
+    c = st.counters
+    return SearchResult(out_ids, out_d, c[:, 0], c[:, 3], c[:, 1], c[:, 2],
+                        n_valid, fp, n_explored)
+
+
+# ---------------------------------------------------------------------------
+# Fused batched pipeline (single-shot jit)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "distance_fn", "fetch_fn"))
+def filtered_search(store: RecordStore, codes: jax.Array,
+                    codebook: pq_mod.PQCodebook, mem: InMemory,
+                    qfilters: QueryFilter, queries: jax.Array, entry: int,
+                    params: SearchParams,
+                    distance_fn: Callable = pq_mod.adc_lookup,
+                    fetch_fn: Callable = local_fetch,
+                    entries: jax.Array | None = None) -> SearchResult:
+    """Run the filtered beam search for a batch of queries (one jit).
+
+    codes: (N, M) uint8 PQ codes (the replicated in-memory tier — its
+    leading dim, not the possibly-sharded record store's, defines the
+    global id space).
+    qfilters: batched QueryFilter (leading dim B).
+    entries: optional (B, E) int32 per-query entry seeds (-1 pad; each row
+    must hold distinct ids). Defaults to the shared ``entry`` (medoid).
+    Strict in-filtering passes exactly-valid seeds here — the query-time
+    analogue of Filtered-DiskANN's precomputed per-label entry points —
+    because its valid-only pool dies immediately when the medoid's
+    neighborhood contains no valid record.
+
+    ``filtered_search_pipelined`` runs the same init/hop/finalize code
+    through the chunked runner with straggler compaction (bit-identical
+    results); this single-shot form stays the distributed/shard_map entry
+    and the compaction-parity oracle.
+    """
+    ctx, st = _init(store, codes, codebook, mem, qfilters, queries, entry,
+                    params, distance_fn, entries)
+    st = _hop_loop(store, codes, mem, params, distance_fn, fetch_fn, ctx,
+                   st, params.max_hops)
+    return _finalize(st, params)
+
+
+# ---------------------------------------------------------------------------
+# Chunked runner + bucketed straggler-compaction driver
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("params", "distance_fn"))
+def init_search(store: RecordStore, codes: jax.Array,
+                codebook: pq_mod.PQCodebook, mem: InMemory,
+                qfilters: QueryFilter, queries: jax.Array, entry: int,
+                params: SearchParams,
+                distance_fn: Callable = pq_mod.adc_lookup,
+                entries: jax.Array | None = None):
+    """Build ``(QueryCtx, HopState)`` for a batch — the seeding half of
+    :func:`filtered_search`, exposed so the bucketed driver owns the hop
+    loop. Compiles once per (shapes, params)."""
+    return _init(store, codes, codebook, mem, qfilters, queries, entry,
+                 params, distance_fn, entries)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("params", "distance_fn", "fetch_fn"),
+                   donate_argnames=("st",))
+def run_hops(store: RecordStore, codes: jax.Array, mem: InMemory,
+             ctx: QueryCtx, st: HopState, n_hops, params: SearchParams,
+             distance_fn: Callable = pq_mod.adc_lookup,
+             fetch_fn: Callable = local_fetch) -> HopState:
+    """Advance every active query by up to ``n_hops`` hops.
+
+    ``n_hops`` is traced, so one compile covers every chunk length at a
+    given batch width: the bucket jit cache is keyed only by (bucket
+    shapes, params) — asserted by the compile-count test. ``st`` is
+    donated: chunk t's state buffers are reused in place by chunk t+1."""
+    return _hop_loop(store, codes, mem, params, distance_fn, fetch_fn, ctx,
+                     st, n_hops)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def finalize_search(st: HopState, params: SearchParams) -> SearchResult:
+    """Extract the SearchResult from a settled (or hop-capped) state."""
+    return _finalize(st, params)
+
+
+def _pow2_at_least(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length() if n > 1 else 1
+
+
+def filtered_search_pipelined(store: RecordStore, codes: jax.Array,
+                              codebook: pq_mod.PQCodebook, mem: InMemory,
+                              qfilters: QueryFilter, queries: jax.Array,
+                              entry: int, params: SearchParams,
+                              distance_fn: Callable = pq_mod.adc_lookup,
+                              fetch_fn: Callable = local_fetch,
+                              entries: jax.Array | None = None,
+                              hop_chunk: int = DEFAULT_HOP_CHUNK,
+                              min_bucket: int = MIN_COMPACT_BUCKET,
+                              collect_trace: bool = False):
+    """Bucketed host driver: chunked hops + straggler compaction.
+
+    Runs :func:`run_hops` ``hop_chunk`` hops at a time; after every chunk
+    the still-active queries are counted on the host and, when they fit a
+    smaller power-of-two bucket (≥ ``min_bucket``), compacted into it —
+    settled rows fold back into the full-width state, pads (repeats of a
+    live row, forced inactive) fill the bucket. Late hops therefore run
+    at the straggler-set width instead of full B, while every query's
+    trajectory stays bit-identical to single-shot
+    :func:`filtered_search` (no hop-loop op mixes rows). Each bucket
+    width compiles once and is reused across calls/chunks (the Session
+    repeat-search path).
+
+    ``hop_chunk=0`` falls back to the single-shot jit. With
+    ``collect_trace=True`` returns ``(SearchResult, trace)`` where trace
+    lists ``{"hop", "active", "bucket"}`` per chunk boundary — the
+    benchmark's ``--active-trace`` feed.
+    """
+    if hop_chunk <= 0:
+        res = filtered_search(store, codes, codebook, mem, qfilters,
+                              queries, entry, params,
+                              distance_fn=distance_fn, fetch_fn=fetch_fn,
+                              entries=entries)
+        return (res, []) if collect_trace else res
+    B = int(queries.shape[0])
+    full_ctx, full_st = init_search(store, codes, codebook, mem, qfilters,
+                                    queries, entry, params,
+                                    distance_fn=distance_fn,
+                                    entries=entries)
+    work_ctx, work_st = full_ctx, full_st
+    work_map: np.ndarray | None = None   # None ⇒ identity (full width)
+    work_valid: np.ndarray | None = None  # non-pad rows of the bucket
+    width = B
+    hops_done = 0
+    trace: list = []
+    while True:
+        act = np.asarray(work_st.active)
+        n_act = int(act.sum())               # pads are inert (forced off)
+        if collect_trace:
+            trace.append({"hop": hops_done, "active": n_act,
+                          "bucket": width})
+        bucket = min(B, max(min_bucket, _pow2_at_least(max(n_act, 1))))
+        if n_act and bucket >= width:
+            # active set still fills the current bucket: keep hopping
+            work_st = run_hops(store, codes, mem, work_ctx, work_st,
+                               hop_chunk, params, distance_fn=distance_fn,
+                               fetch_fn=fetch_fn)
+            hops_done += hop_chunk
+            continue
+        # settle or shrink: fold the working rows into the full state
+        if work_map is None:
+            full_st = work_st
+        else:
+            sidx = jnp.asarray(
+                np.where(work_valid, work_map, B).astype(np.int32))
+            full_st = tree_put_rows(full_st, work_st, sidx)
+        if n_act == 0:
+            break
+        # compact the survivors into the next power-of-two bucket
+        surv = np.flatnonzero(act)
+        idx = (work_map[surv] if work_map is not None else surv) \
+            .astype(np.int32)
+        pads = np.full(bucket - idx.size, idx[0], np.int32)
+        work_map = np.concatenate([idx, pads])
+        work_valid = np.arange(bucket) < idx.size
+        gidx = jnp.asarray(work_map)
+        work_ctx = tree_take_rows(full_ctx, gidx)
+        work_st = tree_take_rows(full_st, gidx)
+        work_st = work_st._replace(
+            active=work_st.active & jnp.asarray(work_valid))
+        width = bucket
+        work_st = run_hops(store, codes, mem, work_ctx, work_st, hop_chunk,
+                           params, distance_fn=distance_fn,
+                           fetch_fn=fetch_fn)
+        hops_done += hop_chunk
+    res = finalize_search(full_st, params)
+    return (res, trace) if collect_trace else res
 
 
 # ---------------------------------------------------------------------------

@@ -163,6 +163,22 @@ def merged_membership(qf: QueryFilter, ids: jax.Array) -> jax.Array:
     return (jnp.take(qf.merged_ids, pos) == ids) & (pos < qf.merged_len)
 
 
+def merged_table(qf: QueryFilter, n_ids: int) -> jax.Array:
+    """Batched rare-list membership as a pre-scattered per-query table.
+
+    Returns ``(B, n_ids+1)`` bool — row ``b`` true at the ids in
+    ``qf.merged_ids[b]``; pad ids (INT_PAD) clip into the sentinel column
+    ``n_ids``, which the hop loop never gathers (candidate ids are
+    < n_ids). One scatter per search call replaces a (B, W·C)-wide binary
+    search over the CAP-length merged list every hop. One BYTE per id per
+    query (``jnp.bool_`` is byte-backed; jnp has no OR-scatter to pack
+    words) — ~N·B bytes, fine at this repo's corpus scales; a Pallas
+    word-packed variant is the TPU-scale follow-up (see ROADMAP)."""
+    b = jnp.arange(qf.merged_ids.shape[0], dtype=jnp.int32)[:, None]
+    return jnp.zeros((qf.merged_ids.shape[0], n_ids + 1), jnp.bool_).at[
+        b, jnp.minimum(qf.merged_ids, n_ids)].set(True)
+
+
 def kernel_view(mem: InMemory) -> tuple[jax.Array, jax.Array]:
     """The in-memory tier in the fused-kernel layout.
 

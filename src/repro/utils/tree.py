@@ -32,3 +32,24 @@ def tree_zeros_like(tree):
 def tree_count_params(tree) -> int:
     return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree)
                if hasattr(x, "shape"))
+
+
+@jax.jit
+def tree_take_rows(tree, idx):
+    """Gather rows ``idx`` along the leading axis of every array leaf.
+
+    The batch-compaction primitive: every leaf must carry the batch as
+    its leading dimension (e.g. search ``HopState``/``QueryCtx``,
+    batched ``QueryFilter``). ``idx`` may repeat rows (padding)."""
+    return jax.tree_util.tree_map(lambda a: jnp.asarray(a)[idx], tree)
+
+
+@jax.jit
+def tree_put_rows(full, part, idx):
+    """Scatter ``part``'s rows into ``full`` at leading-axis ``idx``.
+
+    Out-of-range indices are dropped — the compaction driver points pad
+    rows past the batch so duplicated padding never overwrites a real
+    row."""
+    return jax.tree_util.tree_map(
+        lambda f, p: f.at[idx].set(p, mode="drop"), full, part)

@@ -171,14 +171,20 @@ def test_steady_state_insert_compiles_once():
     shape0 = idx.store.vectors.shape
     for r in reqs(0):
         idx.search(r)                # warm the search path at capacity shapes
-    c0 = search_mod.filtered_search._cache_size()
 
+    def caches():
+        # the engine's pipelined path: init → chunked runner → finalize
+        return (search_mod.init_search._cache_size(),
+                search_mod.run_hops._cache_size(),
+                search_mod.finalize_search._cache_size())
+
+    c0 = caches()
     idx.insert(*batch(1))            # steady state: capacity unchanged
     assert idx.store.vectors.shape == shape0
     assert idx.store.rec_values.shape == (shape0[0], 1)
     for r in reqs(1):
         idx.search(r)
-    assert search_mod.filtered_search._cache_size() == c0, \
+    assert caches() == c0, \
         "steady-state insert re-specialized the search jit"
     # the padded rows stay unreachable: results never leak pad ids
     res = idx.search(SearchRequest(query=batch(1)[0][0], k=10))
@@ -297,3 +303,42 @@ def test_strict_in_small_l_regression(shared_ds, shared_engine):
     # strict in-filtering still pays the neighbor-attribute reads the paper
     # eliminates — its I/O must dominate what the router would spend
     assert stats.io_pages.mean() > 0
+
+
+def test_skewed_insert_stream_refreshes_device_buckets():
+    """ROADMAP insert-path remainder: a skewed insert stream must trigger
+    the per-field quantile refresh, and the engine must re-upload the
+    FULL device bucket-code column (a row-tail write would mix codes from
+    two bounds generations and break no-false-negatives)."""
+    import jax.numpy as jnp
+    from repro.core.selectors import RangeSelector, is_member_approx
+    rng = np.random.default_rng(11)
+    vecs = rng.normal(0, 1, (300, 16)).astype(np.float32)
+    meta = [{"v": float(rng.uniform(0, 50))} for _ in range(300)]
+    idx = Index.build(vecs, meta,
+                      eng.IndexConfig(r=8, r_dense=48, l_build=16, pq_m=4,
+                                      max_labels=4, ql=2, cap=64))
+    # far above the build-time max, big enough to trip REFRESH_FRAC
+    m = 200
+    new_vecs = rng.normal(0, 1, (m, 16)).astype(np.float32)
+    idx.insert(new_vecs, [{"v": float(rng.uniform(1000, 1050))}
+                          for _ in range(m)])
+    e = idx.engine
+    assert e.range_store.bounds_refreshed, "skewed stream did not refresh"
+    n = e.n
+    # device tier consistent with the refreshed host codes, all rows
+    np.testing.assert_array_equal(
+        np.asarray(e.mem.bucket_codes)[:n],
+        e.range_store.bucket_codes.astype(
+            np.asarray(e.mem.bucket_codes).dtype))
+    # the refreshed buckets discriminate the new region...
+    fs = e.range_store.field_store(0)
+    assert fs.precision(1000.0, 1025.0) > 0.3
+    # ...and keep the no-false-negative contract through the device path
+    sel = RangeSelector(e.range_store, 1000.0, 1025.0)
+    plan = sel.plan(e.config.ql, e.config.cap, e.config.qr)
+    approx = np.asarray(is_member_approx(plan.qfilter,
+                                         jnp.arange(n), e.mem))
+    vals = fs.values[:n]
+    truth = (vals >= 1000.0) & (vals < 1025.0)
+    assert not np.any(truth & ~approx), "approx false negative after refresh"

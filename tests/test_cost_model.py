@@ -57,3 +57,68 @@ def test_alpha_beta_weighting():
 def test_effective_l_bounded():
     r = CM.route_query(_inputs(s=1e-6), max_pool=512)
     assert r.effective_l <= 512
+
+
+# ---------------------------------------------------------------------------
+# Measured-counter calibration (BENCH_search.json -> compute terms)
+# ---------------------------------------------------------------------------
+
+def _payload(spec_dist=560.0, spec_approx=24_000.0, post_dist=300.0):
+    return {"modes": {
+        "spec_in": {"mean_hops": 80.0, "mean_dist_comps": spec_dist,
+                    "mean_approx_checks": spec_approx},
+        "post": {"mean_hops": 50.0, "mean_dist_comps": post_dist,
+                 "mean_approx_checks": 0.0},
+    }}
+
+
+def test_calibration_from_bench_ratios():
+    cal = CM.Calibration.from_bench(_payload())
+    assert abs(cal.spec_in.dist_per_hop - 7.0) < 1e-9      # 560 / 80
+    assert abs(cal.spec_in.approx_per_hop - 300.0) < 1e-9  # 24000 / 80
+    assert abs(cal.post.dist_per_hop - 6.0) < 1e-9         # 300 / 50
+    assert abs(cal.post.approx_per_hop) < 1e-9
+
+
+def test_calibrated_compute_uses_measured_per_hop_constants():
+    """Calibration swaps the per-hop compute constants (R, γ·R_d) for the
+    measured ratios; hop-count scaling and every I/O term stay analytic."""
+    cal = CM.Calibration.from_bench(_payload())
+    c = _inputs(s=0.5, p_in=0.8)            # precision regime: hops = L/p
+    mc = CM.in_filtering_cost(c, cal)
+    hops = c.l / c.p_in
+    assert abs(mc.compute - hops * (7.0 + c.gamma * 300.0)) < 1e-6
+    assert mc.io_pages == CM.in_filtering_cost(c).io_pages
+    c_lo = _inputs(s=0.001)                 # bridge regime: hops = L/s·R/R_d
+    hops_lo = (c_lo.l / c_lo.s) * (c_lo.r / c_lo.r_d)
+    mlo = CM.in_filtering_cost(c_lo, cal)
+    assert abs(mlo.compute - hops_lo * (7.0 + c_lo.gamma * 300.0)) < 1e-3
+    mp = CM.post_filtering_cost(c, cal)
+    assert abs(mp.compute - (c.l / c.s) * 6.0) < 1e-6
+    # pre-filtering has no fused counters: calibration is a no-op there
+    assert CM.pre_filtering_cost(c, cal) == CM.pre_filtering_cost(c)
+
+
+def test_calibration_none_is_identity():
+    c = _inputs(s=0.07)
+    for fn in (CM.in_filtering_cost, CM.post_filtering_cost,
+               CM.pre_filtering_cost):
+        assert fn(c, None) == fn(c)
+
+
+def test_calibration_can_flip_route():
+    """Measured counters that contradict the analytic estimate must be
+    able to change the routing decision — the point of calibrating."""
+    c = _inputs(s=0.02)
+    analytic = CM.route_query(c)
+    assert analytic.mechanism == "in"
+    # measured: spec_in pays enormous approx-check cost per hop, post is
+    # far cheaper per hop than the analytic R
+    cal = CM.Calibration.from_bench(
+        _payload(spec_approx=240_000.0, post_dist=50.0))
+    calibrated = CM.route_query(c, calib=cal)
+    assert calibrated.mechanism == "post"
+
+
+def test_load_calibration_missing_file(tmp_path):
+    assert CM.load_calibration(str(tmp_path / "nope.json")) is None

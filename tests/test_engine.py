@@ -94,3 +94,31 @@ def test_route_distribution_sane(built):
     sels = make_selectors(ds, e, "hybrid")
     _, _, stats = e.search(ds.queries, sels, eng.SearchConfig(k=10, l=32))
     assert set(stats.mechanism) <= {"pre", "in", "post"}
+
+
+def test_engine_calibrate_roundtrip(built):
+    """engine.calibrate installs measured per-hop constants for _route
+    (cost_model.Calibration) and cleanly reverts/refuses."""
+    ds, e = built
+    assert e.calibration is None
+    payload = {"modes": {
+        "spec_in": {"mean_hops": 80.0, "mean_dist_comps": 560.0,
+                    "mean_approx_checks": 24_000.0},
+        "post": {"mean_hops": 50.0, "mean_dist_comps": 300.0,
+                 "mean_approx_checks": 0.0}}}
+    try:
+        assert e.calibrate(payload)
+        assert abs(e.calibration.spec_in.dist_per_hop - 7.0) < 1e-9
+        # routing still works end-to-end with calibration installed
+        sels = make_selectors(ds, e, "range")[:4]
+        ids, _, stats = e.search(ds.queries[:4], sels,
+                                 eng.SearchConfig(k=5, l=16, max_hops=60,
+                                                  max_pool=128))
+        assert ids.shape == (4, 5)
+        assert not e.calibrate("/nonexistent/BENCH_search.json")
+        # malformed payloads degrade to uncalibrated, like unreadable paths
+        assert not e.calibrate({"modes": {"spec_in": {"mean_hops": 1.0}}})
+        assert e.calibration is None
+    finally:
+        e.calibrate(None)          # shared engine: leave no state behind
+    assert e.calibration is None

@@ -1,15 +1,22 @@
-"""Fused hop pipeline A/B suite (docs/perf.md).
+"""Fused/pipelined hop pipeline A/B suite (docs/perf.md).
 
 * Parity: the fused batched ``filtered_search`` against the jnp oracle
   ``filtered_search_ref`` across all three modes × three selectivities —
   recall@10 within 1%, identical ``io_pages``/``explored`` counters.
-* Compile artifacts: the fused hop body contains no op that broadcasts
-  against the ``res_cap`` explored buffer, and its loop condition never
-  sorts it (the incremental-bound invariant). The legacy baseline is
-  walked too, as a canary that the checker actually catches the
-  pathology it guards against.
-* Session-driven repeat searches hit the search jit cache (compile once).
+* Compaction parity: the bucketed driver ``filtered_search_pipelined``
+  (chunked hops + straggler compaction) returns a bit-identical
+  ``SearchResult`` vs the single-shot jit across the same grid, and its
+  per-bucket jit cache compiles once per bucket.
+* Compile artifacts: the hop bodies (single-shot AND chunked runner)
+  contain no op that broadcasts against the ``res_cap`` explored buffer,
+  and their loop conditions never sort it (the incremental-bound
+  invariant). The legacy baseline is walked too, as a canary that the
+  checker actually catches the pathology it guards against.
+* Session-driven repeat searches hit the bucketed search jit caches
+  (compile once).
 """
+import functools
+
 import numpy as np
 import pytest
 
@@ -92,6 +99,49 @@ def test_fused_matches_reference(shared_ds, shared_engine, mode,
     r_f = _recalls(ds, e, sels, fused)
     r_r = _recalls(ds, e, sels, ref)
     assert abs(r_f.mean() - r_r.mean()) <= 0.01, (r_f.mean(), r_r.mean())
+
+
+@pytest.mark.parametrize("mode", ["post", "spec_in", "strict_in"])
+@pytest.mark.parametrize("selectivity", SELECTIVITIES)
+def test_pipelined_matches_single_shot(shared_ds, shared_engine, mode,
+                                       selectivity):
+    """Compaction parity: the bucketed driver is pure batch re-indexing —
+    every SearchResult field must match the single-shot jit bit-for-bit.
+    Small chunk + min_bucket force several compaction generations."""
+    ds, e = shared_ds, shared_engine
+    impl = functools.partial(search_mod.filtered_search_pipelined,
+                             hop_chunk=8, min_bucket=2)
+    _, pipe = _run_mode(e, ds, mode, selectivity, impl)
+    _, single = _run_mode(e, ds, mode, selectivity,
+                          search_mod.filtered_search)
+    for field in search_mod.SearchResult._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(pipe, field)),
+            np.asarray(getattr(single, field)),
+            err_msg=f"{mode}@{selectivity}: {field}")
+
+
+def test_bucket_jit_cache_compiles_once_per_bucket(shared_ds,
+                                                   shared_engine):
+    """The chunked runner is keyed only by (bucket shapes, params):
+    repeating the exact same search must not add cache entries, and the
+    first run may compile at most one artifact per power-of-two bucket
+    (+ the full width)."""
+    ds, e = shared_ds, shared_engine
+    B = ds.queries.shape[0]
+    impl = functools.partial(search_mod.filtered_search_pipelined,
+                             hop_chunk=8, min_bucket=2)
+    c_before = search_mod.run_hops._cache_size()
+    _, res1 = _run_mode(e, ds, "spec_in", 0.30, impl)
+    c_first = search_mod.run_hops._cache_size()
+    n_buckets = B.bit_length() + 2   # pow-2 widths in [2, B] + full width
+    assert c_first - c_before <= n_buckets, \
+        f"{c_first - c_before} compiles for ≤{n_buckets} possible buckets"
+    _, res2 = _run_mode(e, ds, "spec_in", 0.30, impl)
+    assert search_mod.run_hops._cache_size() == c_first, \
+        "repeating an identical search re-compiled a bucket"
+    np.testing.assert_array_equal(np.asarray(res1.ids),
+                                  np.asarray(res2.ids))
 
 
 def test_fused_results_are_valid(shared_ds, shared_engine):
@@ -261,6 +311,39 @@ def test_hop_body_has_no_res_cap_broadcasts(shared_ds, shared_engine):
     assert legacy_sorts, "checker failed to flag the legacy cond re-sort"
 
 
+def test_chunked_runner_has_no_res_cap_broadcasts(shared_ds,
+                                                  shared_engine):
+    """The chunked hop runner (run_hops) passes the same compile-artifact
+    bar as the single-shot loop: no op pairs the res_cap axis with
+    another axis, and the (now hop-budgeted) condition never sorts the
+    explored buffer."""
+    ds, e = shared_ds, shared_engine
+    B = 3
+    sels = _range_selectors(e, 0.3, B)
+    qf = stack_filters([s.plan(e.config.ql, e.config.cap).qfilter
+                        for s in sels])
+    queries = jnp.asarray(ds.queries[:B])
+    params = search_mod.SearchParams(l_search=16, k=5, beam_width=1,
+                                     max_hops=RES_CAP_HOPS, mode="spec_in")
+    res_cap = RES_CAP_HOPS * params.beam_width
+    ctx, st = search_mod.init_search(e.store, e.codes, e.codebook, e.mem,
+                                     qf, queries, e.medoid, params)
+
+    def fn(store, codes, mem, ctx, st):
+        return search_mod.run_hops(store, codes, mem, ctx, st, 16, params)
+
+    closed = jax.make_jaxpr(fn)(e.store, e.codes, e.mem, ctx, st)
+    whiles = _find_whiles(closed.jaxpr)
+    assert whiles, "chunked runner lost its while loop?"
+    for w in whiles:
+        body = w.params["body_jaxpr"].jaxpr
+        cond = w.params["cond_jaxpr"].jaxpr
+        bad = _res_cap_violations(body, res_cap, B)
+        assert not bad, f"res_cap-shaped work in chunked hop body: {bad}"
+        assert not _cond_sorts_res_cap(cond, res_cap), \
+            "chunked hop condition re-sorts the explored buffer"
+
+
 # ---------------------------------------------------------------------------
 # Session-driven repeat searches compile once
 # ---------------------------------------------------------------------------
@@ -283,12 +366,17 @@ def test_session_repeat_search_compiles_once():
                 SearchRequest(query=qs[1], filter=Tag("cat") == 2),
                 SearchRequest(query=qs[2], filter=Num("v").between(5., 30.))]
 
+    def caches():
+        # the engine's production path: init → chunked runner → finalize
+        return (search_mod.init_search._cache_size(),
+                search_mod.run_hops._cache_size(),
+                search_mod.finalize_search._cache_size())
+
     with Session(idx, SessionConfig(auto_flush=False)) as sess:
-        sess.submit_many(reqs(0))
-        sess.flush()                       # warm every (mode, pool) group
-        c0 = search_mod.filtered_search._cache_size()
+        sess.warmup(reqs(0))               # warm every (mode, pool) group
+        c0 = caches()
         for seed in (1, 2):
             sess.submit_many(reqs(seed))
             sess.flush()
-        assert search_mod.filtered_search._cache_size() == c0, \
+        assert caches() == c0, \
             "repeat Session flushes re-specialized the search jit"

@@ -123,3 +123,66 @@ def test_prefilter_supersets(stores):
     vals = rs.values
     truth_r = set(np.where((vals >= 20) & (vals < 40))[0].tolist())
     assert truth_r == set(ids.tolist())   # range scan is exact
+
+
+# ---------------------------------------------------------------------------
+# Quantile/bucket staleness on skewed insert streams (ranges.REFRESH_FRAC)
+# ---------------------------------------------------------------------------
+
+def test_skewed_stream_triggers_bucket_refresh():
+    """Inserting a large batch far outside the build-time distribution
+    must re-derive the global bucket bounds and re-code every row —
+    fixed bounds would pile the whole new region into bucket 255 and
+    collapse is_member_approx precision there."""
+    from repro.core.ranges import REFRESH_FRAC, build_range_store
+    rng = np.random.default_rng(5)
+    rs = build_range_store(rng.normal(0, 1, 2000).astype(np.float32))
+    big = rng.normal(100, 5, 1200).astype(np.float32)   # > REFRESH_FRAC·n
+    assert big.size > REFRESH_FRAC * (rs.n_vectors + big.size)
+    rs2 = rs.append(big)
+    assert rs2.bounds_refreshed and rs2.inserted_since_refresh == 0
+    # bounds/codes move together: every true member passes the approx test
+    blo, bhi = rs2.bucket_range(95.0, 105.0)
+    truth = (rs2.values >= 95.0) & (rs2.values < 105.0)
+    codes = rs2.bucket_codes.astype(np.int32)
+    assert not np.any(truth & ~((codes >= blo) & (codes <= bhi)))
+    # the refreshed buckets discriminate inside the new region
+    assert bhi - blo > 4
+    assert rs2.precision(95.0, 105.0) > 0.5
+    # selectivity estimate tracks the merged distribution
+    est = rs2.selectivity(95.0, 105.0)
+    assert abs(est - truth.mean()) < 0.05
+
+
+def test_small_appends_keep_bounds_until_threshold():
+    """Below the refresh fraction the bounds stay fixed (codes remain
+    comparable without a device re-upload) and the staleness counter
+    accumulates across appends until it trips."""
+    from repro.core.ranges import REFRESH_FRAC, build_range_store
+    rng = np.random.default_rng(6)
+    rs = build_range_store(rng.uniform(0, 100, 1000).astype(np.float32))
+    rs1 = rs.append(rng.uniform(200, 210, 100).astype(np.float32))
+    assert not rs1.bounds_refreshed and rs1.inserted_since_refresh == 100
+    np.testing.assert_array_equal(rs1.bucket_bounds, rs.bucket_bounds)
+    # stale bounds: the whole new region shares one bucket (no refresh yet)
+    blo, bhi = rs1.bucket_range(200.0, 210.0)
+    assert bhi == blo
+    # keep appending: the counter accumulates and eventually trips
+    cur = rs1
+    for _ in range(10):
+        cur = cur.append(rng.uniform(200, 210, 100).astype(np.float32))
+        if cur.bounds_refreshed:
+            break
+    assert cur.bounds_refreshed, "accumulated inserts never re-bucketed"
+    blo2, bhi2 = cur.bucket_range(200.0, 210.0)
+    assert bhi2 - blo2 > 4    # refreshed bounds discriminate the region
+
+
+def test_multi_range_store_propagates_refresh_flag():
+    from repro.core.ranges import build_multi_range_store
+    rng = np.random.default_rng(7)
+    ms = build_multi_range_store(
+        rng.uniform(0, 1, (500, 2)).astype(np.float32))
+    ms2 = ms.append(rng.uniform(50, 51, (400, 2)).astype(np.float32))
+    assert ms2.bounds_refreshed
+    assert all(s.bounds_refreshed for s in ms2.stores)
