@@ -30,6 +30,16 @@ perf bars and no JSON — the bitrot check ``scripts/test_fast.sh`` runs.
 ``--active-trace`` additionally records per-hop active-query counts, the
 driver's compaction buckets, and the modeled SSD latency with/without
 prefetch (``io_sim.IOModel.latency_us``) for the spec_in W=1 config.
+
+``--fault-plan`` (default: the committed 10% page-fault operating point,
+``rate=0.1,seed=7``; pass ``none`` to skip) re-times the pipelined path
+under seeded fault injection (core/faults.py) and reports degraded-mode
+QPS/recall alongside the clean numbers in a ``fault_plan`` block, with
+two committed floors: recall@10 within ``FAULT_RECALL_DROP_MAX`` of the
+clean run, and degraded-mode latency within ``FAULT_SLOWDOWN_MAX``× the
+clean pipelined time. Runs in ``--smoke`` too — that is the CI fault
+smoke ``scripts/test_fast.sh`` wires in. The clean-path floors are
+untouched: with no plan the fault layer traces zero extra ops.
 """
 from __future__ import annotations
 
@@ -42,6 +52,7 @@ import numpy as np
 from benchmarks.common import BenchResult, get_engine
 from repro.core import engine as eng
 from repro.core import search as S
+from repro.core.faults import parse_plan
 from repro.core.io_sim import IOModel
 from repro.core.selectors import stack_filters
 
@@ -65,6 +76,12 @@ PR4_FUSED_MS = {"post": 75.80, "spec_in": 501.46, "spec_in_beam4": 627.23,
 PIPELINE_SPEEDUP_FLOOR = 1.5       # pipelined vs PR-4 fused, spec_in W=1
 NO_SLOWER_TOL = 1.05               # post/strict_in jitter allowance
 RECALL_TOL = 0.01
+# degraded-mode floors (the fault_plan block): at the committed 10%
+# per-attempt page-fault rate the retry→hedge→degrade ladder must hold
+# recall within 5 points of clean, at bounded extra wall time
+FAULT_PLAN_DEFAULT = "rate=0.1,seed=7"
+FAULT_RECALL_DROP_MAX = 0.05
+FAULT_SLOWDOWN_MAX = 2.0
 
 
 def _selectors(e, n_queries: int):
@@ -168,8 +185,71 @@ def active_trace(e, ds, smoke: bool, warm_us_per_query: float) -> dict:
     return trace
 
 
+def _fault_block(e, ds, plan, clean_modes: dict, smoke: bool,
+                 results: list) -> dict:
+    """Re-time the pipelined path under ``plan`` for every config and
+    check the degraded-mode floors against the clean numbers."""
+    B = ds.queries.shape[0]
+    io = IOModel()
+    block = {"plan": plan.to_json(),
+             "floors": {"recall_drop_max": FAULT_RECALL_DROP_MAX,
+                        "slowdown_max": FAULT_SLOWDOWN_MAX},
+             "modes": {}}
+    for name, mode, w in CONFIGS:
+        params = S.SearchParams(l_search=L, k=K, beam_width=w,
+                                max_hops=MAX_HOPS, mode=mode,
+                                fault_plan=plan)
+        sels, qf, queries, entries = _mode_inputs(e, ds, mode)
+        reps = 2 if smoke else 3
+        cold, warm, res = _time_impl(S.filtered_search_pipelined, e, qf,
+                                     queries, params, entries, repeats=reps)
+        rec = _recall(ds, e, sels, res)
+        clean = clean_modes[name]
+        drop = clean["recall_at_10"] - rec
+        faults = float(np.mean(np.asarray(res.faults)))
+        retries = float(np.mean(np.asarray(res.retries)))
+        degraded = float(np.mean(np.asarray(res.degraded)))
+        mean_hops = float(np.mean(np.asarray(res.hops)))
+        pages = e.store.pages_dense if mode == "spec_in" \
+            else e.store.pages_std
+        stats = {
+            "faulted_ms": warm * 1e3, "faulted_ms_cold": cold * 1e3,
+            "qps_degraded": B / warm,
+            "recall_at_10_faulted": rec, "recall_drop": drop,
+            "mean_faults": faults, "mean_retries": retries,
+            "mean_degraded": degraded,
+            "slowdown_vs_clean": warm * 1e3 / clean["pipelined_ms"],
+            # modeled per-query SSD latency incl. retry backoff + spikes
+            "modeled_latency_us": io.faulted_latency_us(
+                int(round(mean_hops * pages)), plan,
+                faults=int(round(faults)), retries=int(round(retries)),
+                prefetch_depth=2),
+        }
+        block["modes"][name] = stats
+        results.append(BenchResult(
+            name=f"search/{name}@fault", us_per_call=warm * 1e6 / B,
+            derived={"qps": f"{stats['qps_degraded']:.0f}",
+                     "recall@10": f"{rec:.3f}",
+                     "drop": f"{drop:.3f}",
+                     "faults": f"{faults:.0f}",
+                     "retries": f"{retries:.0f}"}))
+        # the plan must actually engage, and the ladder must hold recall —
+        # asserted in smoke too (this is the CI fault smoke)
+        assert np.asarray(res.faults).sum() > 0, f"{name}: plan never fired"
+        assert drop <= FAULT_RECALL_DROP_MAX, \
+            f"{name}: faulted recall dropped {drop:.3f} " \
+            f"(> {FAULT_RECALL_DROP_MAX})"
+        if not smoke:
+            assert stats["slowdown_vs_clean"] <= FAULT_SLOWDOWN_MAX, \
+                f"{name}: degraded-mode {stats['faulted_ms']:.0f}ms " \
+                f"exceeds {FAULT_SLOWDOWN_MAX}x clean " \
+                f"({clean['pipelined_ms']:.0f}ms)"
+    return block
+
+
 def run(out_path: str = OUT_PATH, smoke: bool = False,
-        with_trace: bool = False) -> list:
+        with_trace: bool = False,
+        fault_spec: str | None = FAULT_PLAN_DEFAULT) -> list:
     n = N_SMOKE if smoke else N
     ds, index, _ = get_engine(n=n)
     e = index.engine if hasattr(index, "engine") else index
@@ -248,6 +328,10 @@ def run(out_path: str = OUT_PATH, smoke: bool = False,
     if with_trace:
         payload["active_trace"] = active_trace(e, ds, smoke, warm_p_spec_us)
 
+    if fault_spec and fault_spec.lower() != "none":
+        payload["fault_plan"] = _fault_block(
+            e, ds, parse_plan(fault_spec), payload["modes"], smoke, results)
+
     if not smoke:
         sp = payload["modes"]["spec_in_beam4"]["speedup_vs_legacy"]
         assert sp >= SPEC_IN_SPEEDUP_FLOOR, \
@@ -275,10 +359,14 @@ def main():
     ap.add_argument("--active-trace", action="store_true",
                     help="also record per-hop active counts, compaction "
                          "buckets and modeled SSD latency (spec_in W=1)")
+    ap.add_argument("--fault-plan", default=FAULT_PLAN_DEFAULT,
+                    help="seeded FaultPlan spec for the degraded-mode "
+                         "block, e.g. 'rate=0.1,seed=7' ('none' to skip)")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args()
     for res in run(out_path=args.out, smoke=args.smoke,
-                   with_trace=args.active_trace):
+                   with_trace=args.active_trace,
+                   fault_spec=args.fault_plan):
         print(res.csv())
 
 

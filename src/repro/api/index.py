@@ -384,11 +384,21 @@ class Index:
             "rs_quantiles": np.stack([s.quantiles for s in rs.stores]),
         }
 
-    def save(self, path: str):
+    def save(self, path: str, injector=None):
         """Persist via the ckpt subsystem (atomic step dir + manifest) plus
-        a JSON sidecar for the schema, vocabulary, and static config."""
+        a JSON sidecar for the schema, vocabulary, and static config.
+
+        Steps increment per save and the last two are kept, so a save that
+        lands corrupted (bit rot, injected faults) still leaves the
+        previous intact step for ``load`` to fall back to. The sidecar is
+        written both at the root (back-compat, newest wins) and inside the
+        step dir — array shapes may differ across steps after inserts, so
+        fallback must read the meta that matches the step it restores."""
         tree = self._array_tree()
-        ckpt.save(path, step=0, tree=tree, async_write=False, keep_last=1)
+        prev = ckpt.latest_step(path)
+        step = 0 if prev is None else prev + 1
+        ckpt.save(path, step=step, tree=tree, async_write=False,
+                  keep_last=2, injector=injector)
         e = self.engine
         meta = {
             "format": _FORMAT,
@@ -405,25 +415,53 @@ class Index:
             "arrays": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
                        for k, a in tree.items()},
         }
-        with open(os.path.join(path, _META_FILE), "w") as fh:
-            json.dump(meta, fh)
+        for meta_path in (os.path.join(path, _META_FILE),
+                          os.path.join(path, f"step_{step}", _META_FILE)):
+            with open(meta_path, "w") as fh:
+                json.dump(meta, fh)
 
     @classmethod
     def load(cls, path: str) -> "Index":
-        """Load a saved index.
+        """Load a saved index, recovering from corrupted steps.
+
+        Startup first reaps stale ``step_K.tmp`` dirs (a killed writer's
+        leftovers are never valid — publishes are atomic renames). Steps
+        are then tried newest-first: one that fails integrity
+        verification (checksum mismatch, truncated leaf, shape/dtype
+        drift) is quarantined as ``step_K.quarantined`` and the previous
+        step is restored instead; only when no intact step remains does
+        the corruption error propagate.
 
         Format-1 checkpoints (the pre-schema single-numeric-field layout:
         flat ``(n,)`` range arrays + a ``numeric_field`` name) are mapped
         onto the F=1 case of the multi-field layout by a one-release
         back-compat shim — a legacy index loads and answers unchanged.
         """
-        with open(os.path.join(path, _META_FILE)) as fh:
-            meta = json.load(fh)
         import jax
-        target = {k: jax.ShapeDtypeStruct(tuple(v["shape"]),
-                                          np.dtype(v["dtype"]))
-                  for k, v in meta["arrays"].items()}
-        t = ckpt.restore(path, 0, target)
+        ckpt.reap_tmp(path)
+        steps = sorted(ckpt._list_steps(path), reverse=True)
+        if not steps:
+            raise FileNotFoundError(f"no checkpoint steps in {path}")
+        t = meta = None
+        for n_try, step in enumerate(steps):
+            # per-step sidecar when present (array shapes track the step);
+            # the root sidecar only describes the newest save
+            meta_fn = os.path.join(path, f"step_{step}", _META_FILE)
+            if not os.path.exists(meta_fn):
+                meta_fn = os.path.join(path, _META_FILE)
+            try:
+                with open(meta_fn) as fh:
+                    meta = json.load(fh)
+                target = {k: jax.ShapeDtypeStruct(tuple(v["shape"]),
+                                                  np.dtype(v["dtype"]))
+                          for k, v in meta["arrays"].items()}
+                t = ckpt.restore(path, step, target)
+                break
+            except (ckpt.CheckpointCorruptionError, json.JSONDecodeError,
+                    OSError):
+                ckpt.quarantine(path, step)
+                if n_try == len(steps) - 1:
+                    raise
         t = {k: np.asarray(v) for k, v in t.items()}
         legacy = meta.get("format", 1) < 2
         if legacy:
@@ -466,8 +504,13 @@ class Index:
             store, jnp.asarray(t["pq_codes"]), codebook, mem, label_store,
             range_store, meta["medoid"], IndexConfig(**meta["config"]))
         vocab = {(f, v): lab for f, v, lab in meta["vocab"]}
+        defaults = dict(meta["defaults"])
+        if isinstance(defaults.get("fault_plan"), dict):
+            # dataclasses.asdict flattened the plan into a nested dict
+            from repro.core.faults import FaultPlan
+            defaults["fault_plan"] = FaultPlan(**defaults["fault_plan"])
         return cls(engine, vocab, Schema.from_json(meta["schema"]),
-                   SearchConfig(**meta["defaults"]))
+                   SearchConfig(**defaults))
 
 
 def _shim_legacy_checkpoint(t: dict, meta: dict) -> tuple[dict, dict]:

@@ -25,6 +25,13 @@ class SessionConfig:
     max_batch: int = 32          # flush when this many requests are pending
     max_delay_s: float = 0.01    # flush when the oldest pending is this old
     auto_flush: bool = True      # admission/poll may trigger flushes
+    isolate_failures: bool = True
+    # a failed flush bisects the batch so only the offending request's
+    # handle fails (poisoned-batch isolation); False restores the legacy
+    # all-handles-fail contract
+    flush_retry_budget: int = 8
+    # max execution attempts one flush may spend isolating bad requests
+    # before the unexecuted remainder is failed wholesale
 
 
 class PendingSearch:
@@ -56,10 +63,19 @@ class PendingSearch:
             try:
                 self._session.flush()
             except Exception:
-                pass                       # delivered via _fail below
+                # if the flush failed *this* handle, its _fail below
+                # carries the cause; swallow the duplicate here
+                if not self._done:
+                    raise
         if self._error is not None:
             raise self._error
-        assert self._result is not None
+        if self._result is None:
+            # a flush ran but never touched this handle (e.g. submitted
+            # to a different session than the one flushed) — surface a
+            # real error instead of tripping a bare assert
+            raise RuntimeError(
+                "PendingSearch never resolved: flush() completed without "
+                "executing this handle's request")
         return self._result
 
 
@@ -121,24 +137,68 @@ class Session:
     def flush(self) -> int:
         """Execute every pending request as one grouped batch.
 
-        If execution raises (e.g. a malformed filter in the batch), every
-        handle in the batch is failed with that error — no request is
-        silently lost — and the error propagates to the flush caller."""
+        With ``isolate_failures`` (the default) an execution error (e.g.
+        a malformed filter in the batch) triggers poisoned-batch
+        isolation: the batch is bisected and re-executed so only the
+        offending request's handle fails — every well-formed request in
+        the same flush still resolves, and the flush itself returns
+        normally. Re-execution is bounded by ``flush_retry_budget``
+        failing attempts; past it the not-yet-isolated remainder fails
+        wholesale (no request is ever silently lost either way).
+
+        With ``isolate_failures=False`` the legacy contract holds: every
+        handle in the batch fails with the execution error and the error
+        propagates to the flush caller."""
         if not self._pending:
             return 0
         batch, self._pending = self._pending, []
-        requests = [h.request for h, _ in batch]
-        try:
-            results = self.index.search_batch(requests)
-        except Exception as e:
-            for handle, _ in batch:
-                handle._fail(e)
-            raise
-        for (handle, _), result in zip(batch, results):
-            handle._resolve(result)
+        if self.config.isolate_failures:
+            budget = [max(1, self.config.flush_retry_budget)]
+            self._execute_isolated([h for h, _ in batch], budget)
+        else:
+            requests = [h.request for h, _ in batch]
+            try:
+                results = self.index.search_batch(requests)
+            except Exception as e:
+                for handle, _ in batch:
+                    handle._fail(e)
+                raise
+            for (handle, _), result in zip(batch, results):
+                handle._resolve(result)
         self.n_batches += 1
         self.n_flushed += len(batch)
         return len(batch)
+
+    def _execute_isolated(self, handles: list, budget: list) -> None:
+        """Execute ``handles`` as one batch, bisecting on failure.
+
+        ``budget`` is the flush's shared mutable count of *failing*
+        attempts still allowed: a clean sub-batch costs nothing, so one
+        poisoned request in a batch of ``n`` is isolated in
+        ``log2(n) + 1`` failures."""
+        if not handles:
+            return
+        try:
+            results = self.index.search_batch([h.request for h in handles])
+        except Exception as e:
+            budget[0] -= 1
+            if len(handles) == 1:
+                handles[0]._fail(e)
+                return
+            if budget[0] <= 0:
+                err = RuntimeError(
+                    "flush retry budget exhausted isolating a poisoned "
+                    f"batch of {len(handles)} requests")
+                err.__cause__ = e
+                for h in handles:
+                    h._fail(err)
+                return
+            mid = len(handles) // 2
+            self._execute_isolated(handles[:mid], budget)
+            self._execute_isolated(handles[mid:], budget)
+            return
+        for h, r in zip(handles, results):
+            h._resolve(r)
 
     @property
     def pending(self) -> int:

@@ -53,6 +53,9 @@ class RequestStats:
     n_valid: int
     selectivity: float
     precision_in: float
+    faults: int = 0           # injected fault events (0 without a plan)
+    retries: int = 0          # extra read attempts issued by the ladder
+    degraded: int = 0         # rows answered from the in-memory fallback
 
     @classmethod
     def from_query_stats(cls, stats, i: int) -> "RequestStats":
@@ -68,6 +71,9 @@ class RequestStats:
             n_valid=int(stats.n_valid[i]),
             selectivity=float(stats.selectivity[i]),
             precision_in=float(stats.precision_in[i]),
+            faults=int(stats.faults[i]),
+            retries=int(stats.retries[i]),
+            degraded=int(stats.degraded[i]),
         )
 
 

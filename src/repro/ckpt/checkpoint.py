@@ -8,8 +8,19 @@ Design (DESIGN.md §3 large-scale runnability):
   * restore re-shards onto *any* mesh via device_put with target shardings
     (elastic scaling: a 256-chip checkpoint restores on 8 chips and back);
   * async mode hands the (host-copied) arrays to a writer thread so the
-    train loop keeps stepping;
+    train loop keeps stepping — writer errors are captured and re-raised
+    from ``wait()``/the next ``save()``, never swallowed;
   * ``keep_last`` garbage-collects old steps.
+
+Recovery (docs/robustness.md): a checksum mismatch, truncated leaf, or
+dtype/shape drift raises :class:`CheckpointCorruptionError`; callers
+(``Index.load``) quarantine the bad step (``step_K.quarantined`` — never
+listed, never restored) and fall back to the previous intact step. Stale
+``step_K.tmp`` dirs left by a killed writer are reaped on startup via
+:func:`reap_tmp`.
+
+Manifests digest with sha256; pre-existing md5 manifests verify through a
+back-compat read path (the digest key names the algorithm).
 
 On a multi-host pod each host writes its addressable shards; here (single
 process) logical arrays are written whole — the manifest format is the same.
@@ -26,9 +37,26 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+_DIGEST_CHUNK = 1 << 20        # stream checksums in 1 MB chunks
+
+
+class CheckpointCorruptionError(AssertionError):
+    """A checkpoint failed integrity verification (checksum mismatch,
+    truncated leaf, or shape/dtype drift). Subclasses AssertionError for
+    back-compat with callers that caught the old bare asserts."""
+
 
 def _leaf_name(i: int) -> str:
     return f"leaf_{i:05d}.npy"
+
+
+def _file_digest(path: str, algo: str = "sha256") -> str:
+    """Streaming file digest — constant memory regardless of leaf size."""
+    h = hashlib.new(algo)
+    with open(path, "rb") as f:
+        while chunk := f.read(_DIGEST_CHUNK):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def _tree_paths(tree) -> list:
@@ -38,9 +66,31 @@ def _tree_paths(tree) -> list:
     return paths
 
 
+class _AsyncWriter(threading.Thread):
+    """Writer thread that captures its exception instead of dying silently
+    (a daemon thread's traceback otherwise vanishes with the step)."""
+
+    def __init__(self, fn):
+        super().__init__(daemon=True)
+        self._fn = fn
+        self.exc: Optional[BaseException] = None
+
+    def run(self):
+        try:
+            self._fn()
+        except BaseException as e:     # noqa: BLE001 — re-raised in wait()
+            self.exc = e
+
+
 def save(ckpt_dir: str, step: int, tree: Any, async_write: bool = False,
-         keep_last: int = 3) -> Optional[threading.Thread]:
-    """Save a pytree checkpoint. Returns the writer thread if async."""
+         keep_last: int = 3, injector=None) -> Optional[_AsyncWriter]:
+    """Save a pytree checkpoint. Returns the writer thread if async.
+
+    ``injector`` (a ``faults.FaultInjector``) makes leaf writes flaky for
+    chaos testing: an injected fault truncates the leaf mid-write and
+    raises IOError, leaving the ``step_K.tmp`` dir behind exactly like a
+    crashed writer — the published checkpoint is untouched either way.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
@@ -54,13 +104,17 @@ def save(ckpt_dir: str, step: int, tree: Any, async_write: bool = False,
         manifest = {"step": step, "leaves": []}
         for i, (arr, name) in enumerate(zip(host_leaves, names)):
             fn = _leaf_name(i)
-            np.save(os.path.join(tmp, fn), arr)
-            with open(os.path.join(tmp, fn), "rb") as f:
-                digest = hashlib.md5(f.read()).hexdigest()
+            fpath = os.path.join(tmp, fn)
+            np.save(fpath, arr)
+            if injector is not None and injector.ckpt_write_fails(step, i):
+                with open(fpath, "r+b") as f:   # truncated mid-write
+                    f.truncate(max(0, os.path.getsize(fpath) // 2))
+                raise IOError(
+                    f"injected write fault: step {step} leaf {i} ({name})")
             manifest["leaves"].append({
                 "index": i, "path": name, "file": fn,
                 "shape": list(arr.shape), "dtype": str(arr.dtype),
-                "md5": digest})
+                "sha256": _file_digest(fpath)})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         shutil.rmtree(final, ignore_errors=True)
@@ -68,7 +122,7 @@ def save(ckpt_dir: str, step: int, tree: Any, async_write: bool = False,
         _gc(ckpt_dir, keep_last)
 
     if async_write:
-        th = threading.Thread(target=_write, daemon=True)
+        th = _AsyncWriter(_write)
         th.start()
         return th
     _write()
@@ -83,15 +137,18 @@ def _gc(ckpt_dir: str, keep_last: int):
 
 
 def _list_steps(ckpt_dir: str) -> list:
+    """Published, non-quarantined steps only: ``step_<int>`` exactly —
+    ``step_K.tmp`` (in-flight/crashed writes) and ``step_K.quarantined``
+    (failed verification) never list, so they are never restored."""
     out = []
     if not os.path.isdir(ckpt_dir):
         return out
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            try:
-                out.append(int(name.split("_")[1]))
-            except ValueError:
-                continue
+        if not name.startswith("step_"):
+            continue
+        suffix = name[len("step_"):]
+        if suffix.isdigit():
+            out.append(int(suffix))
     return out
 
 
@@ -100,29 +157,83 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def reap_tmp(ckpt_dir: str) -> list:
+    """Delete stale ``step_K.tmp`` dirs left by killed/failed writers.
+
+    Run at startup (``Index.load`` does) — an in-flight tmp dir is never
+    valid across process restarts since publishes are atomic renames.
+    Returns the reaped dir names."""
+    reaped = []
+    if not os.path.isdir(ckpt_dir):
+        return reaped
+    for name in sorted(os.listdir(ckpt_dir)):
+        if name.startswith("step_") and name.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+            reaped.append(name)
+    return reaped
+
+
+def quarantine(ckpt_dir: str, step: int) -> str:
+    """Sideline a corrupted step as ``step_K.quarantined`` (kept on disk
+    for forensics, excluded from listing/restore). Returns the new path."""
+    src = os.path.join(ckpt_dir, f"step_{step}")
+    dst = src + ".quarantined"
+    shutil.rmtree(dst, ignore_errors=True)
+    os.rename(src, dst)
+    return dst
+
+
+def _verify_leaf(path: str, meta: dict, leaf_path: str):
+    """Integrity-check one leaf file against its manifest entry."""
+    if not os.path.exists(path):
+        raise CheckpointCorruptionError(f"{leaf_path}: leaf file missing")
+    for algo in ("sha256", "md5"):      # md5: pre-sha256 manifests
+        if algo in meta:
+            if _file_digest(path, algo) != meta[algo]:
+                raise CheckpointCorruptionError(
+                    f"checksum mismatch for {leaf_path}")
+            return
+    raise CheckpointCorruptionError(f"{leaf_path}: manifest carries no "
+                                    "digest")
+
+
 def restore(ckpt_dir: str, step: int, target_tree: Any,
             shardings: Any = None, verify: bool = True) -> Any:
     """Restore into the structure of ``target_tree`` (arrays or
     ShapeDtypeStructs). ``shardings`` (same structure) re-shards elastically
-    onto the current mesh."""
+    onto the current mesh. Integrity failures (missing/truncated leaf,
+    checksum mismatch, shape or dtype drift) raise
+    :class:`CheckpointCorruptionError`."""
     path = os.path.join(ckpt_dir, f"step_{step}")
-    with open(os.path.join(path, "manifest.json")) as f:
+    manifest_fn = os.path.join(path, "manifest.json")
+    if not os.path.exists(manifest_fn):
+        raise CheckpointCorruptionError(
+            f"step {step}: manifest.json missing (truncated checkpoint?)")
+    with open(manifest_fn) as f:
         manifest = json.load(f)
     leaves, treedef = jax.tree_util.tree_flatten(target_tree)
-    assert len(leaves) == len(manifest["leaves"]), \
-        f"checkpoint has {len(manifest['leaves'])} leaves, target {len(leaves)}"
+    if len(leaves) != len(manifest["leaves"]):
+        raise CheckpointCorruptionError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, "
+            f"target {len(leaves)}")
     shard_leaves = (treedef.flatten_up_to(shardings)
                     if shardings is not None else [None] * len(leaves))
     out = []
     for meta, tgt, shd in zip(manifest["leaves"], leaves, shard_leaves):
         fn = os.path.join(path, meta["file"])
         if verify:
-            with open(fn, "rb") as f:
-                assert hashlib.md5(f.read()).hexdigest() == meta["md5"], \
-                    f"checksum mismatch for {meta['path']}"
-        arr = np.load(fn)
-        assert list(arr.shape) == list(tgt.shape), \
-            f"{meta['path']}: shape {arr.shape} vs target {tgt.shape}"
+            _verify_leaf(fn, meta, meta["path"])
+        try:
+            arr = np.load(fn)
+        except Exception as e:          # unreadable/truncated npy payload
+            raise CheckpointCorruptionError(
+                f"{meta['path']}: unreadable leaf ({e})") from e
+        if list(arr.shape) != list(tgt.shape):
+            raise CheckpointCorruptionError(
+                f"{meta['path']}: shape {arr.shape} vs target {tgt.shape}")
+        if np.dtype(arr.dtype) != np.dtype(tgt.dtype):
+            raise CheckpointCorruptionError(
+                f"{meta['path']}: dtype {arr.dtype} vs target {tgt.dtype}")
         if shd is not None:
             out.append(jax.device_put(arr, shd))
         else:
@@ -131,25 +242,33 @@ def restore(ckpt_dir: str, step: int, target_tree: Any,
 
 
 class CheckpointManager:
-    """Convenience wrapper with async save + resume."""
+    """Convenience wrapper with async save + resume.
+
+    An async writer's exception is captured (``_AsyncWriter``) and
+    re-raised from ``wait()`` — which the next ``save()`` calls first —
+    so a failed background step surfaces at the next checkpoint
+    interaction instead of vanishing with the daemon thread."""
 
     def __init__(self, ckpt_dir: str, keep_last: int = 3,
                  async_write: bool = True):
         self.ckpt_dir = ckpt_dir
         self.keep_last = keep_last
         self.async_write = async_write
-        self._pending: Optional[threading.Thread] = None
+        self._pending: Optional[_AsyncWriter] = None
 
-    def save(self, step: int, tree: Any):
+    def save(self, step: int, tree: Any, injector=None):
         self.wait()
         self._pending = save(self.ckpt_dir, step, tree,
                              async_write=self.async_write,
-                             keep_last=self.keep_last)
+                             keep_last=self.keep_last, injector=injector)
 
     def wait(self):
+        """Join the in-flight writer; re-raise its error if it failed."""
         if self._pending is not None:
-            self._pending.join()
-            self._pending = None
+            th, self._pending = self._pending, None
+            th.join()
+            if th.exc is not None:
+                raise th.exc
 
     def latest(self) -> Optional[int]:
         return latest_step(self.ckpt_dir)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model, graph, pq as pq_mod, prefilter, search
+from repro.core.faults import FaultPlan
 from repro.core.labels import (LabelStore, build_label_store,
                                extend_label_store, padded_rows_from_csr,
                                padded_vec_labels)
@@ -66,6 +67,10 @@ class SearchConfig:
                               # jit, the pre-pipelined execution)
     prefetch_depth: int = 2   # record slabs in flight per query (feeds the
                               # modeled SSD latency; results are invariant)
+    fault_plan: FaultPlan | None = None
+                              # seeded fault injection on the record-read
+                              # path (core/faults.py) — None serves the
+                              # unmodified clean hot path
 
 
 @dataclasses.dataclass
@@ -81,6 +86,9 @@ class QueryStats:
     n_valid: np.ndarray
     selectivity: np.ndarray
     precision_in: np.ndarray
+    faults: np.ndarray        # injected fault events (0 without a plan)
+    retries: np.ndarray       # extra read attempts issued by the ladder
+    degraded: np.ndarray      # rows answered from the in-memory fallback
 
     @classmethod
     def empty(cls) -> "QueryStats":
@@ -90,7 +98,9 @@ class QueryStats:
                    fp_explored=np.zeros(0, np.int64),
                    explored=np.zeros(0, np.int64),
                    n_valid=np.zeros(0, np.int64), selectivity=np.zeros(0),
-                   precision_in=np.zeros(0))
+                   precision_in=np.zeros(0), faults=np.zeros(0, np.int64),
+                   retries=np.zeros(0, np.int64),
+                   degraded=np.zeros(0, np.int64))
 
 
 class FilteredANNEngine:
@@ -409,6 +419,9 @@ class FilteredANNEngine:
             n_valid=np.zeros(B, np.int64),
             selectivity=np.array([p.selectivity for p in plans]),
             precision_in=np.array([p.precision_in for p in plans]),
+            faults=np.zeros(B, np.int64),
+            retries=np.zeros(B, np.int64),
+            degraded=np.zeros(B, np.int64),
         )
 
         groups: dict = {}
@@ -444,7 +457,8 @@ class FilteredANNEngine:
                 sp = search.SearchParams(
                     l_search=eff_l, k=scfg.k, beam_width=scfg.beam_width,
                     max_hops=scfg.max_hops, mode=mode, l_valid=scfg.l,
-                    prefetch_depth=scfg.prefetch_depth)
+                    prefetch_depth=scfg.prefetch_depth,
+                    fault_plan=scfg.fault_plan)
                 entries = None
                 seed_pages = np.zeros(len(idxs), np.int64)
                 if mode == "strict_in":
@@ -483,6 +497,9 @@ class FilteredANNEngine:
                     stats.fp_explored[i] = int(res.fp_explored[j])
                     stats.explored[i] = int(res.explored[j])
                     stats.n_valid[i] = int(res.n_valid[j])
+                    stats.faults[i] = int(res.faults[j])
+                    stats.retries[i] = int(res.retries[j])
+                    stats.degraded[i] = int(res.degraded[j])
         return out_ids, out_d, stats
 
     # ------------------------------------------------------------------

@@ -1,0 +1,205 @@
+"""Deterministic fault injection for the simulated SSD I/O path.
+
+Real SSD reads fail, stall, and return garbage; the engine must survive
+all three without ever violating the paper's no-false-negative contract
+(verification is post-hoc, so a lost record slab can always be *approx-
+imated* — never silently dropped). This module is the single source of
+fault decisions for the whole stack:
+
+* **record reads** (the hop loop's frontier slab fetch): page-read
+  failures, corrupted slabs, and latency spikes, drawn per
+  ``(record id, hop, attempt)`` by a stateless hash so the same
+  :class:`FaultPlan` reproduces the same fault pattern in any execution
+  order — the bucketed pipelined driver compacts and re-orders query
+  rows freely and stays bit-identical to the single-shot jit;
+* **checkpoint writes** (:class:`FaultInjector`): flaky leaf writes,
+  drawn per ``(step, leaf, attempt)`` on the host.
+
+The search-side ladder on a failed or corrupted slab read is
+**retry → hedge → degrade** (docs/robustness.md):
+
+1. retry the read up to ``max_retries`` times (capped exponential
+   backoff — accounted by ``io_sim.IOModel.faulted_latency_us``, never
+   affecting results);
+2. if still failing, issue one *hedged* read (``hedge=True``);
+3. if every attempt failed, **degrade gracefully**: the affected row's
+   exact distance is substituted with its PQ-approximate (ADC) distance
+   from the in-memory tier, its validity with ``is_member_approx`` — a
+   no-false-negative superset — and its neighbor expansion is skipped.
+   The query completes with ``degraded > 0`` instead of crashing or
+   dropping a possibly-valid result.
+
+Every decision function is pure and jit-traceable; a plan with all
+rates at zero draws no faults and (because the plan gates code at trace
+time) a ``None`` plan compiles to exactly the pre-fault hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# decision streams: decorrelate the draw families sharing one seed
+_STREAM_FAIL = 0x1
+_STREAM_CORRUPT = 0x2
+_STREAM_SPIKE = 0x3
+_STREAM_CKPT = 0x4
+
+_GOLDEN = 0x9E3779B9          # 2^32 / phi — the usual Weyl increments
+_MIX_A = 0x7FEB352D           # splitmix32 finalizer constants
+_MIX_B = 0x846CA68B
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded, reproducible fault schedule.
+
+    Hashable and frozen so it rides ``SearchParams`` / ``SearchConfig``
+    as a static jit argument: two searches with the same plan share one
+    compile, and ``plan=None`` traces the unmodified hot path.
+
+    Rates are per-*attempt* probabilities; a read permanently fails (and
+    degrades) only when the initial read, every retry, and the hedge all
+    draw bad — p_bad^(1+max_retries+hedge).
+    """
+    seed: int = 0
+    read_fail_rate: float = 0.0    # P[page read fails] per attempt
+    corrupt_rate: float = 0.0      # P[slab checksum mismatch] per attempt
+    spike_rate: float = 0.0        # P[read latency spike] (accounting only)
+    spike_factor: float = 8.0      # spiked read takes this × t_page_us
+    ckpt_fail_rate: float = 0.0    # P[checkpoint leaf write fails]
+    max_retries: int = 2           # extra read attempts before hedging
+    hedge: bool = True             # one final hedged read after retries
+    backoff_us: float = 50.0       # first-retry backoff (doubles per retry)
+    backoff_cap_us: float = 800.0  # exponential backoff cap
+
+    def __post_init__(self):
+        for f in ("read_fail_rate", "corrupt_rate", "spike_rate",
+                  "ckpt_fail_rate"):
+            v = getattr(self, f)
+            assert 0.0 <= v <= 1.0, f"{f}={v} outside [0, 1]"
+        assert self.max_retries >= 0
+
+    @property
+    def reads_faulty(self) -> bool:
+        """Whether the read path needs any fault logic traced at all."""
+        return (self.read_fail_rate > 0.0 or self.corrupt_rate > 0.0
+                or self.spike_rate > 0.0)
+
+    @property
+    def attempts(self) -> int:
+        """Total read attempts in the ladder: 1 + retries (+ hedge)."""
+        return 1 + self.max_retries + (1 if self.hedge else 0)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "FaultPlan":
+        return cls(**d)
+
+
+def parse_plan(spec: str) -> FaultPlan:
+    """Parse a CLI plan spec: comma-separated ``key=value`` pairs.
+
+    ``rate=`` is shorthand for ``read_fail_rate=``; booleans accept
+    0/1/true/false. Example: ``rate=0.1,seed=7,max_retries=2,hedge=1``.
+    """
+    kw: dict = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        key, _, val = part.partition("=")
+        key = key.strip()
+        if key == "rate":
+            key = "read_fail_rate"
+        field = {f.name: f for f in dataclasses.fields(FaultPlan)}.get(key)
+        if field is None:
+            raise ValueError(f"unknown FaultPlan field {key!r}")
+        if field.type == "bool" or isinstance(field.default, bool):
+            kw[key] = val.strip().lower() in ("1", "true", "yes")
+        elif isinstance(field.default, int):
+            kw[key] = int(val)
+        else:
+            kw[key] = float(val)
+    return FaultPlan(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Stateless decision hash (jnp and np twins — bit-identical)
+# ---------------------------------------------------------------------------
+
+def _mix32(x):
+    """splitmix32 finalizer — works on jnp and np uint32 alike."""
+    x = (x ^ (x >> 16)) * np.uint32(_MIX_A)
+    x = (x ^ (x >> 15)) * np.uint32(_MIX_B)
+    return x ^ (x >> 16)
+
+
+def _uniform(ids: jax.Array, hops: jax.Array, seed: int, stream: int,
+             attempt: int) -> jax.Array:
+    """Deterministic uniform [0, 1) per (id, hop, stream, attempt).
+
+    Depends only on row-local values (record id + that query's own hop
+    counter), never on batch position — the compaction driver may gather
+    rows into any bucket and every draw is unchanged.
+    """
+    key = np.uint32((seed * _GOLDEN + stream * _MIX_A + attempt * _MIX_B)
+                    & 0xFFFFFFFF)
+    u = _mix32(ids.astype(jnp.uint32) ^ key)
+    u = _mix32(u ^ (hops.astype(jnp.uint32) * np.uint32(_GOLDEN)))
+    return u.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+
+
+def read_attempt_bad(ids: jax.Array, hops: jax.Array, attempt: int,
+                     plan: FaultPlan) -> jax.Array:
+    """True where read ``attempt`` of these rows fails OR comes back
+    corrupted (a detected checksum mismatch re-enters the same ladder)."""
+    bad = _uniform(ids, hops, plan.seed, _STREAM_FAIL,
+                   attempt) < plan.read_fail_rate
+    if plan.corrupt_rate > 0.0:
+        bad = bad | (_uniform(ids, hops, plan.seed, _STREAM_CORRUPT,
+                              attempt) < plan.corrupt_rate)
+    return bad
+
+
+def read_spike(ids: jax.Array, hops: jax.Array,
+               plan: FaultPlan) -> jax.Array:
+    """True where the (eventually successful) read hits a latency spike.
+    Accounting only — spikes feed the modeled latency, never results."""
+    return _uniform(ids, hops, plan.seed, _STREAM_SPIKE,
+                    0) < plan.spike_rate
+
+
+# ---------------------------------------------------------------------------
+# Host-side injector (checkpoint writes)
+# ---------------------------------------------------------------------------
+
+class FaultInjector:
+    """Host-side fault oracle for non-traced I/O (checkpoint leaf writes).
+
+    Same stateless hash as the device draws, so a given plan corrupts the
+    same (step, leaf) pairs on every run. Counters record what fired."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.n_write_faults = 0
+
+    def ckpt_write_fails(self, step: int, leaf_index: int,
+                         attempt: int = 0) -> bool:
+        p = self.plan.ckpt_fail_rate
+        if p <= 0.0:
+            return False
+        key = np.uint32((self.plan.seed * _GOLDEN + _STREAM_CKPT * _MIX_A
+                         + attempt * _MIX_B) & 0xFFFFFFFF)
+        with np.errstate(over="ignore"):        # uint32 wraparound is the point
+            u = _mix32(np.uint32(leaf_index & 0xFFFFFFFF) ^ key)
+            u = _mix32(u ^ (np.uint32(step & 0xFFFFFFFF)
+                            * np.uint32(_GOLDEN)))
+        fails = float(u) * 2.0 ** -32 < p
+        if fails:
+            self.n_write_faults += 1
+        return bool(fails)

@@ -56,6 +56,37 @@ class IOModel:
             serial_us = read_us + compute_us
         return serial_us + par * self.t_page_us
 
+    def faulted_latency_us(self, pages_sequentially_dependent: int,
+                           plan, faults: int = 0, retries: int = 0,
+                           spikes: int = 0, pages_parallel: int = 0,
+                           prefetch_depth: int = 1,
+                           compute_us: float = 0.0) -> float:
+        """Modeled latency of the same work under a fault plan.
+
+        ``retries``/``spikes`` are the *measured* counters from a faulted
+        run (``SearchResult.retries``; spikes ride ``faults`` when not
+        broken out). Each retry re-reads its pages after a capped
+        exponential backoff (``plan.backoff_us`` doubling up to
+        ``plan.backoff_cap_us``); a hedged attempt overlaps the original
+        read, so it costs no extra serial time beyond its page read; a
+        spiked read stretches to ``plan.spike_factor`` × t_page_us. All
+        accounting-only — results never depend on modeled time.
+        """
+        base = self.latency_us(pages_sequentially_dependent, pages_parallel,
+                               prefetch_depth, compute_us)
+        if plan is None or retries + spikes + faults == 0:
+            return base
+        backoff = 0.0
+        b = plan.backoff_us
+        # attribute the mean backoff ladder position to each retry
+        for _ in range(max(1, plan.max_retries)):
+            backoff += min(b, plan.backoff_cap_us)
+            b *= 2.0
+        backoff /= max(1, plan.max_retries)
+        retry_us = retries * (self.t_page_us + backoff)
+        spike_us = spikes * (plan.spike_factor - 1.0) * self.t_page_us
+        return base + retry_us + spike_us
+
 
 def record_bytes(dim: int, vec_dtype_size: int, n_neighbors: int,
                  max_labels: int, n_numeric: int) -> int:

@@ -90,7 +90,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as faults_mod
 from repro.core import pq as pq_mod
+from repro.core.faults import FaultPlan
 from repro.core.records import RecordStore
 from repro.core.selectors import (InMemory, QueryFilter, is_member,
                                   is_member_approx, kernel_filter_params,
@@ -121,6 +123,13 @@ class SearchParams:
                             # the serial issue order. The executed fetch
                             # set is identical either way — the knob feeds
                             # io_sim.IOModel.latency_us, never results.
+    fault_plan: FaultPlan | None = None
+                            # seeded fault injection on the frontier slab
+                            # reads (core/faults.py): failed/corrupted
+                            # reads walk the retry→hedge→degrade ladder.
+                            # None (or an all-zero-rate plan) traces the
+                            # unmodified hot path — the plan is static, so
+                            # the clean compile carries zero fault ops.
 
     def __post_init__(self):
         assert self.mode in ("post", "spec_in", "strict_in")
@@ -137,6 +146,12 @@ class SearchResult(NamedTuple):
     n_valid: jax.Array      # (B,) int32 verified-valid results found
     fp_explored: jax.Array  # (B,) int32 explored records that verified invalid
     explored: jax.Array     # (B,) int32 records fetched & exact-verified
+    faults: jax.Array       # (B,) int32 injected fault events encountered
+                            # (failed/corrupted attempts + latency spikes)
+    retries: jax.Array      # (B,) int32 extra read attempts issued
+                            # (retries + hedged reads)
+    degraded: jax.Array     # (B,) int32 rows that exhausted the ladder and
+                            # fell back to PQ-approximate distance/validity
 
 
 def _exact_sq_dist(vecs, q):
@@ -281,7 +296,8 @@ class HopState(NamedTuple):
     res_valid: jax.Array      # (B, res_cap) bool
     vtop: jax.Array           # (B, l_valid) float32 sorted valid top-l
     n_okc: jax.Array          # (B,) int32
-    counters: jax.Array       # (B, 4) int32: io, dist, approx, hops
+    counters: jax.Array       # (B, 7) int32: io, dist, approx, hops,
+                              #               faults, retries, degraded
     active: jax.Array         # (B,) bool
     cur_ids: jax.Array        # (B, W) int32 — prefetched frontier
     cur_live: jax.Array       # (B, W) bool
@@ -353,7 +369,8 @@ def _init(store, codes, codebook, mem, qfilters, queries, entry, params,
     res_valid = jnp.zeros((B, res_cap), jnp.bool_)
     vtop = jnp.full((B, l_valid), BIG, jnp.float32)   # sorted valid top-l
     n_okc = jnp.zeros((B,), jnp.int32)
-    counters = jnp.zeros((B, 4), jnp.int32)   # io, dist_comps, approx, hops
+    # io, dist_comps, approx, hops, faults, retries, degraded
+    counters = jnp.zeros((B, 7), jnp.int32)
     active = jnp.any(~pool_exp & (pool_key < BIG), axis=1)
 
     cur_ids, cur_live, pool_exp = _select_frontier(
@@ -398,10 +415,62 @@ def _hop_step(store, codes, mem, params, distance_fn, fetch_fn, ctx, mc,
     rv = rec["rec_values"].reshape(B, W, -1)
     io = counters[:, 0] + jnp.sum(cur_live, axis=1) * rec_pages
 
+    # the fused kernel computes the ADC distance itself (bitwise equal
+    # to pq.adc_lookup); a non-default distance_fn routes every slab
+    # through the caller's function instead, keeping A/B parity with
+    # the oracle — resolved statically, no cost on the default path
+    default_dist = distance_fn is pq_mod.adc_lookup
+
+    def slab_dist(ids_slab):
+        if default_dist:
+            return _slab_pq(codes, ids_slab, tables)
+        return jax.vmap(distance_fn)(codes[ids_slab], tables)
+
+    # ---- 2''. fault ladder on the slab read (core/faults.py) ----
+    # Retry → hedge → degrade. Every decision is a stateless hash of
+    # (record id, that query's own hop counter, attempt), so the
+    # bucketed compaction driver can gather rows into any order and no
+    # draw changes — pipelined stays bit-identical to single-shot under
+    # the same plan. Rows whose every attempt drew bad are "degraded".
+    plan = p.fault_plan
+    faults_c = counters[:, 4]
+    retries_c = counters[:, 5]
+    degraded_c = counters[:, 6]
+    if plan is not None and plan.reads_faulty:
+        ids_safe = jnp.where(cur_live, cur_ids, 0)
+        hcol = hops[:, None]
+        pending = (faults_mod.read_attempt_bad(ids_safe, hcol, 0, plan)
+                   & cur_live)
+        n_faults = jnp.sum(pending, axis=1)
+        n_retries = jnp.zeros_like(n_faults)
+        for a in range(1, plan.attempts):
+            n_retries = n_retries + jnp.sum(pending, axis=1)
+            pending = pending & faults_mod.read_attempt_bad(
+                ids_safe, hcol, a, plan)
+            n_faults = n_faults + jnp.sum(pending, axis=1)
+        degraded_rows = pending
+        spikes = faults_mod.read_spike(ids_safe, hcol, plan) & cur_live
+        faults_c = faults_c + n_faults + jnp.sum(spikes, axis=1)
+        retries_c = retries_c + n_retries
+        degraded_c = degraded_c + jnp.sum(degraded_rows, axis=1)
+        io = io + n_retries * rec_pages        # each retry re-reads pages
+    else:
+        degraded_rows = None
+
     # ---- 3. re-rank + piggybacked exact verification ----
     diff = vecs - queries[:, None, :]
     ex_d = jnp.where(cur_live, jnp.sum(diff * diff, axis=-1), BIG)
     ex_ok = jax.vmap(is_member)(qfilters, rl, rv) & cur_live
+    if degraded_rows is not None:
+        # a degraded row never saw its record: fall back to the
+        # in-memory tier — ADC distance and approx membership, a
+        # no-false-negative superset, so a valid result is approximated
+        # rather than dropped (verification stays post-hoc per paper)
+        deg_d = jnp.where(cur_live, slab_dist(ids_safe), BIG)
+        deg_ok = jax.vmap(is_member_approx, in_axes=(0, 0, None))(
+            qfilters, ids_safe, mem) & cur_live
+        ex_d = jnp.where(degraded_rows, deg_d, ex_d)
+        ex_ok = jnp.where(degraded_rows, deg_ok, ex_ok)
     pos = jnp.where(active[:, None], hops[:, None] * W + w_iota, res_cap)
     res_ids = res_ids.at[bW, pos].set(
         jnp.where(cur_live, cur_ids, -1), mode="drop")
@@ -420,7 +489,9 @@ def _hop_step(store, codes, mem, params, distance_fn, fetch_fn, ctx, mc,
         cand = jnp.concatenate([nbrs, dn], axis=2)     # (B, W, C)
     else:
         cand = nbrs
-    cand = jnp.where(cur_live[:, :, None], cand, -1).reshape(B, W * C)
+    expand_live = (cur_live if degraded_rows is None
+                   else cur_live & ~degraded_rows)
+    cand = jnp.where(expand_live[:, :, None], cand, -1).reshape(B, W * C)
     live = cand >= 0
     safe_cand = jnp.where(live, cand, 0)
     slots = _visited_slot(safe_cand, n_ids)
@@ -439,17 +510,6 @@ def _hop_step(store, codes, mem, params, distance_fn, fetch_fn, ctx, mc,
     fresh = live & ~seen & first
 
     # ---- 5. fused candidate pass (distance + membership + key) ----
-    # the fused kernel computes the ADC distance itself (bitwise equal
-    # to pq.adc_lookup); a non-default distance_fn routes every slab
-    # through the caller's function instead, keeping A/B parity with
-    # the oracle — resolved statically, no cost on the default path
-    default_dist = distance_fn is pq_mod.adc_lookup
-
-    def slab_dist(ids_slab):
-        if default_dist:
-            return _slab_pq(codes, ids_slab, tables)
-        return jax.vmap(distance_fn)(codes[ids_slab], tables)
-
     if p.mode == "post":
         ok = fresh
         key_slab = slab_dist(safe_cand)
@@ -533,7 +593,8 @@ def _hop_step(store, codes, mem, params, distance_fn, fetch_fn, ctx, mc,
     best_unexp = jnp.min(jnp.where(pool_exp, BIG, pool_key), axis=1)
     settled = (n_okc >= l_valid) & (best_unexp > vtop[:, l_valid - 1])
     active = active & (hops_new < p.max_hops) & frontier & ~settled
-    counters = jnp.stack([io, dist_c, approx_c, hops_new], axis=1)
+    counters = jnp.stack([io, dist_c, approx_c, hops_new, faults_c,
+                          retries_c, degraded_c], axis=1)
 
     # ---- 1'. select the NEXT frontier (its fetch is issued right after
     # this step returns — the cross-hop prefetch) ----
@@ -592,7 +653,7 @@ def _finalize(st: "HopState", params: SearchParams) -> SearchResult:
     fp = jnp.sum((st.res_ids >= 0) & ~st.res_valid, axis=1)
     c = st.counters
     return SearchResult(out_ids, out_d, c[:, 0], c[:, 3], c[:, 1], c[:, 2],
-                        n_valid, fp, n_explored)
+                        n_valid, fp, n_explored, c[:, 4], c[:, 5], c[:, 6])
 
 
 # ---------------------------------------------------------------------------
@@ -967,8 +1028,9 @@ def filtered_search_ref(store: RecordStore, codes: jax.Array,
         n_valid = jnp.sum(res_valid)
         n_explored = jnp.sum(res_ids >= 0)
         fp = jnp.sum((res_ids >= 0) & ~res_valid)
+        zero = jnp.int32(0)     # oracle has no fault plan: clean counters
         return (out_ids, out_d, counters[0], counters[3], counters[1],
-                counters[2], n_valid, fp, n_explored)
+                counters[2], n_valid, fp, n_explored, zero, zero, zero)
 
     outs = jax.vmap(one)(queries, qfilters, entries)
     return SearchResult(*outs)
@@ -1163,8 +1225,9 @@ def filtered_search_legacy(store: RecordStore, codes: jax.Array,
         n_valid = jnp.sum(res_valid)
         n_explored = jnp.sum(res_ids >= 0)
         fp = jnp.sum((res_ids >= 0) & ~res_valid)
+        zero = jnp.int32(0)     # baseline has no fault plan: clean counters
         return (out_ids, out_d, counters[0], counters[3], counters[1],
-                counters[2], n_valid, fp, n_explored)
+                counters[2], n_valid, fp, n_explored, zero, zero, zero)
 
     outs = jax.vmap(one)(queries, qfilters, entries)
     return SearchResult(*outs)

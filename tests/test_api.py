@@ -355,9 +355,32 @@ def test_session_context_manager_flushes(index):
     assert s.n_flushed == 2
 
 
-def test_session_failed_batch_fails_every_handle(index):
-    """A bad request in a batch must not silently drop the others."""
+def test_session_poisoned_batch_isolated(index):
+    """A bad request fails alone: every other handle in its flush still
+    resolves (bisect isolation), and the flush itself returns normally."""
     s = Session(index, SessionConfig(max_batch=100, max_delay_s=1e9))
+    good = s.submit_many(_requests(2, seed=6))
+    bad = s.submit(SearchRequest(query=_requests(1)[0].query,
+                                 filter=Tag("cat")))      # bare handle
+    assert s.flush() == 3
+    assert s.pending == 0
+    for h in good:
+        assert h.done
+        assert h.result().ids.shape == (4,)
+    assert bad.done
+    with pytest.raises(TypeError, match="field handle"):
+        bad.result()
+    # the session stays usable afterwards
+    h2 = s.submit(_requests(1, seed=8)[0])
+    s.flush()
+    assert h2.result().ids.shape == (4,)
+
+
+def test_session_failed_batch_fails_every_handle_legacy(index):
+    """isolate_failures=False keeps the old contract: the whole batch
+    fails with the execution error and flush propagates it."""
+    s = Session(index, SessionConfig(max_batch=100, max_delay_s=1e9,
+                                     isolate_failures=False))
     good = s.submit_many(_requests(2, seed=6))
     bad = s.submit(SearchRequest(query=_requests(1)[0].query,
                                  filter=Tag("cat")))      # bare handle
@@ -368,10 +391,47 @@ def test_session_failed_batch_fails_every_handle(index):
         assert h.done
         with pytest.raises(TypeError, match="field handle"):
             h.result()
-    # the session stays usable afterwards
-    h2 = s.submit(_requests(1, seed=8)[0])
+
+
+def test_session_flush_retry_budget_exhaustion(index):
+    """A budget of 1 is spent by the first failing attempt: the batch is
+    failed wholesale with the budget error (chained to the cause) rather
+    than re-executing without bound."""
+    s = Session(index, SessionConfig(max_batch=100, max_delay_s=1e9,
+                                     flush_retry_budget=1))
+    handles = s.submit_many(_requests(2, seed=6))
+    s.submit(SearchRequest(query=_requests(1)[0].query,
+                           filter=Tag("cat")))
     s.flush()
-    assert h2.result().ids.shape == (4,)
+    for h in handles:
+        assert h.done
+        with pytest.raises(RuntimeError, match="retry budget exhausted"):
+            h.result()
+
+
+def test_pending_result_reraises_unresolved_flush_error(index, monkeypatch):
+    """If the flush raises without resolving this handle, result() must
+    re-raise that error instead of tripping a bare assert."""
+    s = Session(index, SessionConfig(max_batch=100, max_delay_s=1e9,
+                                     auto_flush=False))
+    h = s.submit(_requests(1, seed=9)[0])
+
+    def boom():
+        raise RuntimeError("flush exploded before executing")
+
+    monkeypatch.setattr(s, "flush", boom)
+    with pytest.raises(RuntimeError, match="flush exploded"):
+        h.result()
+    assert not h.done
+
+    # a flush that completes without ever executing the handle surfaces a
+    # real error too (never a bare assert)
+    s2 = Session(index, SessionConfig(max_batch=100, max_delay_s=1e9,
+                                      auto_flush=False))
+    h2 = s2.submit(_requests(1, seed=10)[0])
+    s2._pending.clear()                   # simulate a lost request
+    with pytest.raises(RuntimeError, match="never resolved"):
+        h2.result()
 
 
 def test_make_selectors_resolves_renumbered_labels():

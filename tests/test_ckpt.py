@@ -113,3 +113,142 @@ def test_resume_exact_training(tmp_path):
     for a, b in zip(jax.tree_util.tree_leaves(p1),
                     jax.tree_util.tree_leaves(p2)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Crash-safety & recovery (PR 7: fault-injected I/O path)
+# ---------------------------------------------------------------------------
+
+def _injector(rate=1.0, seed=3):
+    from repro.core.faults import FaultInjector, FaultPlan
+    return FaultInjector(FaultPlan(seed=seed, ckpt_fail_rate=rate))
+
+
+def test_crash_mid_save_reaped_and_previous_step_intact(tmp_path):
+    """A killed/failed writer leaves step_K.tmp behind: it must never be
+    listed, reap_tmp must remove it, and restore must land on the last
+    intact step."""
+    tree = _tree(jax.random.PRNGKey(4))
+    ckpt.save(str(tmp_path), 1, tree)
+    with pytest.raises(IOError, match="injected write fault"):
+        ckpt.save(str(tmp_path), 2, tree, injector=_injector())
+    assert os.path.isdir(tmp_path / "step_2.tmp")
+    assert ckpt.latest_step(str(tmp_path)) == 1          # tmp never listed
+    assert ckpt.reap_tmp(str(tmp_path)) == ["step_2.tmp"]
+    assert not os.path.exists(tmp_path / "step_2.tmp")
+    target = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    back = ckpt.restore(str(tmp_path), 1, target)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_writer_error_surfaces_from_wait(tmp_path):
+    """The async writer's exception must not vanish with the daemon
+    thread — wait() (and thus the next save()) re-raises it."""
+    tree = _tree(jax.random.PRNGKey(5))
+    mgr = ckpt.CheckpointManager(str(tmp_path), async_write=True)
+    mgr.save(1, tree, injector=_injector())
+    with pytest.raises(IOError, match="injected write fault"):
+        mgr.wait()
+    mgr.save(2, tree)                    # manager stays usable afterwards
+    mgr.wait()
+    assert mgr.latest() == 2
+
+
+def test_restore_verifies_dtype(tmp_path):
+    tree = {"a": jnp.arange(8, dtype=jnp.int32)}
+    ckpt.save(str(tmp_path), 1, tree)
+    target = {"a": jax.ShapeDtypeStruct((8,), jnp.float32)}
+    with pytest.raises(ckpt.CheckpointCorruptionError, match="dtype"):
+        ckpt.restore(str(tmp_path), 1, target)
+
+
+def test_truncated_leaf_detected(tmp_path):
+    tree = _tree(jax.random.PRNGKey(6))
+    ckpt.save(str(tmp_path), 1, tree)
+    leaf = os.path.join(tmp_path, "step_1", "leaf_00000.npy")
+    with open(leaf, "r+b") as f:
+        f.truncate(os.path.getsize(leaf) // 2)
+    target = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    with pytest.raises(ckpt.CheckpointCorruptionError, match="checksum"):
+        ckpt.restore(str(tmp_path), 1, target)
+
+
+def test_md5_manifest_back_compat(tmp_path):
+    """Pre-sha256 manifests (md5 digests) still verify and restore."""
+    import hashlib
+    import json
+    tree = _tree(jax.random.PRNGKey(7))
+    ckpt.save(str(tmp_path), 1, tree)
+    mf = os.path.join(tmp_path, "step_1", "manifest.json")
+    with open(mf) as f:
+        manifest = json.load(f)
+    for meta in manifest["leaves"]:
+        del meta["sha256"]
+        with open(os.path.join(tmp_path, "step_1", meta["file"]), "rb") as f:
+            meta["md5"] = hashlib.md5(f.read()).hexdigest()
+    with open(mf, "w") as f:
+        json.dump(manifest, f)
+    target = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    back = ckpt.restore(str(tmp_path), 1, target)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quarantine_excluded_from_listing(tmp_path):
+    tree = _tree(jax.random.PRNGKey(8))
+    ckpt.save(str(tmp_path), 1, tree)
+    ckpt.save(str(tmp_path), 2, tree)
+    ckpt.quarantine(str(tmp_path), 2)
+    assert os.path.isdir(tmp_path / "step_2.quarantined")
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def _tiny_index():
+    from repro.api import Index, IndexConfig
+    from repro.data.synth import make_filtered_dataset
+    ds = make_filtered_dataset(n=300, d=8, n_queries=4, n_labels=10, seed=5)
+    idx = Index.build(ds.vectors, ds.metadata(),
+                      IndexConfig(r=8, r_dense=40, l_build=16, pq_m=4))
+    return ds, idx
+
+
+def test_index_load_corrupted_leaf_falls_back(tmp_path):
+    """Index.load with a corrupted newest step quarantines it and loads
+    the previous intact step; a stale tmp dir is reaped on the way."""
+    from repro.api import Index, SearchRequest
+    ds, idx = _tiny_index()
+    path = str(tmp_path / "idx")
+    idx.save(path)                                       # step 0
+    idx.save(path)                                       # step 1
+    os.makedirs(os.path.join(path, "step_9.tmp"))        # crashed writer
+    leaf = os.path.join(path, "step_1", "leaf_00000.npy")
+    with open(leaf, "r+b") as f:
+        f.seek(80)
+        f.write(b"\xde\xad\xbe\xef")
+    loaded = Index.load(path)
+    assert os.path.isdir(os.path.join(path, "step_1.quarantined"))
+    assert not os.path.exists(os.path.join(path, "step_9.tmp"))
+    res = loaded.search(SearchRequest(query=ds.queries[0], k=4))
+    assert res.ids.shape == (4,)
+    a = idx.search(SearchRequest(query=ds.queries[1], k=4))
+    b = loaded.search(SearchRequest(query=ds.queries[1], k=4))
+    np.testing.assert_array_equal(a.ids, b.ids)
+
+
+def test_index_load_all_steps_corrupted_raises(tmp_path):
+    ds, idx = _tiny_index()
+    path = str(tmp_path / "idx")
+    idx.save(path)                                       # step 0 only
+    leaf = os.path.join(path, "step_0", "leaf_00000.npy")
+    with open(leaf, "r+b") as f:
+        f.seek(80)
+        f.write(b"\xde\xad\xbe\xef")
+    from repro.api import Index
+    with pytest.raises(ckpt.CheckpointCorruptionError):
+        Index.load(path)

@@ -1,0 +1,226 @@
+"""Chaos suite for the fault-injected I/O path (docs/robustness.md).
+
+Property under test: for ANY seeded :class:`FaultPlan`, across all three
+mechanisms (post / spec_in / strict_in),
+
+* search never crashes;
+* the no-false-negative contract holds — a query with ``degraded == 0``
+  returns only exactly-valid records, and degraded rows substitute the
+  approx-membership *superset* (results are approximated, never dropped);
+* recall degrades monotonically with the injected fault rate;
+* a plan that draws no faults (``faults == 0``) is bit-identical to the
+  clean ``filtered_search_pipelined``;
+* at the committed 10% page-fault rate the retry→hedge→degrade ladder
+  keeps recall@10 within 5 points of the fault-free run.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.core import io_sim
+from repro.core import search as search_mod
+from repro.core.faults import FaultInjector, FaultPlan, parse_plan
+from repro.core.selectors import is_member, stack_filters
+
+pytestmark = pytest.mark.chaos
+
+MODES = ("post", "spec_in", "strict_in")
+
+# three seeded plans, mild to brutal: the mild one exercises the retry
+# ladder (nothing should degrade), the brutal ones force real degradation
+PLANS = (
+    FaultPlan(seed=1, read_fail_rate=0.10, spike_rate=0.05),
+    FaultPlan(seed=2, read_fail_rate=0.30, corrupt_rate=0.10,
+              max_retries=1, hedge=False),
+    FaultPlan(seed=3, read_fail_rate=0.60, corrupt_rate=0.20,
+              spike_rate=0.30, max_retries=0, hedge=False),
+)
+
+# the committed operating point for the recall floor (bench + CI smoke)
+PLAN_10PCT = FaultPlan(seed=7, read_fail_rate=0.10)
+
+
+def _run(e, ds, mode, plan, selectivity=0.30):
+    from repro.data.synth import make_sliding_range_selectors
+    sels = make_sliding_range_selectors(e, selectivity,
+                                        ds.queries.shape[0])
+    qf = stack_filters([s.plan(e.config.ql, e.config.cap).qfilter
+                        for s in sels])
+    params = search_mod.SearchParams(l_search=48, k=10, max_hops=200,
+                                     beam_width=2, mode=mode, l_valid=32,
+                                     fault_plan=plan)
+    entries = None
+    if mode == "strict_in":
+        ents = np.full((len(sels), 4), -1, np.int32)
+        for j, s in enumerate(sels):
+            seeds, _ = eng._strict_seed_ids(s, e.medoid, 4)
+            ents[j, :seeds.size] = seeds
+        entries = jnp.asarray(ents)
+    res = search_mod.filtered_search_pipelined(
+        e.store, e.codes, e.codebook, e.mem, qf, jnp.asarray(ds.queries),
+        e.medoid, params, entries=entries)
+    return sels, qf, res
+
+
+def _mean_recall(ds, e, sels, res, k=10):
+    vectors = np.asarray(e.store.vectors)
+    rl = np.asarray(e.store.rec_labels)
+    rv = np.asarray(e.store.rec_values)
+    out = []
+    for i, s in enumerate(sels):
+        plan = s.plan(e.config.ql, e.config.cap)
+        q = ds.queries[i]
+        if q.shape[0] != vectors.shape[1]:
+            q = np.pad(q, (0, vectors.shape[1] - q.shape[0]))
+        gt = eng.brute_force_filtered(vectors, rl, rv, plan.qfilter, q, k)
+        out.append(eng.recall_at_k(np.asarray(res.ids[i]), gt, k))
+    return float(np.mean(out))
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("plan", PLANS, ids=lambda p: f"seed{p.seed}")
+def test_chaos_never_crashes_no_false_negatives(shared_engine, shared_ds,
+                                                mode, plan):
+    """Any plan: search completes, counters are sane, and undegraded
+    queries return only exactly-valid records."""
+    e = shared_engine
+    sels, qf, res = _run(e, shared_ds, mode, plan)
+    ids = np.asarray(res.ids)
+    faults = np.asarray(res.faults)
+    retries = np.asarray(res.retries)
+    degraded = np.asarray(res.degraded)
+    assert np.all(faults >= 0) and np.all(degraded >= 0)
+    assert np.all(retries <= faults)        # a retry follows a fault
+    if plan.max_retries or plan.hedge:
+        assert retries.sum() > 0            # the ladder actually engaged
+    import jax
+    safe = jnp.maximum(jnp.asarray(ids), 0)
+    ok = np.asarray(jax.vmap(is_member)(
+        qf, e.store.rec_labels[safe], e.store.rec_values[safe]))
+    for i in range(ids.shape[0]):
+        returned = ids[i] >= 0
+        if degraded[i] == 0:
+            # clean queries: every returned record is exactly valid
+            assert np.all(ok[i][returned]), (mode, plan.seed, i)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_recall_within_5_points_at_10pct(shared_engine, shared_ds, mode):
+    """The committed operating point: at a 10% per-attempt page-fault rate
+    the full ladder holds recall@10 within 5 points of fault-free."""
+    e = shared_engine
+    sels, _, clean = _run(e, shared_ds, mode, None)
+    _, _, faulted = _run(e, shared_ds, mode, PLAN_10PCT)
+    r_clean = _mean_recall(shared_ds, e, sels, clean)
+    r_fault = _mean_recall(shared_ds, e, sels, faulted)
+    assert np.asarray(faulted.faults).sum() > 0
+    assert r_fault >= r_clean - 0.05, (r_clean, r_fault)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_recall_degrades_monotonically(shared_engine, shared_ds, mode):
+    """With the ladder disabled (no retries, no hedge), recall must be
+    non-increasing in the injected fault rate."""
+    e = shared_engine
+    recalls = []
+    for rate in (0.0, 0.5, 0.9):
+        plan = (None if rate == 0.0 else
+                FaultPlan(seed=11, read_fail_rate=rate, max_retries=0,
+                          hedge=False))
+        sels, _, res = _run(e, shared_ds, mode, plan)
+        recalls.append(_mean_recall(shared_ds, e, sels, res))
+    assert recalls[0] >= recalls[1] - 0.02 >= recalls[2] - 0.04, recalls
+    assert recalls[2] < recalls[0]          # brutal rate really hurts
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_zero_fault_plan_bit_identical(shared_engine, shared_ds, mode):
+    """faults == 0 ⇒ bit-identical to the clean pipelined path: a plan
+    whose rates are all zero must not change one bit of any field."""
+    e = shared_engine
+    _, _, clean = _run(e, shared_ds, mode, None)
+    _, _, zeroed = _run(e, shared_ds, mode, FaultPlan(seed=42))
+    for f in search_mod.SearchResult._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(clean, f)),
+                                      np.asarray(getattr(zeroed, f)),
+                                      err_msg=f"{mode}:{f}")
+    assert int(np.asarray(zeroed.faults).sum()) == 0
+
+
+@pytest.mark.fast
+def test_fault_draws_deterministic_and_seed_sensitive():
+    """The stateless hash: same (ids, hops, plan) ⇒ same draws; a
+    different seed decorrelates them."""
+    from repro.core import faults as faults_mod
+    ids = jnp.arange(512, dtype=jnp.int32).reshape(8, 64)
+    hops = jnp.tile(jnp.arange(8, dtype=jnp.int32)[:, None], (1, 64))
+    p1 = FaultPlan(seed=5, read_fail_rate=0.3)
+    a = np.asarray(faults_mod.read_attempt_bad(ids, hops, 0, p1))
+    b = np.asarray(faults_mod.read_attempt_bad(ids, hops, 0, p1))
+    np.testing.assert_array_equal(a, b)
+    c = np.asarray(faults_mod.read_attempt_bad(
+        ids, hops, 0, FaultPlan(seed=6, read_fail_rate=0.3)))
+    assert (a != c).any()
+    # rate sanity: the empirical hit rate tracks the plan's probability
+    assert 0.2 < a.mean() < 0.4
+    # attempts decorrelate: a retry is not doomed to repeat its failure
+    d = np.asarray(faults_mod.read_attempt_bad(ids, hops, 1, p1))
+    assert (a != d).any()
+
+
+@pytest.mark.fast
+def test_ckpt_injector_deterministic():
+    plan = FaultPlan(seed=9, ckpt_fail_rate=0.5)
+    a = [FaultInjector(plan).ckpt_write_fails(s, l)
+         for s in range(4) for l in range(8)]
+    b = [FaultInjector(plan).ckpt_write_fails(s, l)
+         for s in range(4) for l in range(8)]
+    assert a == b and any(a) and not all(a)
+    inj = FaultInjector(plan)
+    n = sum(inj.ckpt_write_fails(0, l) for l in range(8))
+    assert inj.n_write_faults == n
+
+
+@pytest.mark.fast
+def test_parse_plan_cli_spec():
+    p = parse_plan("rate=0.25,seed=7,max_retries=1,hedge=0,corrupt_rate=0.1")
+    assert p == FaultPlan(seed=7, read_fail_rate=0.25, corrupt_rate=0.1,
+                          max_retries=1, hedge=False)
+    with pytest.raises(ValueError, match="unknown FaultPlan field"):
+        parse_plan("nope=1")
+    with pytest.raises(AssertionError):
+        FaultPlan(read_fail_rate=1.5)
+
+
+def test_counters_surface_through_engine_and_api(shared_engine, shared_ds):
+    """SearchConfig.fault_plan flows into QueryStats/RequestStats."""
+    e = shared_engine
+    from repro.data.synth import make_sliding_range_selectors
+    sels = make_sliding_range_selectors(e, 0.3, 6)
+    scfg = eng.SearchConfig(policy="post", fault_plan=PLAN_10PCT)
+    ids, dists, stats = e.search(shared_ds.queries[:6], sels, scfg)
+    assert stats.faults.sum() > 0
+    assert stats.retries.sum() > 0
+    assert ids.shape == (6, 10)
+    clean_ids, _, clean_stats = e.search(
+        shared_ds.queries[:6], sels, eng.SearchConfig(policy="post"))
+    assert clean_stats.faults.sum() == 0 and clean_stats.degraded.sum() == 0
+
+
+@pytest.mark.fast
+def test_faulted_latency_model():
+    m = io_sim.IOModel()
+    base = m.latency_us(10, pages_parallel=32, prefetch_depth=2,
+                        compute_us=100.0)
+    # no plan / no measured faults: identical to the clean model
+    assert m.faulted_latency_us(10, None, pages_parallel=32,
+                                prefetch_depth=2, compute_us=100.0) == base
+    plan = PLAN_10PCT
+    assert m.faulted_latency_us(10, plan, pages_parallel=32,
+                                prefetch_depth=2, compute_us=100.0) == base
+    # retries add page reads + backoff; spikes stretch reads
+    with_faults = m.faulted_latency_us(
+        10, plan, faults=4, retries=3, spikes=1, pages_parallel=32,
+        prefetch_depth=2, compute_us=100.0)
+    assert with_faults > base
