@@ -10,7 +10,7 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_build --smo
 # the search smoke doubles as the seeded fault-injection smoke: the
 # default --fault-plan (10% page-fault rate, seed 7) re-runs every mode
 # under injection and asserts the degraded-mode recall floor
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_search --smoke --active-trace
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_search --smoke --active-trace --store disk
 # light chaos tests (deterministic fault hash, injector, latency model)
 # are marked fast+chaos and ride the -m fast run below; the full chaos
 # property suite is `pytest -m chaos` (tier-1 runs it unmarked too)

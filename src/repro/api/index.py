@@ -137,7 +137,10 @@ class Index:
               config: IndexConfig = IndexConfig(),
               schema: Optional[Schema] = None,
               numeric_field: Optional[str] = None,
-              defaults: SearchConfig = SearchConfig()) -> "Index":
+              defaults: SearchConfig = SearchConfig(),
+              store: str = "device",
+              storage_dir: Optional[str] = None,
+              storage_config=None) -> "Index":
         """Build an index over ``vectors`` + per-record metadata dicts.
 
         ``schema`` declares the attribute fields explicitly; when omitted
@@ -145,7 +148,18 @@ class Index:
         everything else ⇒ tag fields). ``numeric_field`` is the deprecated
         single-field spelling — it pins ``Schema.nums`` to that one field
         and will be removed after one release; pass a Schema instead.
+
+        ``store="disk"`` spills the built records to page-aligned slab
+        files (docs/storage.md) at ``storage_dir`` (a temp dir when
+        omitted) and serves every record read through the disk tier's
+        page cache — results are bit-identical to the device backend.
+        ``storage_config`` is a :class:`repro.storage.StorageConfig`
+        (cache size, read-ahead, device budget). Inserts require the
+        device backend.
         """
+        if store not in ("device", "disk"):
+            raise ValueError(f"unknown store backend {store!r} "
+                             "(expected 'device' or 'disk')")
         vectors = np.asarray(vectors, np.float32)
         if len(metadata) != vectors.shape[0]:
             raise ValueError(f"{vectors.shape[0]} vectors but "
@@ -168,6 +182,11 @@ class Index:
                                                               schema)
         engine = FilteredANNEngine.build(
             vectors, offsets, label_flat, max(1, len(vocab)), values, config)
+        if store == "disk":
+            if storage_dir is None:
+                import tempfile
+                storage_dir = tempfile.mkdtemp(prefix="repro_slabs_")
+            engine.to_disk(storage_dir, storage_config)
         return cls(engine, vocab, schema, defaults)
 
     def insert(self, vectors: np.ndarray,
@@ -332,7 +351,16 @@ class Index:
                              f"dim {self.dim}")
         if q.shape[0] != self.dim:
             q = np.pad(q, (0, self.dim - q.shape[0]))
-        vecs = np.asarray(self.store.vectors)[:n]
+        if self.engine.disk_store is not None:
+            # disk backend: the device tier is a stub — stream the records
+            # off the slab files (cache-bypassing scan)
+            recs = self.engine.disk_store.scan_records(0, n)
+            vecs, rl, rv = (recs["vectors"], recs["rec_labels"],
+                            recs["rec_values"])
+        else:
+            vecs = np.asarray(self.store.vectors)[:n]
+            rl = np.asarray(self.store.rec_labels)[:n]
+            rv = np.asarray(self.store.rec_values)[:n]
         f = request.filter
         if f is None or isinstance(f, FilterExpr):
             if f is not None:
@@ -343,9 +371,7 @@ class Index:
             mask[f.valid_ids] = True
         elif isinstance(f, Selector):
             plan = f.plan(self.config.ql, self.config.cap, self.config.qr)
-            return brute_force_filtered(
-                vecs, np.asarray(self.store.rec_labels)[:n],
-                np.asarray(self.store.rec_values)[:n], plan.qfilter, q, k)
+            return brute_force_filtered(vecs, rl, rv, plan.qfilter, q, k)
         else:
             raise TypeError(f"unsupported filter {f!r}")
         d = np.sum((vecs - q[None, :]) ** 2, axis=1)
@@ -362,12 +388,22 @@ class Index:
         e = self.engine
         n = e.n
         ls, rs = e.label_store, e.range_store
+        if e.disk_store is not None:
+            # disk backend: record data lives in the slab files (copied
+            # alongside the step by ``save``), not in checkpoint leaves —
+            # the device tier holds only a shape stub
+            store_leaves = {}
+        else:
+            store_leaves = {
+                "store_vectors": np.asarray(e.store.vectors)[:n],
+                "store_neighbors": np.asarray(e.store.neighbors)[:n],
+                "store_dense_neighbors":
+                    np.asarray(e.store.dense_neighbors)[:n],
+                "store_rec_labels": np.asarray(e.store.rec_labels)[:n],
+                "store_rec_values": np.asarray(e.store.rec_values)[:n],
+            }
         return {
-            "store_vectors": np.asarray(e.store.vectors)[:n],
-            "store_neighbors": np.asarray(e.store.neighbors)[:n],
-            "store_dense_neighbors": np.asarray(e.store.dense_neighbors)[:n],
-            "store_rec_labels": np.asarray(e.store.rec_labels)[:n],
-            "store_rec_values": np.asarray(e.store.rec_values)[:n],
+            **store_leaves,
             "pq_codes": np.asarray(e.codes)[:n],
             "pq_centroids": np.asarray(e.codebook.centroids),
             "ls_vec_offsets": ls.vec_offsets, "ls_vec_labels": ls.vec_labels,
@@ -400,8 +436,28 @@ class Index:
         ckpt.save(path, step=step, tree=tree, async_write=False,
                   keep_last=2, injector=injector)
         e = self.engine
+        slab_meta = {}
+        if e.disk_store is not None:
+            # slab files ride inside the step dir so the keep-last GC and
+            # quarantine fallback govern them with the array leaves; meta
+            # (carrying their digest) is written after the copy, so a
+            # crash mid-copy leaves a step without meta → load falls
+            # through to the previous intact step
+            import shutil
+            from repro.storage import slab as slab_mod
+            slab_dir = os.path.join(path, f"step_{step}", "slabs")
+            os.makedirs(slab_dir, exist_ok=True)
+            for fn in (slab_mod.SLAB_FILE, slab_mod.META_FILE):
+                shutil.copy2(os.path.join(e.disk_store.path, fn),
+                             os.path.join(slab_dir, fn))
+            slab_meta = {
+                "backend": "disk",
+                "slab_sha256": ckpt.file_digest(
+                    os.path.join(slab_dir, slab_mod.SLAB_FILE)),
+            }
         meta = {
             "format": _FORMAT,
+            **slab_meta,
             "config": dataclasses.asdict(e.config),
             "defaults": dataclasses.asdict(self.defaults),
             "medoid": int(e.medoid),
@@ -456,6 +512,15 @@ class Index:
                                                   np.dtype(v["dtype"]))
                           for k, v in meta["arrays"].items()}
                 t = ckpt.restore(path, step, target)
+                if meta.get("backend") == "disk":
+                    # the slab file is checkpoint payload too: digest it
+                    # against the sidecar before serving from it
+                    from repro.storage import slab as slab_mod
+                    sl = os.path.join(path, f"step_{step}", "slabs",
+                                      slab_mod.SLAB_FILE)
+                    if ckpt.file_digest(sl) != meta.get("slab_sha256"):
+                        raise ckpt.CheckpointCorruptionError(
+                            f"step {step}: slab file checksum mismatch")
                 break
             except (ckpt.CheckpointCorruptionError, json.JSONDecodeError,
                     OSError):
@@ -468,19 +533,32 @@ class Index:
             t, meta = _shim_legacy_checkpoint(t, meta)
 
         from repro.core.records import candidate_first_mask
-        store = RecordStore(
-            vectors=jnp.asarray(t["store_vectors"]),
-            neighbors=jnp.asarray(t["store_neighbors"]),
-            dense_neighbors=jnp.asarray(t["store_dense_neighbors"]),
-            rec_labels=jnp.asarray(t["store_rec_labels"]),
-            rec_values=jnp.asarray(t["store_rec_values"]),
-            pages_std=meta["pages_std"], pages_dense=meta["pages_dense"],
-            # derived, not checkpointed: re-precompute the per-record
-            # dedup mask from the loaded graph rows
-            cand_first=jnp.asarray(candidate_first_mask(
-                t["store_neighbors"], t["store_dense_neighbors"])))
+        disk = meta.get("backend") == "disk"
+        if disk:
+            from repro.storage import DiskRecordStore
+            ds = DiskRecordStore(os.path.join(path, f"step_{step}",
+                                              "slabs"))
+            # record data (incl. the precomputed cand_first bits) serves
+            # from the restored slabs; the device tier gets the stub
+            store = ds.stub_store()
+            n_rec = ds.n
+        else:
+            ds = None
+            store = RecordStore(
+                vectors=jnp.asarray(t["store_vectors"]),
+                neighbors=jnp.asarray(t["store_neighbors"]),
+                dense_neighbors=jnp.asarray(t["store_dense_neighbors"]),
+                rec_labels=jnp.asarray(t["store_rec_labels"]),
+                rec_values=jnp.asarray(t["store_rec_values"]),
+                pages_std=meta["pages_std"],
+                pages_dense=meta["pages_dense"],
+                # derived, not checkpointed: re-precompute the per-record
+                # dedup mask from the loaded graph rows
+                cand_first=jnp.asarray(candidate_first_mask(
+                    t["store_neighbors"], t["store_dense_neighbors"])))
+            n_rec = store.n
         label_store = LabelStore(
-            n_vectors=store.n, n_labels=meta["n_labels"],
+            n_vectors=n_rec, n_labels=meta["n_labels"],
             vec_offsets=t["ls_vec_offsets"], vec_labels=t["ls_vec_labels"],
             inv_offsets=t["ls_inv_offsets"],
             inv_postings=t["ls_inv_postings"],
@@ -488,7 +566,7 @@ class Index:
             k_hashes=meta["k_hashes"])
         range_store = MultiRangeStore([
             RangeStore(
-                n_vectors=store.n, values=t["rs_values"][:, j],
+                n_vectors=n_rec, values=t["rs_values"][:, j],
                 sorted_values=t["rs_sorted_values"][j],
                 sorted_ids=t["rs_sorted_ids"][j],
                 bucket_bounds=t["rs_bucket_bounds"][j],
@@ -503,6 +581,8 @@ class Index:
         engine = FilteredANNEngine(
             store, jnp.asarray(t["pq_codes"]), codebook, mem, label_store,
             range_store, meta["medoid"], IndexConfig(**meta["config"]))
+        if ds is not None:
+            engine.attach_disk_store(ds)
         vocab = {(f, v): lab for f, v, lab in meta["vocab"]}
         defaults = dict(meta["defaults"])
         if isinstance(defaults.get("fault_plan"), dict):

@@ -29,10 +29,12 @@ class SearchRequest:
     policy: Optional[str] = None
     max_hops: Optional[int] = None
     beam_width: Optional[int] = None
+    prefetch_depth: Optional[int] = None
 
     def overrides(self) -> dict:
         out = {}
-        for f in ("k", "l", "policy", "max_hops", "beam_width"):
+        for f in ("k", "l", "policy", "max_hops", "beam_width",
+                  "prefetch_depth"):
             v = getattr(self, f)
             if v is not None:
                 out[f] = v

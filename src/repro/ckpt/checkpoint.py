@@ -59,6 +59,11 @@ def _file_digest(path: str, algo: str = "sha256") -> str:
     return h.hexdigest()
 
 
+# public alias: non-leaf checkpoint payloads (e.g. the disk backend's slab
+# files, Index.save) checksum through the same streaming digest
+file_digest = _file_digest
+
+
 def _tree_paths(tree) -> list:
     paths = []
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:

@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cost_model, graph, pq as pq_mod, prefilter, search
+from repro.core import cost_model, graph, io_sim, pq as pq_mod, \
+    prefilter, search
 from repro.core.faults import FaultPlan
 from repro.core.labels import (LabelStore, build_label_store,
                                extend_label_store, padded_rows_from_csr,
@@ -89,6 +90,10 @@ class QueryStats:
     faults: np.ndarray        # injected fault events (0 without a plan)
     retries: np.ndarray       # extra read attempts issued by the ladder
     degraded: np.ndarray      # rows answered from the in-memory fallback
+    disk: dict | None = None  # disk-tier counter delta for this batch
+                              # (cache hits/misses/hit_rate, pages_read,
+                              # readahead, gated_skips, measured p50 page
+                              # latency) — None on the device backend
 
     @classmethod
     def empty(cls) -> "QueryStats":
@@ -100,7 +105,7 @@ class QueryStats:
                    n_valid=np.zeros(0, np.int64), selectivity=np.zeros(0),
                    precision_in=np.zeros(0), faults=np.zeros(0, np.int64),
                    retries=np.zeros(0, np.int64),
-                   degraded=np.zeros(0, np.int64))
+                   degraded=np.zeros(0, np.int64), disk=None)
 
 
 class FilteredANNEngine:
@@ -118,6 +123,9 @@ class FilteredANNEngine:
         self.n = label_store.n_vectors  # valid records (store may hold pads)
         self._builder = None      # lazy IncrementalBuilder (insert path)
         self.calibration: cost_model.Calibration | None = None
+        self.disk_store = None    # storage.DiskRecordStore when backend=disk
+        self.io_model: io_sim.IOModel | None = None
+                                  # fitted from measured reads (calibrate_io)
 
     def calibrate(self, source="BENCH_search.json") -> bool:
         """Swap the router's hardcoded per-hop compute constants for the
@@ -187,6 +195,42 @@ class FilteredANNEngine:
                    medoid, config)
 
     # ------------------------------------------------------------------
+    def to_disk(self, path: str, storage_config=None) -> "FilteredANNEngine":
+        """Switch this engine to the disk backend (storage/disk.py).
+
+        The record arrays are spilled to page-aligned slab files at
+        ``path`` and replaced by a 1-row stub carrying only shapes and
+        page counts — the device tier keeps PQ codes + bloom/bucket
+        words, every record byte flows through the disk store's fetch
+        callable. Results are bit-identical to the device backend (the
+        slabs hold the exact same float32/int32 values). In place;
+        returns self.
+        """
+        from repro.storage import DiskRecordStore, StorageConfig
+        cfg = storage_config or StorageConfig()
+        ds = DiskRecordStore.from_record_store(path, self.store, n=self.n,
+                                               config=cfg)
+        self.attach_disk_store(ds)
+        return self
+
+    def attach_disk_store(self, disk_store) -> None:
+        """Adopt an already-open :class:`~repro.storage.DiskRecordStore`
+        (e.g. from a restored checkpoint) and drop the device arrays."""
+        self.disk_store = disk_store
+        self.store = disk_store.stub_store()
+
+    def calibrate_io(self) -> "io_sim.IOModel | None":
+        """Fit :class:`io_sim.IOModel` from the disk tier's measured read
+        samples, replacing the modeled constants for latency reporting.
+        Returns the fitted model (None without a disk store or samples)."""
+        if self.disk_store is None or not self.disk_store.samples:
+            return None
+        self.io_model = io_sim.IOModel.calibrate_from_samples(
+            self.disk_store.samples,
+            page_bytes=self.disk_store.layout.page_bytes)
+        return self.io_model
+
+    # ------------------------------------------------------------------
     def insert(self, vectors: np.ndarray, label_offsets: np.ndarray,
                label_flat: np.ndarray, n_labels: int,
                values: np.ndarray) -> np.ndarray:
@@ -210,6 +254,11 @@ class FilteredANNEngine:
         A/B comparisons). Returns the new record ids.
         """
         cfg = self.config
+        if self.disk_store is not None:
+            raise NotImplementedError(
+                "insert is not supported on the disk backend: slab files "
+                "are append-closed in this release — rebuild the index "
+                "(or insert on the device backend, then to_disk)")
         vectors = np.asarray(vectors, np.float32)
         m = vectors.shape[0]
         if m == 0:
@@ -430,11 +479,19 @@ class FilteredANNEngine:
             eff = min(eff, scfgs[i].max_pool)
             groups.setdefault((r.mechanism, eff, scfgs[i]), []).append(i)
 
+        ds = self.disk_store
+        disk_before = ds.snapshot() if ds is not None else None
         for (mech, eff_l, scfg), idxs in groups.items():
             strict = scfg.policy in ("strict_in", "strict_pre", "basefilter")
             sub_q = jnp.asarray(queries[idxs])
             sub_sel = [selectors[i] for i in idxs]
             sub_qf = stack_filters([plans[i].qfilter for i in idxs])
+            if ds is not None:
+                # arm the disk tier with this group's knobs: the fault
+                # plan (host draws must mirror the traced ladder) and the
+                # read-ahead window (depth − 1 scales it)
+                ds.fault_plan = scfg.fault_plan
+                ds.prefetch_depth = scfg.prefetch_depth
             if mech == "pre":
                 # the re-rank pool scales with the superset's precision
                 # (effective_l = L/p_pre + L): a speculative AND scans only
@@ -444,7 +501,8 @@ class FilteredANNEngine:
                     l_rerank=eff_l + scfg.l_rerank_delta, k=scfg.k)
                 res = prefilter.prefilter_search(
                     self.store, self.codes, self.codebook, sub_sel, sub_qf,
-                    sub_q, pp, speculative=not strict)
+                    sub_q, pp, speculative=not strict,
+                    host_fetch=ds.fetch_host if ds is not None else None)
                 for j, i in enumerate(idxs):
                     out_ids[i] = np.asarray(res.ids[j])
                     out_d[i] = np.asarray(res.dists[j])
@@ -483,7 +541,9 @@ class FilteredANNEngine:
                 res = search.filtered_search_pipelined(
                     self.store, self.codes, self.codebook, self.mem, sub_qf,
                     sub_q, self.medoid, sp, entries=entries,
-                    hop_chunk=scfg.hop_chunk)
+                    hop_chunk=scfg.hop_chunk,
+                    **({"fetch_fn": ds.fetch_callable}
+                       if ds is not None else {}))
                 prefetch = np.array([plans[i].pages_prefetch for i in idxs]) \
                     if mode == "spec_in" else 0
                 for j, i in enumerate(idxs):
@@ -500,6 +560,8 @@ class FilteredANNEngine:
                     stats.faults[i] = int(res.faults[j])
                     stats.retries[i] = int(res.retries[j])
                     stats.degraded[i] = int(res.degraded[j])
+        if ds is not None:
+            stats.disk = ds.delta(disk_before, ds.snapshot())
         return out_ids, out_d, stats
 
     # ------------------------------------------------------------------

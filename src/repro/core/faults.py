@@ -175,6 +175,47 @@ def read_spike(ids: jax.Array, hops: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# NumPy twins (host read path — storage/disk.py)
+#
+# The real disk tier draws its faults on the host, outside any trace, but
+# the degraded-row substitution happens on the device: both sides MUST see
+# the same draws or a host-degraded row's zeros would be consumed. The
+# twins replicate _uniform exactly — same uint32 wraparound, same
+# float32 rounding, same float32 threshold compare — and are asserted
+# bit-identical to the traced draws in tests/test_storage.py.
+# ---------------------------------------------------------------------------
+
+def _uniform_np(ids: np.ndarray, hops: np.ndarray, seed: int, stream: int,
+                attempt: int) -> np.ndarray:
+    key = np.uint32((seed * _GOLDEN + stream * _MIX_A + attempt * _MIX_B)
+                    & 0xFFFFFFFF)
+    with np.errstate(over="ignore"):    # uint32 wraparound is the point
+        u = _mix32(np.asarray(ids).astype(np.uint32) ^ key)
+        u = _mix32(u ^ (np.asarray(hops).astype(np.uint32)
+                        * np.uint32(_GOLDEN)))
+    return u.astype(np.float32) * np.float32(2.0 ** -32)
+
+
+def read_fail_np(ids, hops, attempt: int, plan: FaultPlan) -> np.ndarray:
+    return (_uniform_np(ids, hops, plan.seed, _STREAM_FAIL, attempt)
+            < np.float32(plan.read_fail_rate))
+
+
+def read_corrupt_np(ids, hops, attempt: int, plan: FaultPlan) -> np.ndarray:
+    if plan.corrupt_rate <= 0.0:
+        return np.zeros(np.asarray(ids).shape, bool)
+    return (_uniform_np(ids, hops, plan.seed, _STREAM_CORRUPT, attempt)
+            < np.float32(plan.corrupt_rate))
+
+
+def read_attempt_bad_np(ids, hops, attempt: int,
+                        plan: FaultPlan) -> np.ndarray:
+    """NumPy twin of :func:`read_attempt_bad` (fail OR corrupt)."""
+    return read_fail_np(ids, hops, attempt, plan) | read_corrupt_np(
+        ids, hops, attempt, plan)
+
+
+# ---------------------------------------------------------------------------
 # Host-side injector (checkpoint writes)
 # ---------------------------------------------------------------------------
 

@@ -56,6 +56,44 @@ class IOModel:
             serial_us = read_us + compute_us
         return serial_us + par * self.t_page_us
 
+    @classmethod
+    def calibrate_from_samples(cls, samples, page_bytes: int = PAGE_BYTES,
+                               parallelism_grid=(1, 2, 4, 8, 16, 32, 64,
+                                                 128, 256)) -> "IOModel":
+        """Fit ``t_page_us`` / ``parallelism`` from measured slab reads.
+
+        ``samples`` is an iterable of dicts (``storage.DiskRecordStore``
+        emits them): ``{"pages": int, "us": float, "kind": "serial" |
+        "batch"}``. Serial samples are single dependent pread runs —
+        ``t_page_us`` is the median measured per-page latency (median, so
+        one OS-cache outlier or compaction stall doesn't skew the fit).
+        Batch samples are multi-record fetches whose pages overlap up to
+        the device's queue depth: ``parallelism`` is the grid value
+        minimizing relative error of ``ceil(pages / p) * t_page_us``
+        against the measured batch times. Falls back to the class
+        defaults for whichever family has no samples.
+        """
+        serial = [s for s in samples if s["kind"] == "serial"
+                  and s["pages"] > 0 and s["us"] > 0]
+        batch = [s for s in samples if s["kind"] == "batch"
+                 and s["pages"] > 0 and s["us"] > 0]
+        if not serial:
+            return cls(page_bytes=page_bytes)
+        per_page = sorted(s["us"] / s["pages"] for s in serial)
+        t_page = per_page[len(per_page) // 2]
+        parallelism = cls.parallelism          # dataclass default
+        if batch:
+            best = None
+            for p in parallelism_grid:
+                err = sum(
+                    abs(math.ceil(s["pages"] / p) * t_page - s["us"])
+                    / s["us"] for s in batch) / len(batch)
+                if best is None or err < best[0]:
+                    best = (err, p)
+            parallelism = best[1]
+        return cls(page_bytes=page_bytes, t_page_us=t_page,
+                   parallelism=parallelism)
+
     def faulted_latency_us(self, pages_sequentially_dependent: int,
                            plan, faults: int = 0, retries: int = 0,
                            spikes: int = 0, pages_parallel: int = 0,

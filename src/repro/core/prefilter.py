@@ -68,35 +68,55 @@ def _pq_topl(codes, codebook, query, cand_ids, cand_len, l_rerank: int,
     return top_ids, top_d
 
 
-@functools.partial(jax.jit, static_argnames=("params",))
-def _rerank_verify(store: RecordStore, qf: QueryFilter, query,
-                   top_ids, params: PrefilterParams):
-    """Fetch top-(L+δ) records, exact distance + exact verification."""
+def _verify_core(qf: QueryFilter, query, top_ids, vecs, rl, rv, k: int,
+                 pages_std):
+    """Exact distance + exact verification over already-fetched record
+    fields (dead rows carry arbitrary data — fully masked by ``live``)."""
     live = top_ids >= 0
-    safe = jnp.where(live, top_ids, 0)
-    vecs = store.vectors[safe]
-    rl = store.rec_labels[safe]
-    rv = store.rec_values[safe]
     d = vecs - query[None, :]
     ex_d = jnp.where(live, jnp.sum(d * d, axis=-1), BIG)
     ok = is_member(qf, rl, rv) & live
     key = jnp.where(ok, ex_d, BIG)
-    order = jnp.argsort(key)[:params.k]
+    order = jnp.argsort(key)[:k]
     ids = jnp.where(ok[order], top_ids[order], -1)
     dists = jnp.where(ok[order], ex_d[order], jnp.inf)
-    io = jnp.sum(live) * store.pages_std
+    io = jnp.sum(live) * pages_std
     return ids, dists, io, jnp.sum(ok)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "pages_std"))
+def _verify_fetched(qf: QueryFilter, query, top_ids, vecs, rl, rv,
+                    params: PrefilterParams, pages_std: int):
+    """Verification over records fetched outside the trace (disk tier)."""
+    return _verify_core(qf, query, top_ids, vecs, rl, rv, params.k,
+                        pages_std)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def _rerank_verify(store: RecordStore, qf: QueryFilter, query,
+                   top_ids, params: PrefilterParams):
+    """Fetch top-(L+δ) records, exact distance + exact verification."""
+    safe = jnp.where(top_ids >= 0, top_ids, 0)
+    return _verify_core(qf, query, top_ids, store.vectors[safe],
+                        store.rec_labels[safe], store.rec_values[safe],
+                        params.k, store.pages_std)
 
 
 def prefilter_search(store: RecordStore, codes, codebook, selectors, qfilters,
                      queries, params: PrefilterParams,
                      distance_fn: Callable = pq_mod.adc_lookup,
-                     speculative: bool = True) -> PrefilterResult:
+                     speculative: bool = True,
+                     host_fetch: Callable | None = None) -> PrefilterResult:
     """Host-driven pre-filtering for a query batch.
 
     ``speculative=True`` uses Selector.pre_filter_approx (partial scans,
     heavy-branch pruning); ``False`` forces exact full-constraint scans
     (the strict baseline — implemented as evaluating every branch).
+
+    ``host_fetch`` (disk backend: ``DiskRecordStore.fetch_host``) replaces
+    the device-array record gather for the re-rank: the top-(L+δ) records
+    are read from slab files instead — same fields, same verification,
+    bit-identical output, but through the real page cache.
     """
     B = queries.shape[0]
     out_ids, out_d = [], []
@@ -118,8 +138,16 @@ def prefilter_search(store: RecordStore, codes, codebook, selectors, qfilters,
         top_ids, _ = _pq_topl(codes, codebook, queries[b],
                               jnp.asarray(cand_padded), cand.size,
                               params.l_rerank, params.chunk, distance_fn)
-        ids, dists, io, nv = _rerank_verify(store, qf, queries[b], top_ids,
-                                            params)
+        if host_fetch is None:
+            ids, dists, io, nv = _rerank_verify(store, qf, queries[b],
+                                                top_ids, params)
+        else:
+            tid = np.asarray(top_ids)
+            rec = host_fetch(np.where(tid >= 0, tid, 0))
+            ids, dists, io, nv = _verify_fetched(
+                qf, queries[b], top_ids, jnp.asarray(rec["vectors"]),
+                jnp.asarray(rec["rec_labels"]),
+                jnp.asarray(rec["rec_values"]), params, store.pages_std)
         out_ids.append(ids)
         out_d.append(dists)
         io_pages[b] = pages + int(io)

@@ -9,7 +9,10 @@ cost of one record fetch without / with the densified 2-hop list; in-filtering
 reads the dense record, pre-/post-filtering the standard one.
 
 On a TPU pod the arrays are sharded over the `model` mesh axis (see
-core/distributed.py); here they are plain device arrays.
+core/distributed.py); here they are plain device arrays. On the disk
+backend this exact layout is materialized as page-aligned slab files
+(``storage/slab.py``, docs/storage.md) and the device tier holds only a
+1-row stub carrying the shapes and page counts.
 """
 from __future__ import annotations
 

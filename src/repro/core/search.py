@@ -91,6 +91,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import faults as faults_mod
+from repro.core import io_sim
 from repro.core import pq as pq_mod
 from repro.core.faults import FaultPlan
 from repro.core.records import RecordStore
@@ -117,12 +118,15 @@ class SearchParams:
     mode: str = "spec_in"   # 'post' | 'spec_in' | 'strict_in'
     l_valid: int = 0        # early-exit once this many verified-valid found
                             # (0 -> defaults to l_search)
-    prefetch_depth: int = 2  # record slabs in flight per query: 2 = the
-                            # double-buffered loop (next hop's fetch issued
-                            # behind the current hop's compute), 1 = model
-                            # the serial issue order. The executed fetch
-                            # set is identical either way — the knob feeds
-                            # io_sim.IOModel.latency_us, never results.
+    prefetch_depth: int = 2  # record slabs in flight per query: 1 models
+                            # the serial issue order, 2 the double-buffered
+                            # loop (next hop's fetch issued behind the
+                            # current hop's compute), >2 widens the disk
+                            # tier's real read-ahead window
+                            # (storage/disk.py). The executed fetch set is
+                            # identical at any depth — the knob feeds
+                            # io_sim.IOModel.latency_us and the cache
+                            # warmer, never results.
     fault_plan: FaultPlan | None = None
                             # seeded fault injection on the frontier slab
                             # reads (core/faults.py): failed/corrupted
@@ -133,7 +137,12 @@ class SearchParams:
 
     def __post_init__(self):
         assert self.mode in ("post", "spec_in", "strict_in")
-        assert self.prefetch_depth in (1, 2)
+        # depth is bounded by the modeled device queue depth: more slabs
+        # in flight than the device sustains would claim overlap the
+        # latency model (and the real read-ahead) cannot deliver
+        assert 1 <= self.prefetch_depth <= io_sim.IOModel.parallelism, (
+            f"prefetch_depth={self.prefetch_depth} outside "
+            f"[1, IOModel.parallelism={io_sim.IOModel.parallelism}]")
 
 
 class SearchResult(NamedTuple):
@@ -530,7 +539,21 @@ def _hop_step(store, codes, mem, params, distance_fn, fetch_fn, ctx, mc,
         ok = ok_approx & fresh
         approx_c = counters[:, 2] + jnp.sum(live, axis=1)
     else:  # strict_in: read every fresh neighbor's attrs from "SSD"
-        nrec = fetch_fn(store, safe_cand.reshape(-1))
+        if getattr(fetch_fn, "wants_ctx", False):
+            # disk tier: consult the device-resident bloom/bucket words
+            # BEFORE any attribute page is read (paper's gated I/O). The
+            # gate is a no-false-negative superset, so a gated-out row's
+            # poisoned attributes (labels −1, values NaN) fail exact
+            # membership exactly where the real attributes would —
+            # bit-identical results, measurably fewer page reads
+            # (snapshot counters: gated_skips / attr_probes)
+            gate = jax.vmap(is_member_approx, in_axes=(0, 0, None))(
+                qfilters, safe_cand, mem)
+            nrec = fetch_fn(store, safe_cand.reshape(-1),
+                            need=fresh.reshape(-1),
+                            gate=gate.reshape(-1), attrs_only=True)
+        else:
+            nrec = fetch_fn(store, safe_cand.reshape(-1))
         n_rl = nrec["rec_labels"].reshape(B, W * C, -1)
         n_rv = nrec["rec_values"].reshape(B, W * C, store.n_fields)
         ok = jax.vmap(is_member)(qfilters, n_rl, n_rv) & fresh
@@ -620,9 +643,23 @@ def _hop_loop(store, codes, mem, params, distance_fn, fetch_fn, ctx, st,
     else:
         mc = None
 
+    # extended fetch protocol (storage/disk.py): a fetch_fn marked
+    # ``wants_ctx`` receives per-row hop counters (the disk tier's fault
+    # draws must key on the same (id, hop) pairs as the traced ladder),
+    # row liveness (dead rows skip real I/O), and the record flavor —
+    # resolved statically, so the default local/distributed fetch traces
+    # exactly as before
+    ctx_fetch = getattr(fetch_fn, "wants_ctx", False)
+
     def issue(st):
-        return fetch_fn(store,
-                        jnp.where(st.cur_live, st.cur_ids, 0).reshape(-1))
+        ids = jnp.where(st.cur_live, st.cur_ids, 0).reshape(-1)
+        if ctx_fetch:
+            return fetch_fn(store, ids,
+                            hops=jnp.repeat(st.counters[:, 3],
+                                            p.beam_width),
+                            live=st.cur_live.reshape(-1),
+                            dense=(p.mode == "spec_in"))
+        return fetch_fn(store, ids)
 
     def cond(carry):
         st, _, i = carry

@@ -1,0 +1,11 @@
+"""Tiered record storage: page-aligned slab files, a clock page cache,
+and bloom-gated reads with measured per-page latency (docs/storage.md).
+"""
+from repro.storage.cache import PageCache
+from repro.storage.disk import DiskRecordStore, StorageConfig
+from repro.storage.slab import (InjectedReadError, SlabChecksumError,
+                                SlabLayout, read_meta, write_slab_file)
+
+__all__ = ["PageCache", "DiskRecordStore", "StorageConfig",
+           "InjectedReadError", "SlabChecksumError", "SlabLayout",
+           "read_meta", "write_slab_file"]

@@ -1,0 +1,520 @@
+"""DiskRecordStore — the disk tier behind the search loop's fetch hook.
+
+Tiers (docs/storage.md):
+
+* **device**: PQ codes, bloom/bucket words (``InMemory``) and the search
+  state — everything the hop loop touches per candidate *before* paying
+  a page read;
+* **host**: the page cache (``cache.PageCache``) + attribute summaries
+  (label postings, sorted range indexes);
+* **disk**: page-aligned record slabs (``slab.py``), read with
+  ``os.pread`` and timed per run — the samples feed
+  ``IOModel.calibrate_from_samples``.
+
+The search loop never sees this class directly: it calls a *fetch
+callable* (:attr:`DiskRecordStore.fetch_callable`) whose ``wants_ctx``
+attribute opts it into the extended fetch protocol of ``core/search.py``
+— per-row hop counters (for fault draws), liveness (dead rows skip
+I/O), and, on strict-mode attribute probes, a **bloom/bucket gate
+computed on the device tier before any page is read**: a candidate whose
+approximate membership is already False returns poisoned attributes
+(labels −1, values NaN) without touching disk. The gate is a
+no-false-negative superset, so exact verification would have rejected
+the row anyway — results stay bit-identical to the all-resident backend
+while ``gated_skips / attr_probes`` measures the paper's saved I/O.
+
+Fault routing: when a :class:`~repro.core.faults.FaultPlan` is armed,
+frontier reads draw the *same* stateless (record id, hop, attempt)
+hashes as the jitted retry→hedge→degrade ladder (``read_attempt_bad_np``
+is the bit-identical NumPy twin), so a drawn failure here raises a real
+``InjectedReadError`` / CRC mismatch, the retry genuinely re-reads the
+pages (cache invalidated first), and a row that exhausts the ladder
+returns zeros exactly where the device ladder substitutes its ADC
+fallback — degraded rows never have their disk bytes consumed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import faults as faults_mod
+from repro.core.faults import FaultPlan
+from repro.core.records import RecordStore
+from repro.storage import slab as slab_mod
+from repro.storage.cache import PageCache
+from repro.storage.slab import (InjectedReadError, SlabChecksumError,
+                                SlabLayout, SLAB_FILE, read_meta)
+
+_MAX_SAMPLES = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageConfig:
+    """Knobs for the disk tier (facade: ``Index.build(store="disk")``)."""
+    cache_pages: int = 4096            # page-cache capacity (4 KB frames)
+    readahead_per_record: int = 4      # neighbor slabs prefetched per
+                                       # fetched record, × (depth − 1)
+    readahead_batch_cap: int = 64      # max read-ahead pages per fetch call
+    device_budget_bytes: Optional[int] = None
+                                       # declared device-resident budget for
+                                       # record data; None = unchecked
+
+
+class _Counters:
+    FIELDS = ("pages_read", "preads", "records_fetched", "attr_probes",
+              "attr_reads", "gated_skips", "readahead_pages", "faults",
+              "retries", "degraded")
+
+    def __init__(self):
+        for f in self.FIELDS:
+            setattr(self, f, 0)
+
+    def as_dict(self) -> dict:
+        return {f: getattr(self, f) for f in self.FIELDS}
+
+
+class _DiskFetch:
+    """The jit-side fetch callable: hashable, stable per store instance
+    (it is a static jit argument), marked ``wants_ctx`` so the hop loop
+    threads hops/liveness/gate context through."""
+    wants_ctx = True
+
+    def __init__(self, ds: "DiskRecordStore"):
+        self._ds = ds
+
+    def __call__(self, store: RecordStore, ids: jax.Array, *, hops=None,
+                 live=None, dense: bool = True, need=None, gate=None,
+                 attrs_only: bool = False):
+        from jax.experimental import io_callback
+        ds = self._ds
+        lo = ds.layout
+        n = int(ids.shape[0])
+        if attrs_only:
+            shapes = {
+                "rec_labels": jax.ShapeDtypeStruct((n, lo.max_labels),
+                                                   jnp.int32),
+                "rec_values": jax.ShapeDtypeStruct((n, lo.n_fields),
+                                                   jnp.float32),
+            }
+            return io_callback(ds._cb_attrs, shapes, ids, need, gate,
+                               ordered=False)
+        shapes = {
+            "vectors": jax.ShapeDtypeStruct((n, lo.dim), jnp.float32),
+            "neighbors": jax.ShapeDtypeStruct((n, lo.r), jnp.int32),
+            "dense_neighbors": jax.ShapeDtypeStruct((n, lo.r_dense),
+                                                    jnp.int32),
+            "rec_labels": jax.ShapeDtypeStruct((n, lo.max_labels),
+                                               jnp.int32),
+            "rec_values": jax.ShapeDtypeStruct((n, lo.n_fields),
+                                               jnp.float32),
+            "cand_first": jax.ShapeDtypeStruct((n, lo.r + lo.r_dense),
+                                               jnp.bool_),
+        }
+        if hops is None:
+            hops = jnp.zeros(ids.shape, jnp.int32)
+        if live is None:
+            live = jnp.ones(ids.shape, jnp.bool_)
+        cb = functools.partial(ds._cb_fetch, bool(dense))
+        return io_callback(cb, shapes, ids, hops, live, ordered=False)
+
+
+class DiskRecordStore:
+    """Slab-file record store with a clock page cache and measured I/O."""
+
+    def __init__(self, path: str, config: StorageConfig = StorageConfig()):
+        self.path = path
+        self.config = config
+        meta = read_meta(path)
+        self.meta = meta
+        self.layout: SlabLayout = SlabLayout.from_json(meta["layout"])
+        self.n = int(meta["n"])
+        self.pages_std = int(meta["pages_std"])
+        self.pages_dense = int(meta["pages_dense"])
+        self._fd = os.open(os.path.join(path, SLAB_FILE), os.O_RDONLY)
+        self.cache = PageCache(config.cache_pages)
+        self.counters = _Counters()
+        self.samples: list = []        # {"pages", "us", "kind"} measurements
+        self.fault_plan: FaultPlan | None = None
+        self.prefetch_depth: int = 2
+        self.fetch_callable = _DiskFetch(self)
+
+    # -- lifecycle -------------------------------------------------------
+    @classmethod
+    def create(cls, path: str, vectors, neighbors, dense_neighbors,
+               rec_labels, rec_values, cand_first, pages_std: int,
+               pages_dense: int,
+               config: StorageConfig = StorageConfig()) -> "DiskRecordStore":
+        slab_mod.write_slab_file(
+            path, np.asarray(vectors, np.float32),
+            np.asarray(neighbors, np.int32),
+            np.asarray(dense_neighbors, np.int32),
+            np.asarray(rec_labels, np.int32),
+            np.asarray(rec_values, np.float32),
+            np.asarray(cand_first, bool), pages_std, pages_dense)
+        return cls(path, config)
+
+    @classmethod
+    def from_record_store(cls, path: str, store: RecordStore,
+                          n: int | None = None,
+                          config: StorageConfig = StorageConfig()
+                          ) -> "DiskRecordStore":
+        """Spill an in-memory :class:`RecordStore` to slabs (rows may be
+        capacity-padded; ``n`` trims to the live prefix)."""
+        n = store.n if n is None else n
+        cf = store.cand_first
+        if cf is None:
+            from repro.core.records import candidate_first_mask
+            cf = candidate_first_mask(np.asarray(store.neighbors)[:n],
+                                      np.asarray(store.dense_neighbors)[:n])
+        return cls.create(
+            path, np.asarray(store.vectors)[:n],
+            np.asarray(store.neighbors)[:n],
+            np.asarray(store.dense_neighbors)[:n],
+            np.asarray(store.rec_labels)[:n],
+            np.asarray(store.rec_values)[:n], np.asarray(cf)[:n],
+            store.pages_std, store.pages_dense, config)
+
+    def close(self):
+        if self._fd is not None:
+            os.close(self._fd)
+            self._fd = None
+
+    def __del__(self):                          # pragma: no cover
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # -- device-tier stub ------------------------------------------------
+    def stub_store(self) -> RecordStore:
+        """A 1-row :class:`RecordStore` carrying only shapes and the
+        modeled page counts — the device tier holds no record data; every
+        record byte the search consumes flows through the fetch callable."""
+        lo = self.layout
+        return RecordStore(
+            vectors=jnp.zeros((1, lo.dim), jnp.float32),
+            neighbors=jnp.full((1, lo.r), -1, jnp.int32),
+            dense_neighbors=jnp.full((1, lo.r_dense), -1, jnp.int32),
+            rec_labels=jnp.full((1, lo.max_labels), -1, jnp.int32),
+            rec_values=jnp.zeros((1, lo.n_fields), jnp.float32),
+            pages_std=self.pages_std, pages_dense=self.pages_dense,
+            cand_first=jnp.zeros((1, lo.r + lo.r_dense), jnp.bool_))
+
+    @property
+    def file_bytes(self) -> int:
+        return int(self.meta["file_bytes"])
+
+    def stub_bytes(self) -> int:
+        """Device-resident record bytes under the disk backend (the stub)."""
+        s = self.stub_store()
+        return sum(int(np.asarray(a).nbytes) for a in
+                   (s.vectors, s.neighbors, s.dense_neighbors, s.rec_labels,
+                    s.rec_values, s.cand_first))
+
+    # -- page I/O --------------------------------------------------------
+    def _read_run(self, first_pid: int, n_pages: int, readahead: bool,
+                  record_sample: bool = True) -> bytes:
+        pb = self.layout.page_bytes
+        t0 = time.perf_counter()
+        data = os.pread(self._fd, n_pages * pb, first_pid * pb)
+        us = (time.perf_counter() - t0) * 1e6
+        self.counters.preads += 1
+        self.counters.pages_read += n_pages
+        if record_sample and len(self.samples) < _MAX_SAMPLES:
+            self.samples.append({"pages": n_pages, "us": us,
+                                 "kind": "serial"})
+        if len(data) != n_pages * pb:
+            raise IOError(f"short read at page {first_pid}")
+        for i in range(n_pages):
+            self.cache.put(first_pid + i, data[i * pb:(i + 1) * pb],
+                           readahead=readahead)
+        return data
+
+    def _get_pages(self, pids: list, readahead: bool = False) -> dict:
+        """pid → page bytes, filling misses with contiguous pread runs."""
+        out, missing = {}, []
+        for pid in pids:
+            hit = self.cache.get(pid)
+            if hit is None:
+                missing.append(pid)
+            else:
+                out[pid] = hit
+        missing.sort()
+        i = 0
+        while i < len(missing):
+            j = i
+            while j + 1 < len(missing) and missing[j + 1] == missing[j] + 1:
+                j += 1
+            run = self._read_run(missing[i], j - i + 1, readahead)
+            pb = self.layout.page_bytes
+            for k, pid in enumerate(missing[i:j + 1]):
+                out[pid] = run[k * pb:(k + 1) * pb]
+            i = j + 1
+        return out
+
+    def _slab_page_ids(self, rid: int, dense: bool) -> list:
+        lo = self.layout
+        base = rid * lo.slab_pages
+        n = lo.slab_pages if (dense and lo.dense_pages) else lo.std_pages
+        return [base + i for i in range(n)]
+
+    def _read_record(self, rid: int, dense: bool,
+                     corrupt: bool = False) -> dict:
+        """One record through the cache; CRC-verified decode. ``corrupt``
+        flips a byte post-read (in-flight corruption) so the checksum
+        path genuinely fires."""
+        lo = self.layout
+        pids = self._slab_page_ids(rid, dense)
+        pages = self._get_pages(pids)
+        std = b"".join(pages[p] for p in pids[:lo.std_pages])
+        if corrupt:
+            std = bytes([std[0] ^ 0xFF]) + std[1:]
+        rec = slab_mod.decode_std(lo, std)
+        if dense and lo.dense_pages:
+            dblk = b"".join(pages[p] for p in pids[lo.std_pages:])
+            rec["dense_neighbors"] = slab_mod.decode_dense(lo, dblk)
+        else:
+            rec["dense_neighbors"] = np.full(lo.r_dense, -1, np.int32)
+        return rec
+
+    # -- fetch (frontier records) ---------------------------------------
+    def fetch(self, ids: np.ndarray, hops: np.ndarray | None = None,
+              live: np.ndarray | None = None, dense: bool = True,
+              track: bool = True) -> dict:
+        """Batch record fetch with the fault ladder and read-ahead.
+
+        Dead rows (``live`` False) are skipped — the hop loop fully masks
+        them downstream, so zeros are never consumed. Returns a dict of
+        np arrays matching ``search.local_fetch``'s contract.
+        """
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        n = ids.size
+        lo = self.layout
+        out = {
+            "vectors": np.zeros((n, lo.dim), np.float32),
+            "neighbors": np.full((n, lo.r), -1, np.int32),
+            "dense_neighbors": np.full((n, lo.r_dense), -1, np.int32),
+            "rec_labels": np.full((n, lo.max_labels), -1, np.int32),
+            "rec_values": np.zeros((n, lo.n_fields), np.float32),
+            "cand_first": np.zeros((n, lo.r + lo.r_dense), bool),
+        }
+        live = np.ones(n, bool) if live is None else \
+            np.asarray(live, bool).reshape(-1)
+        plan = self.fault_plan
+        faulted = (plan is not None and plan.reads_faulty
+                   and hops is not None)
+        if faulted:
+            hops = np.asarray(hops, np.int64).reshape(-1)
+            fail, corrupt = _attempt_draws(ids, hops, plan)
+        pages_before = self.counters.pages_read
+        t0 = time.perf_counter()
+        n_live = 0
+        for i in range(n):
+            if not live[i]:
+                continue
+            n_live += 1
+            rid = int(ids[i])
+            rec = None
+            if not faulted:
+                rec = self._read_record(rid, dense)
+            else:
+                for a in range(plan.attempts):
+                    if a > 0:
+                        self.counters.retries += 1
+                        self.cache.invalidate(self._slab_page_ids(rid,
+                                                                  dense))
+                    try:
+                        if fail[a, i]:
+                            # the read was issued and the pages transferred
+                            # before the device reported failure — charge
+                            # them, then walk the ladder
+                            self._read_record(rid, dense)
+                            raise InjectedReadError(
+                                f"injected read failure: record {rid}")
+                        rec = self._read_record(rid, dense,
+                                                corrupt=bool(corrupt[a, i]))
+                        break
+                    except (InjectedReadError, SlabChecksumError):
+                        self.counters.faults += 1
+                        self.cache.invalidate(self._slab_page_ids(rid,
+                                                                  dense))
+                        rec = None
+                if rec is None:
+                    # ladder exhausted: the device ladder substitutes ADC
+                    # distance/approx membership and skips expansion for
+                    # this row, so these zeros are never consumed
+                    self.counters.degraded += 1
+                    continue
+            out["vectors"][i] = rec["vector"]
+            out["neighbors"][i] = rec["neighbors"]
+            out["dense_neighbors"][i] = rec["dense_neighbors"]
+            out["rec_labels"][i] = rec["rec_labels"]
+            out["rec_values"][i] = rec["rec_values"]
+            out["cand_first"][i] = rec["cand_first"]
+        if track:
+            self.counters.records_fetched += n_live
+            batch_pages = self.counters.pages_read - pages_before
+            if n_live > 1 and batch_pages > 0 and \
+                    len(self.samples) < _MAX_SAMPLES:
+                self.samples.append(
+                    {"pages": batch_pages,
+                     "us": (time.perf_counter() - t0) * 1e6,
+                     "kind": "batch"})
+            if self.prefetch_depth >= 2:
+                self._readahead(out["neighbors"], live, dense)
+        return out
+
+    def _readahead(self, neighbors: np.ndarray, live: np.ndarray,
+                   dense: bool):
+        """Real read-ahead driven by ``prefetch_depth``: warm the cache
+        with the just-fetched records' nearest out-neighbors — the ids
+        most likely to be the next frontier. Depth scales the per-record
+        window; correctness is cache-transparent either way."""
+        cfg = self.config
+        per = cfg.readahead_per_record * (self.prefetch_depth - 1)
+        if per <= 0:
+            return
+        budget = cfg.readahead_batch_cap
+        for i in range(neighbors.shape[0]):
+            if budget <= 0:
+                break
+            if not live[i]:
+                continue
+            taken = 0
+            for nid in neighbors[i]:
+                if taken >= per or budget <= 0:
+                    break
+                if nid < 0:
+                    continue
+                pids = [p for p in self._slab_page_ids(int(nid), dense)
+                        if not self.cache.contains(p)]
+                if not pids:
+                    continue
+                before = self.counters.pages_read
+                self._get_pages(pids, readahead=True)
+                got = self.counters.pages_read - before
+                self.counters.readahead_pages += got
+                budget -= got
+                taken += 1
+
+    # -- attribute probes (strict in-filtering) --------------------------
+    def read_attrs(self, ids: np.ndarray, need: np.ndarray,
+                   gate: np.ndarray) -> dict:
+        """Bloom-gated attribute page reads.
+
+        ``need`` marks rows the strict hop actually verifies; ``gate`` is
+        the device-tier approximate membership computed *before* this
+        call. A needed row whose gate is False skips its page read and
+        returns poisoned attributes (labels −1, values NaN) — exact
+        verification would reject it anyway (no-false-negative superset),
+        so results are bit-identical while the page read is saved.
+        """
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        need = np.asarray(need, bool).reshape(-1)
+        gate = np.asarray(gate, bool).reshape(-1)
+        n = ids.size
+        lo = self.layout
+        labels = np.full((n, lo.max_labels), -1, np.int32)
+        values = np.full((n, lo.n_fields), np.nan, np.float32)
+        self.counters.attr_probes += int(need.sum())
+        self.counters.gated_skips += int((need & ~gate).sum())
+        for i in np.nonzero(need & gate)[0]:
+            rid = int(ids[i])
+            pid = rid * lo.slab_pages + lo.attr_page
+            page = self._get_pages([pid])[pid]
+            attrs = slab_mod.decode_attrs(lo, page)
+            labels[i] = attrs["rec_labels"]
+            values[i] = attrs["rec_values"]
+            self.counters.attr_reads += 1
+        return {"rec_labels": labels, "rec_values": values}
+
+    # -- io_callback endpoints ------------------------------------------
+    def _cb_fetch(self, dense: bool, ids, hops, live) -> dict:
+        return self.fetch(np.asarray(ids), np.asarray(hops),
+                          np.asarray(live), dense=dense)
+
+    def _cb_attrs(self, ids, need, gate) -> dict:
+        return self.read_attrs(np.asarray(ids), np.asarray(need),
+                               np.asarray(gate))
+
+    # -- host-side readers (prefilter re-rank, ground truth) -------------
+    def fetch_host(self, ids: np.ndarray, track: bool = True) -> dict:
+        """Plain std-block fetch for host-driven paths (no faults)."""
+        return self.fetch(ids, hops=None, live=None, dense=False,
+                          track=track)
+
+    def read_vectors(self, ids: np.ndarray, track: bool = False
+                     ) -> np.ndarray:
+        return self.fetch(ids, dense=False, track=track)["vectors"]
+
+    def scan_records(self, start: int = 0, stop: int | None = None) -> dict:
+        """Sequential full scan for evaluation paths (ground truth): reads
+        std blocks straight off the file, bypassing cache and counters so
+        an offline scan doesn't evict the serving working set."""
+        stop = self.n if stop is None else min(stop, self.n)
+        lo = self.layout
+        m = max(0, stop - start)
+        out = {"vectors": np.zeros((m, lo.dim), np.float32),
+               "rec_labels": np.full((m, lo.max_labels), -1, np.int32),
+               "rec_values": np.zeros((m, lo.n_fields), np.float32)}
+        sb = lo.slab_pages * lo.page_bytes
+        for i in range(m):
+            blk = os.pread(self._fd, lo.std_bytes, (start + i) * sb)
+            rec = slab_mod.decode_std(lo, blk)
+            out["vectors"][i] = rec["vector"]
+            out["rec_labels"][i] = rec["rec_labels"]
+            out["rec_values"][i] = rec["rec_values"]
+        return out
+
+    # -- observability ---------------------------------------------------
+    def snapshot(self) -> dict:
+        c = self.counters.as_dict()
+        c.update(self.cache.counters())
+        tot = c["hits"] + c["misses"]
+        c["hit_rate"] = c["hits"] / tot if tot else 0.0
+        per_page = sorted(s["us"] / s["pages"] for s in self.samples
+                          if s["kind"] == "serial")
+        if per_page:
+            c["p50_page_us"] = per_page[len(per_page) // 2]
+            c["p95_page_us"] = per_page[min(len(per_page) - 1,
+                                            int(len(per_page) * 0.95))]
+        else:
+            c["p50_page_us"] = c["p95_page_us"] = 0.0
+        c["n_samples"] = len(self.samples)
+        return c
+
+    @staticmethod
+    def delta(before: dict, after: dict) -> dict:
+        """Counter delta between two snapshots (rates recomputed)."""
+        keys = _Counters.FIELDS + ("hits", "misses", "evictions",
+                                   "readahead_hits")
+        d = {k: after.get(k, 0) - before.get(k, 0) for k in keys}
+        tot = d["hits"] + d["misses"]
+        d["hit_rate"] = d["hits"] / tot if tot else 0.0
+        d["p50_page_us"] = after.get("p50_page_us", 0.0)
+        return d
+
+    def reset_counters(self):
+        self.counters = _Counters()
+        self.cache.hits = self.cache.misses = 0
+        self.cache.evictions = self.cache.readahead_hits = 0
+        self.samples = []
+
+
+def _attempt_draws(ids: np.ndarray, hops: np.ndarray,
+                   plan: FaultPlan) -> tuple[np.ndarray, np.ndarray]:
+    """(attempts, n) bool draws — fail / corrupt — via the NumPy twin of
+    the device ladder's stateless hash, so the host read path and the
+    jitted counter/degrade logic see the same fault pattern."""
+    fail = np.stack([faults_mod.read_fail_np(ids, hops, a, plan)
+                     for a in range(plan.attempts)])
+    corrupt = np.stack([faults_mod.read_corrupt_np(ids, hops, a, plan)
+                        for a in range(plan.attempts)])
+    return fail, corrupt

@@ -1,0 +1,456 @@
+"""Tiered record storage (storage/): slab format, clock page cache,
+bloom-gated reads, fault routing, and the disk-backend facade.
+
+Core property throughout: the disk backend is an *I/O path*, never a
+*result path* — every suite here pins some disk configuration (cache
+size, read-ahead depth, fault plan, eviction pressure) against the
+all-resident device backend and asserts bit-identical ids and distances.
+"""
+import copy
+import dataclasses
+import glob
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (Index, IndexConfig, SearchConfig, SearchRequest,
+                       Session, SessionConfig, Tag)
+from repro.ckpt.checkpoint import CheckpointCorruptionError
+from repro.core import search as search_mod
+from repro.core.faults import (FaultPlan, read_attempt_bad,
+                               read_attempt_bad_np)
+from repro.core.io_sim import IOModel
+from repro.storage import (DiskRecordStore, PageCache, SlabLayout,
+                           StorageConfig)
+from repro.storage import slab as slab_mod
+
+pytestmark = pytest.mark.disk
+
+POLICIES = ("strict_in", "post", "speculative", "strict_pre")
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_compile_state():
+    """Drop executables accumulated by the rest of the suite.
+
+    This module compiles the pipelined search with an embedded io_callback
+    custom call; doing that on top of several hundred live XLA executables
+    has produced flaky CPU backend_compile segfaults on single-core runners.
+    The suite orders this file last, so clearing costs no downstream
+    recompiles — the module's own fixtures compile fresh either way.
+    """
+    import gc
+    import jax
+    jax.clear_caches()
+    gc.collect()
+
+
+# ---------------------------------------------------------------------------
+# Unit: slab encode/decode (fast)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fast
+def test_slab_roundtrip_and_crc():
+    rng = np.random.default_rng(0)
+    lo = SlabLayout(dim=48, r=16, r_dense=100, max_labels=8, n_fields=2)
+    vec = rng.normal(0, 1, 48).astype(np.float32)
+    nbrs = rng.integers(-1, 500, 16).astype(np.int32)
+    dense = rng.integers(-1, 500, 100).astype(np.int32)
+    labels = rng.integers(-1, 60, 8).astype(np.int32)
+    values = rng.uniform(0, 1, 2).astype(np.float32)
+    cf = rng.integers(0, 2, 116).astype(bool)
+    blob = slab_mod.encode_slab(lo, vec, nbrs, dense, labels, values, cf)
+    assert len(blob) == lo.slab_bytes and lo.slab_bytes % lo.page_bytes == 0
+
+    rec = slab_mod.decode_std(lo, blob[:lo.std_bytes])
+    np.testing.assert_array_equal(rec["vector"], vec)
+    np.testing.assert_array_equal(rec["neighbors"], nbrs)
+    np.testing.assert_array_equal(rec["rec_labels"], labels)
+    np.testing.assert_array_equal(rec["rec_values"], values)
+    np.testing.assert_array_equal(rec["cand_first"], cf)
+    np.testing.assert_array_equal(
+        slab_mod.decode_dense(lo, blob[lo.std_bytes:]), dense)
+
+    # attr probe decodes from the std block's final page alone
+    pg = blob[lo.attr_page * lo.page_bytes:(lo.attr_page + 1) * lo.page_bytes]
+    attrs = slab_mod.decode_attrs(lo, pg)
+    np.testing.assert_array_equal(attrs["rec_labels"], labels)
+    np.testing.assert_array_equal(attrs["rec_values"], values)
+
+    # a bit flip in any region is a *detected* checksum failure
+    for off in (0, lo.tail_off + 3):
+        bad = bytearray(blob)
+        bad[off] ^= 0xFF
+        with pytest.raises(slab_mod.SlabChecksumError):
+            slab_mod.decode_std(lo, bytes(bad[:lo.std_bytes]))
+    bad = bytearray(blob)
+    bad[lo.std_bytes] ^= 0xFF
+    with pytest.raises(slab_mod.SlabChecksumError):
+        slab_mod.decode_dense(lo, bytes(bad[lo.std_bytes:]))
+
+
+@pytest.mark.fast
+def test_slab_layout_tail_fits_one_page():
+    lo = SlabLayout(dim=128, r=64, r_dense=500, max_labels=16, n_fields=4)
+    assert lo.tail_bytes <= lo.page_bytes
+    assert lo.attr_page == lo.std_pages - 1
+    assert lo.slab_pages == lo.std_pages + lo.dense_pages
+    # round-trip through the meta encoding
+    assert SlabLayout.from_json(lo.to_json()).slab_bytes == lo.slab_bytes
+
+
+# ---------------------------------------------------------------------------
+# Unit: clock page cache (fast)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fast
+def test_page_cache_clock_eviction_and_counters():
+    c = PageCache(4)
+    for pid in range(4):
+        c.put(pid, bytes([pid]))
+    assert c.get(1) == b"\x01"
+    # every fresh frame gets one second chance: the sweep clears all four
+    # ref bits, wraps, and evicts the oldest (0)
+    c.put(4, b"\x04")
+    assert c.evictions == 1 and not c.contains(0) and c.contains(1)
+    assert c.get(0) is None
+    snap = c.counters()
+    assert snap["hits"] == 1 and snap["misses"] == 1
+    assert snap["resident_pages"] == 4 and snap["capacity_pages"] == 4
+
+    # a re-referenced frame (1) survives the next eviction; a cold one dies
+    c.get(1)
+    c.put(5, b"\x05")
+    assert c.contains(1) and c.evictions == 2
+
+    # readahead provenance: only the first demand hit counts
+    c.put(7, b"\x07", readahead=True)
+    assert c.readahead_hits == 0
+    c.get(7); c.get(7)
+    assert c.readahead_hits == 1
+
+    # invalidate drops frames; stale ring slots are reaped by the sweep
+    before = len(c)
+    c.invalidate([1, 7])
+    assert not c.contains(1) and not c.contains(7) and len(c) == before - 2
+    for pid in range(10, 20):
+        c.put(pid, b"x")
+    assert len(c) <= 4 and c.contains(19)
+
+
+# ---------------------------------------------------------------------------
+# Unit: IOModel calibration from measured samples (fast)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fast
+def test_calibrate_from_samples_recovers_synthetic_device():
+    t_page, par = 80.0, 8
+    serial = [{"pages": p, "us": p * t_page, "kind": "serial"}
+              for p in (1, 1, 2, 3, 1)]
+    batch = [{"pages": p, "us": -(-p // par) * t_page, "kind": "batch"}
+             for p in (8, 16, 24, 64, 128, 40)]
+    m = IOModel.calibrate_from_samples(serial + batch)
+    assert m.t_page_us == pytest.approx(t_page)
+    assert m.parallelism == par
+
+    # median fit shrugs off one OS-cache outlier
+    noisy = serial + [{"pages": 1, "us": 50000.0, "kind": "serial"}]
+    assert IOModel.calibrate_from_samples(noisy).t_page_us == \
+        pytest.approx(t_page)
+
+    # empty families fall back to the class defaults
+    m0 = IOModel.calibrate_from_samples([])
+    assert m0.t_page_us == IOModel.t_page_us
+    assert m0.parallelism == IOModel.parallelism
+
+
+@pytest.mark.fast
+def test_prefetch_depth_validation():
+    search_mod.SearchParams(l_search=16, prefetch_depth=4)      # widened: ok
+    with pytest.raises(AssertionError, match="prefetch_depth"):
+        search_mod.SearchParams(l_search=16,
+                                prefetch_depth=IOModel.parallelism + 1)
+    with pytest.raises(AssertionError, match="prefetch_depth"):
+        search_mod.SearchParams(l_search=16, prefetch_depth=0)
+    # the per-request override carries through SearchRequest
+    assert SearchRequest(query=np.zeros(4, np.float32),
+                         prefetch_depth=3).overrides()["prefetch_depth"] == 3
+
+
+@pytest.mark.fast
+def test_fault_draw_twins_bit_identical():
+    """The host read path and the jitted ladder must see the same draws."""
+    import jax.numpy as jnp
+    plan = FaultPlan(read_fail_rate=0.2, corrupt_rate=0.1, seed=11)
+    ids = np.arange(4096)
+    hops = ids % 17
+    for a in range(plan.attempts):
+        dev = np.asarray(read_attempt_bad(jnp.asarray(ids), jnp.asarray(hops),
+                                          a, plan))
+        host = read_attempt_bad_np(ids, hops, a, plan)
+        np.testing.assert_array_equal(dev, host)
+
+
+# ---------------------------------------------------------------------------
+# Integration: disk backend vs device backend
+# ---------------------------------------------------------------------------
+
+N = 600
+DIM = 24
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(7)
+    vectors = rng.normal(0, 1, (N, DIM)).astype(np.float32)
+    metadata = [{"cat": sorted(set(int(x) for x in
+                               rng.integers(0, 8, rng.integers(1, 4)))),
+                 "value": float(v)}
+                for v in rng.uniform(0, 100, N)]
+    return vectors, metadata
+
+
+CFG = IndexConfig(r=12, r_dense=60, l_build=24, pq_m=8)
+DEFAULTS = SearchConfig(k=5, l=16, max_hops=60)
+
+
+@pytest.fixture(scope="module")
+def mem_index(corpus):
+    vectors, metadata = corpus
+    return Index.build(vectors, metadata, CFG, defaults=DEFAULTS)
+
+
+@pytest.fixture(scope="module")
+def slab_dir(tmp_path_factory, mem_index):
+    """Slabs spilled once from the built engine; reopened per test with
+    different StorageConfigs."""
+    path = str(tmp_path_factory.mktemp("slabs"))
+    DiskRecordStore.from_record_store(path, mem_index.engine.store,
+                                      n=mem_index.engine.n).close()
+    return path
+
+
+def _requests(vectors, n=6, policies=POLICIES):
+    return [SearchRequest(query=vectors[i] + 0.01,
+                          filter=(Tag("cat") == 2), policy=pol)
+            for i in range(n) for pol in policies]
+
+
+def _disk_twin(mem_index, slab_dir, config=StorageConfig()):
+    """A disk-backend clone of the device index sharing graph/PQ state —
+    only the record tier differs, which is exactly what's under test."""
+    twin = copy.copy(mem_index)
+    twin.engine = copy.copy(mem_index.engine)
+    twin.engine.attach_disk_store(DiskRecordStore(slab_dir, config))
+    return twin
+
+
+def _assert_identical(res_a, res_b):
+    for a, b in zip(res_a, res_b):
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.dists, b.dists)
+
+
+def test_disk_bit_identical_across_policies(corpus, mem_index, slab_dir):
+    vectors, _ = corpus
+    reqs = _requests(vectors)
+    dsk = _disk_twin(mem_index, slab_dir)
+    _assert_identical(mem_index.search_batch(reqs, with_metadata=False),
+                      dsk.search_batch(reqs, with_metadata=False))
+    snap = dsk.engine.disk_store.snapshot()
+    assert snap["pages_read"] > 0 and snap["records_fetched"] > 0
+    assert snap["n_samples"] > 0 and snap["p50_page_us"] > 0.0
+
+
+def test_eviction_order_never_changes_results(corpus, mem_index, slab_dir):
+    """Sweep cache capacity from eviction-heavy to all-resident: results
+    must be bit-identical throughout (the cache is transparent)."""
+    vectors, _ = corpus
+    reqs = _requests(vectors, n=4, policies=("strict_in", "post"))
+    want = mem_index.search_batch(reqs, with_metadata=False)
+    evictions = []
+    for cap in (8, 64, 1 << 20):
+        dsk = _disk_twin(mem_index, slab_dir,
+                         StorageConfig(cache_pages=cap))
+        _assert_identical(want, dsk.search_batch(reqs, with_metadata=False))
+        evictions.append(dsk.engine.disk_store.snapshot()["evictions"])
+    assert evictions[0] > 0          # the tiny cache really thrashed
+    assert evictions[-1] == 0        # the big one held everything
+
+
+def test_bloom_gated_attr_reads_skip_pages(corpus, mem_index, slab_dir):
+    vectors, _ = corpus
+    reqs = _requests(vectors, n=6, policies=("strict_in",))
+    dsk = _disk_twin(mem_index, slab_dir)
+    _assert_identical(mem_index.search_batch(reqs, with_metadata=False),
+                      dsk.search_batch(reqs, with_metadata=False))
+    snap = dsk.engine.disk_store.snapshot()
+    assert snap["attr_probes"] > 0
+    assert snap["gated_skips"] > 0                     # pages actually saved
+    assert snap["attr_reads"] + snap["gated_skips"] == snap["attr_probes"]
+
+
+def test_readahead_depth_changes_io_not_results(corpus, mem_index, slab_dir):
+    vectors, _ = corpus
+    want = mem_index.search_batch(_requests(vectors, n=4), with_metadata=False)
+    snaps = {}
+    for depth in (1, 3):
+        reqs = [dataclasses.replace(r, prefetch_depth=depth)
+                for r in _requests(vectors, n=4)]
+        dsk = _disk_twin(mem_index, slab_dir)
+        _assert_identical(want, dsk.search_batch(reqs, with_metadata=False))
+        snaps[depth] = dsk.engine.disk_store.snapshot()
+    assert snaps[1]["readahead_pages"] == 0
+    assert snaps[3]["readahead_pages"] > 0
+    assert snaps[3]["readahead_hits"] > 0    # the warmed pages got used
+
+
+def test_fault_plan_routes_through_real_reads(corpus, mem_index, slab_dir):
+    """Same plan, both backends: identical results AND identical ladder
+    accounting — the disk tier's genuine IOError/CRC failures follow the
+    jitted retry→hedge→degrade ladder draw-for-draw."""
+    vectors, _ = corpus
+    plan = FaultPlan(read_fail_rate=0.08, corrupt_rate=0.04, seed=11)
+    reqs = _requests(vectors, n=4,
+                     policies=("strict_in", "post", "speculative"))
+    scfg = dataclasses.replace(DEFAULTS, fault_plan=plan)
+    mem_f = copy.copy(mem_index)
+    mem_f.defaults = scfg
+    dsk = _disk_twin(mem_index, slab_dir)
+    dsk.defaults = scfg
+    rm = mem_f.search_batch(reqs, with_metadata=False)
+    rd = dsk.search_batch(reqs, with_metadata=False)
+    _assert_identical(rm, rd)
+    for a, b in zip(rm, rd):
+        assert (a.stats.faults, a.stats.retries, a.stats.degraded) == \
+            (b.stats.faults, b.stats.retries, b.stats.degraded)
+    snap = dsk.engine.disk_store.snapshot()
+    assert snap["faults"] > 0 and snap["retries"] > 0
+    # moderate rates: the ladder always recovered -> answers are exact,
+    # never fallback-substituted
+    assert snap["degraded"] == 0
+    assert all(r.stats.degraded == 0 for r in rd)
+
+
+def test_ladder_exhaustion_degrades_identically(corpus, mem_index, slab_dir):
+    vectors, _ = corpus
+    plan = FaultPlan(read_fail_rate=0.7, seed=3, max_retries=1, hedge=False)
+    scfg = dataclasses.replace(DEFAULTS, fault_plan=plan)
+    reqs = _requests(vectors, n=3, policies=("strict_in", "post"))
+    mem_f = copy.copy(mem_index)
+    mem_f.defaults = scfg
+    dsk = _disk_twin(mem_index, slab_dir)
+    dsk.defaults = scfg
+    rm = mem_f.search_batch(reqs, with_metadata=False)
+    rd = dsk.search_batch(reqs, with_metadata=False)
+    _assert_identical(rm, rd)
+    assert dsk.engine.disk_store.snapshot()["degraded"] > 0
+    assert sum(r.stats.degraded for r in rd) > 0
+
+
+def test_query_stats_and_session_surface_disk_counters(corpus, mem_index,
+                                                       slab_dir):
+    vectors, _ = corpus
+    dsk = _disk_twin(mem_index, slab_dir)
+    _, stats = dsk.search_batch(_requests(vectors, n=2), with_stats=True,
+                                with_metadata=False)
+    assert stats.disk is not None
+    assert stats.disk["pages_read"] >= 0 and "hit_rate" in stats.disk
+    # device backend reports no disk block
+    _, stats_m = mem_index.search_batch(_requests(vectors, n=2),
+                                        with_stats=True, with_metadata=False)
+    assert stats_m.disk is None
+
+    with Session(dsk, SessionConfig(max_batch=4)) as s:
+        h = s.submit(SearchRequest(query=vectors[0],
+                                   filter=(Tag("cat") == 2)))
+        h.result()
+        assert s.disk_stats()["records_fetched"] > 0
+    assert Session(mem_index).disk_stats() is None
+
+
+def test_calibrate_io_fits_model_from_measured_reads(corpus, mem_index,
+                                                     slab_dir):
+    vectors, _ = corpus
+    dsk = _disk_twin(mem_index, slab_dir)
+    assert dsk.engine.calibrate_io() is None           # no samples yet
+    dsk.search_batch(_requests(vectors, n=4), with_metadata=False)
+    model = dsk.engine.calibrate_io()
+    assert model is not None and model.t_page_us > 0.0
+    assert 1 <= model.parallelism <= 256
+    assert dsk.engine.io_model is model
+
+
+def test_ground_truth_matches_device_backend(corpus, mem_index, slab_dir):
+    vectors, _ = corpus
+    dsk = _disk_twin(mem_index, slab_dir)
+    for flt in (Tag("cat") == 2, None):
+        req = SearchRequest(query=vectors[3] + 0.01, filter=flt, k=5)
+        np.testing.assert_array_equal(mem_index.ground_truth(req),
+                                      dsk.ground_truth(req))
+
+
+def test_device_budget_honesty(corpus, mem_index, slab_dir):
+    """The disk backend's device-resident record bytes (the stub) must be
+    tiny; the corpus truly lives on disk (file > any sane budget)."""
+    dsk = _disk_twin(mem_index, slab_dir)
+    ds = dsk.engine.disk_store
+    budget = 64 * 1024
+    assert ds.stub_bytes() < budget < ds.file_bytes
+    # a device-backend store of the same corpus would blow the budget
+    s = mem_index.engine.store
+    dev_bytes = sum(int(np.asarray(a).nbytes) for a in
+                    (s.vectors, s.neighbors, s.dense_neighbors,
+                     s.rec_labels, s.rec_values))
+    assert dev_bytes > budget
+
+
+def test_insert_rejected_on_disk_backend(corpus, mem_index, slab_dir):
+    dsk = _disk_twin(mem_index, slab_dir)
+    with pytest.raises(NotImplementedError, match="disk backend"):
+        dsk.engine.insert(np.zeros((1, DIM), np.float32),
+                          np.array([0, 1]), np.array([0]), 8,
+                          np.zeros(1, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Facade: build(store="disk") + checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def test_index_build_save_load_roundtrip_disk(corpus, tmp_path):
+    vectors, metadata = corpus
+    dsk = Index.build(vectors, metadata, CFG, defaults=DEFAULTS,
+                      store="disk", storage_dir=str(tmp_path / "slabs"))
+    assert dsk.engine.disk_store is not None
+    reqs = _requests(vectors, n=3, policies=("strict_in", "post"))
+    want = dsk.search_batch(reqs, with_metadata=False)
+
+    ck = str(tmp_path / "ckpt")
+    dsk.save(ck)
+    loaded = Index.load(ck)
+    assert loaded.engine.disk_store is not None
+    _assert_identical(want, loaded.search_batch(reqs, with_metadata=False))
+    # metadata round-trips too (resolved off label/range stores)
+    r = loaded.search(SearchRequest(query=vectors[0],
+                                    filter=(Tag("cat") == 2)))
+    for _, _, m in r.matches:
+        cats = m["cat"] if isinstance(m["cat"], list) else [m["cat"]]
+        assert 2 in cats
+
+    # a flipped byte in the checkpointed slab file is a detected
+    # corruption: load must refuse to serve it (single step -> raise)
+    slab = glob.glob(os.path.join(ck, "step_*", "slabs",
+                                  "records.slab"))[0]
+    with open(slab, "r+b") as f:
+        f.seek(4096)
+        f.write(b"\xff" * 4)
+    with pytest.raises(CheckpointCorruptionError):
+        Index.load(ck)
+    assert glob.glob(os.path.join(ck, "*.quarantined"))
+
+
+def test_index_build_rejects_unknown_store(corpus):
+    vectors, metadata = corpus
+    with pytest.raises(ValueError, match="store"):
+        Index.build(vectors[:50], metadata[:50], CFG, store="tape")
