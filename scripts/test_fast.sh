@@ -11,6 +11,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_build --smo
 # default --fault-plan (10% page-fault rate, seed 7) re-runs every mode
 # under injection and asserts the degraded-mode recall floor
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_search --smoke --active-trace --store disk
+# serving-tier smoke: degrade-rung calibration + a tiny Poisson
+# open-loop sweep through the threaded SearchServer (no floors)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serve --smoke
 # light chaos tests (deterministic fault hash, injector, latency model)
 # are marked fast+chaos and ride the -m fast run below; the full chaos
 # property suite is `pytest -m chaos` (tier-1 runs it unmarked too)

@@ -7,7 +7,8 @@ from repro.api.filters import (And, FilterExpr, Num, NumRange, Or, Tag,
 from repro.api.index import Index
 from repro.api.schema import Schema, UnknownFieldError
 from repro.api.session import PendingSearch, Session, SessionConfig
-from repro.api.types import RequestStats, SearchRequest, SearchResult
+from repro.api.types import (DeadlineExceeded, Overloaded, RequestStats,
+                             SearchRequest, SearchResult, ServeError)
 from repro.core.engine import IndexConfig, SearchConfig, recall_at_k
 
 __all__ = [
@@ -16,4 +17,5 @@ __all__ = [
     "Schema", "UnknownFieldError",
     "PendingSearch", "Session", "SessionConfig",
     "RequestStats", "SearchRequest", "SearchResult", "recall_at_k",
+    "ServeError", "Overloaded", "DeadlineExceeded",
 ]

@@ -306,22 +306,55 @@ class Index:
 
     def search_batch(self, requests: Sequence[SearchRequest],
                      with_stats: bool = False,
-                     with_metadata: bool = True):
+                     with_metadata: bool = True,
+                     scfgs: Optional[Sequence[SearchConfig]] = None):
         """Execute a batch through the grouped request path.
 
         Returns list[SearchResult] (plus the raw batched QueryStats when
         ``with_stats``). ``with_metadata=False`` skips the host-side
-        per-hit metadata resolution (benchmark timing paths)."""
+        per-hit metadata resolution (benchmark timing paths). ``scfgs``
+        replaces the per-request config resolution wholesale — the serve
+        tier's degrade ladder passes rung-adjusted configs here while the
+        requests themselves stay untouched."""
         if not requests:
             return ([], QueryStats.empty()) if with_stats else []
+        queries, selectors, scfgs = self._prepare(requests, scfgs)
+        ids, dists, stats = self.engine.execute(queries, selectors, scfgs)
+        return self._assemble(requests, ids, dists, stats, with_stats,
+                              with_metadata)
+
+    def approx_scan_batch(self, requests: Sequence[SearchRequest],
+                          with_stats: bool = False,
+                          with_metadata: bool = True,
+                          scfgs: Optional[Sequence[SearchConfig]] = None):
+        """Execute a batch through the last-rung degrade path (gated
+        full-corpus ADC scan + exact verify — ``engine.approx_scan``).
+        Same surface as :meth:`search_batch`; results are flagged via
+        ``stats.degraded``."""
+        if not requests:
+            return ([], QueryStats.empty()) if with_stats else []
+        queries, selectors, scfgs = self._prepare(requests, scfgs)
+        ids, dists, stats = self.engine.approx_scan(queries, selectors,
+                                                    scfgs)
+        return self._assemble(requests, ids, dists, stats, with_stats,
+                              with_metadata)
+
+    def _prepare(self, requests, scfgs):
         queries = np.stack([np.asarray(r.query, np.float32).reshape(-1)
                             for r in requests])
         if queries.shape[1] > self.dim:
             raise ValueError(f"query dim {queries.shape[1]} exceeds index "
                              f"dim {self.dim}")
         selectors = [self.compile_filter(r.filter) for r in requests]
-        scfgs = [self._resolve_scfg(r) for r in requests]
-        ids, dists, stats = self.engine.execute(queries, selectors, scfgs)
+        if scfgs is None:
+            scfgs = [self._resolve_scfg(r) for r in requests]
+        else:
+            scfgs = list(scfgs)
+            assert len(scfgs) == len(requests)
+        return queries, selectors, scfgs
+
+    def _assemble(self, requests, ids, dists, stats, with_stats,
+                  with_metadata):
         results = []
         for i in range(len(requests)):
             meta = [self.record_metadata(int(x))

@@ -14,6 +14,27 @@ from typing import Optional, Sequence
 import numpy as np
 
 
+class ServeError(RuntimeError):
+    """Base of the serving tier's admission errors (serve/server.py)."""
+
+
+class Overloaded(ServeError):
+    """Rejected with backpressure: the bounded admission queue is full.
+
+    ``retry_after_s`` is the server's predicted drain time for the
+    current backlog — a usable client backoff hint."""
+
+    def __init__(self, msg: str, retry_after_s: float = 0.0):
+        super().__init__(msg)
+        self.retry_after_s = float(retry_after_s)
+
+
+class DeadlineExceeded(ServeError):
+    """Shed: the request's ``deadline_us`` cannot (or did not) hold —
+    predicted completion past the deadline at admission, or the deadline
+    expired while queued."""
+
+
 @dataclasses.dataclass
 class SearchRequest:
     """One filtered top-k query.
@@ -21,6 +42,12 @@ class SearchRequest:
     ``filter`` may be a DSL expression (``repro.api.Tag``/``Num`` algebra),
     a raw engine ``Selector`` (escape hatch), or None for unfiltered
     search. Unset overrides inherit the index defaults.
+
+    ``deadline_us`` is a *serving* attribute, not a search override: a
+    relative completion budget (µs from submission) that the admission
+    controller enforces (serve/server.py). ``None`` — the default — opts
+    out of deadline handling entirely; such requests execute bit-identically
+    to the pre-serving path.
     """
     query: np.ndarray
     filter: object = None
@@ -30,8 +57,11 @@ class SearchRequest:
     max_hops: Optional[int] = None
     beam_width: Optional[int] = None
     prefetch_depth: Optional[int] = None
+    deadline_us: Optional[float] = None
 
     def overrides(self) -> dict:
+        # deadline_us deliberately excluded: it shapes admission and
+        # scheduling, never the resolved SearchConfig
         out = {}
         for f in ("k", "l", "policy", "max_hops", "beam_width",
                   "prefetch_depth"):

@@ -145,6 +145,111 @@ def post_filtering_cost(c: CostInputs,
     return MechanismCost(io, compute)
 
 
+def approx_scan_cost(c: CostInputs, rerank: int) -> MechanismCost:
+    """The serving tier's last-rung degrade path: one gated ADC pass over
+    the full in-memory code tier (every id is a candidate, approximate
+    membership only penalizes the ranking), then exact fetch + verify of
+    the top ``rerank`` ids. No graph traversal, no per-hop round-trips.
+
+    I/O is only the re-rank fetch. The scan's per-id ADC is priced at γ —
+    the same unit the in-path charges for its per-id table-lookup
+    membership checks — because one fused full-corpus pass amortizes far
+    better than the hop loop's small sequential gathers that the per-hop
+    distance-comp unit was measured on."""
+    io = rerank * c.s_r
+    compute = c.gamma * c.n + rerank
+    return MechanismCost(io, compute)
+
+
+# ---------------------------------------------------------------------------
+# Load-degrade ladder (serve tier) — the load-fault analogue of the PR 7
+# I/O fault ladder: each rung trades recall headroom or read-ahead
+# footprint for a strictly lower modeled service cost, and every rung
+# preserves the no-false-negative contract (scaled-L rungs still verify
+# exactly; the scan rung covers every id, its approximate gate only
+# over-admits).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DegradeRung:
+    """One step of the overload ladder, as SearchConfig deltas."""
+    name: str
+    l_scale: float = 1.0          # scales the base pool length L
+    max_hops_scale: float = 1.0   # scales the hop budget
+    hop_chunk: int | None = None  # override (None keeps the config's)
+    prefetch_depth: int | None = None
+    approx: bool = False          # serve via the gated full-scan path
+
+
+DEGRADE_LADDER: tuple = (
+    DegradeRung("full"),
+    # results-invariant first step: shed the speculative read-ahead
+    # footprint and tighten the compaction cadence before touching recall
+    DegradeRung("lean", prefetch_depth=1, hop_chunk=16),
+    DegradeRung("reduced", l_scale=0.75, max_hops_scale=0.5,
+                prefetch_depth=1, hop_chunk=16),
+    DegradeRung("minimal", l_scale=0.5, max_hops_scale=0.25,
+                prefetch_depth=1, hop_chunk=16),
+    DegradeRung("scan", l_scale=0.5, approx=True),
+)
+
+
+def rung_inputs(c: CostInputs, rung: DegradeRung) -> CostInputs:
+    return dataclasses.replace(
+        c, l=max(1, int(round(c.l * rung.l_scale))))
+
+
+def rung_cost(c: CostInputs, rung: DegradeRung, alpha: float = 10.0,
+              beta: float = 1.0, max_pool: int = 1024,
+              base_prefetch: int = 2, rerank: int = 64,
+              calib: "Calibration | None" = None) -> float:
+    """Raw modeled service cost of one query executed at ``rung``.
+
+    This is the number the admission controller scales into µs. The
+    *effective* ladder (``ladder_costs``, running minimum) is what must
+    be — and is, by construction — monotone non-increasing: the
+    scheduler serves at the cheapest rung its pressure level permits,
+    never at a rung the model prices above a lighter one. Read-ahead is priced
+    as (depth − 1) speculative slab fetches per query — the pages a
+    settling query has in flight that overload turns into waste."""
+    ci = rung_inputs(c, rung)
+    if rung.approx:
+        return approx_scan_cost(ci, rerank).total(alpha, beta)
+    route = route_query(ci, alpha, beta, max_pool, calib=calib)
+    depth = base_prefetch if rung.prefetch_depth is None \
+        else rung.prefetch_depth
+    overage = max(0, depth - 1) * c.s_d
+    return route.costs[route.mechanism].total(alpha, beta) + alpha * overage
+
+
+def ladder_costs(c: CostInputs, alpha: float = 10.0, beta: float = 1.0,
+                 max_pool: int = 1024, base_prefetch: int = 2,
+                 rerank: int = 64, calib: "Calibration | None" = None,
+                 effective: bool = True) -> list:
+    """[(rung, cost)] over DEGRADE_LADDER, in ladder order.
+
+    With ``effective`` (the default) each entry is the *effective* cost
+    at that degradation level — the running minimum over rungs 0..i.
+    Pressure level i permits every rung up to i and the scheduler serves
+    at the cheapest permitted rung (``serve/server.py``), so the
+    effective ladder is monotone non-increasing by construction even
+    where a raw rung cost inverts (e.g. the full-corpus scan rung is the
+    cheapest escape hatch only when graph traversal is the expensive
+    side — low selectivity, deep hop budgets — and the scheduler only
+    takes it then). ``effective=False`` returns the raw per-rung costs.
+    """
+    raw = [rung_cost(c, r, alpha, beta, max_pool, base_prefetch,
+                     rerank, calib) for r in DEGRADE_LADDER]
+    if effective:
+        run = []
+        best = float("inf")
+        for v in raw:
+            best = min(best, v)
+            run.append(best)
+        raw = run
+    return list(zip(DEGRADE_LADDER, raw))
+
+
 @dataclasses.dataclass(frozen=True)
 class Route:
     mechanism: str           # 'pre' | 'in' | 'post'

@@ -74,6 +74,34 @@ class SearchConfig:
                               # unmodified clean hot path
 
 
+def apply_rung(scfg: SearchConfig,
+               rung: "cost_model.DegradeRung") -> SearchConfig:
+    """SearchConfig for one degrade-ladder rung (cost_model.DEGRADE_LADDER):
+    scaled pool length / hop budget, overridden chunking and read-ahead.
+    Floors keep k servable; the ``approx`` rung's config sizes its re-rank
+    budget (the scan path ignores the traversal knobs)."""
+    kw = dict(l=max(scfg.k, int(round(scfg.l * rung.l_scale))),
+              max_hops=max(8, int(round(scfg.max_hops
+                                        * rung.max_hops_scale))))
+    if rung.hop_chunk is not None:
+        kw["hop_chunk"] = rung.hop_chunk
+    if rung.prefetch_depth is not None:
+        kw["prefetch_depth"] = rung.prefetch_depth
+    return dataclasses.replace(scfg, **kw)
+
+
+def scan_rerank(scfg: SearchConfig,
+                rung: "cost_model.DegradeRung | None" = None) -> int:
+    """Re-rank budget of the gated full-scan path for a *base* config,
+    optionally as scaled by ``rung`` — must match the sizing
+    ``approx_scan`` applies to its (already rung-applied) configs so the
+    admission controller prices exactly what would execute."""
+    l = scfg.l if rung is None else max(scfg.k,
+                                        int(round(scfg.l * rung.l_scale)))
+    return int(min(scfg.max_pool, max(l + scfg.l_rerank_delta,
+                                      2 * scfg.k)))
+
+
 @dataclasses.dataclass
 class QueryStats:
     mechanism: list
@@ -395,14 +423,38 @@ class FilteredANNEngine:
                 np.asarray(adj_dev), dense)))
 
     # ------------------------------------------------------------------
-    def _route(self, plan, scfg: SearchConfig) -> cost_model.Route:
-        c = cost_model.CostInputs(
+    def cost_inputs(self, plan, scfg: SearchConfig) -> cost_model.CostInputs:
+        """The router's CostInputs for one planned query — also the serve
+        tier's admission/degrade-ladder pricing basis."""
+        return cost_model.CostInputs(
             n=self.n, l=scfg.l, s=plan.selectivity,
             p_pre=plan.precision_pre, p_in=plan.precision_in,
             x_pre=plan.pages_prescan, x_in=plan.pages_prefetch,
             r=self.store.degree,
             r_d=self.store.degree + self.store.dense_degree,
             s_r=self.store.pages_std, s_d=self.store.pages_dense)
+
+    def estimate_cost(self, selector: Selector,
+                      scfg: SearchConfig = None,
+                      rung: "cost_model.DegradeRung | None" = None) -> float:
+        """Modeled service cost of one query (α·pages + β·comps) at the
+        routed mechanism — the admission controller's per-request unit,
+        scaled into µs by the server's measured EWMA. ``rung`` prices the
+        query at a degrade-ladder step instead of full service."""
+        scfg = scfg or SearchConfig()
+        cfg = self.config
+        plan = selector.plan(cfg.ql, cfg.cap, cfg.qr)
+        c = self.cost_inputs(plan, scfg)
+        if rung is not None:
+            return cost_model.rung_cost(
+                c, rung, scfg.alpha, scfg.beta, scfg.max_pool,
+                base_prefetch=scfg.prefetch_depth,
+                rerank=scan_rerank(scfg, rung), calib=self.calibration)
+        route = self._route(plan, scfg)
+        return route.costs[route.mechanism].total(scfg.alpha, scfg.beta)
+
+    def _route(self, plan, scfg: SearchConfig) -> cost_model.Route:
+        c = self.cost_inputs(plan, scfg)
         full = cost_model.route_query(c, scfg.alpha, scfg.beta,
                                       scfg.max_pool, calib=self.calibration)
         if plan.force_mech is not None:
@@ -483,7 +535,10 @@ class FilteredANNEngine:
         disk_before = ds.snapshot() if ds is not None else None
         for (mech, eff_l, scfg), idxs in groups.items():
             strict = scfg.policy in ("strict_in", "strict_pre", "basefilter")
-            sub_q = jnp.asarray(queries[idxs])
+            # keep batch assembly on the host: the raw group width is
+            # composition-dependent, and the pipelined driver pads it to a
+            # power-of-two bucket before anything touches the device
+            sub_q = np.ascontiguousarray(queries[idxs])
             sub_sel = [selectors[i] for i in idxs]
             sub_qf = stack_filters([plans[i].qfilter for i in idxs])
             if ds is not None:
@@ -534,7 +589,7 @@ class FilteredANNEngine:
                                                         self.medoid, 4)
                         ents[j, :seeds.size] = seeds
                         seed_pages[j] = pages
-                    entries = jnp.asarray(ents)
+                    entries = ents
                 # the bucketed pipelined driver: chunked hops + straggler
                 # compaction (search.filtered_search_pipelined); hop_chunk=0
                 # falls back to the single-shot jit
@@ -560,6 +615,78 @@ class FilteredANNEngine:
                     stats.faults[i] = int(res.faults[j])
                     stats.retries[i] = int(res.retries[j])
                     stats.degraded[i] = int(res.degraded[j])
+        if ds is not None:
+            stats.disk = ds.delta(disk_before, ds.snapshot())
+        return out_ids, out_d, stats
+
+    # ------------------------------------------------------------------
+    def approx_scan(self, queries: np.ndarray,
+                    selectors: Sequence[Selector],
+                    scfgs: Sequence[SearchConfig]):
+        """Last-rung degrade execution (serve overload ladder): a gated
+        full-corpus ADC scan over the in-memory code tier, then exact
+        fetch + verification of the top re-rank set — no graph traversal,
+        no per-hop device round-trips, I/O bounded by the re-rank budget.
+
+        Same return shape as :meth:`execute`. The contract matches PR 7's
+        fault ladder: candidate generation is approximate (ADC order +
+        superset membership gate over *every* id — no valid record can be
+        excluded), results are exactly verified (no false positives), and
+        served queries are flagged via ``stats.degraded``."""
+        queries = np.asarray(queries, np.float32)
+        if queries.shape[1] != self.store.dim:
+            pad = self.store.dim - queries.shape[1]
+            queries = np.pad(queries, ((0, 0), (0, pad)))
+        B = queries.shape[0]
+        assert len(selectors) == B and len(scfgs) == B
+        cfg = self.config
+        plans = [s.plan(cfg.ql, cfg.cap, cfg.qr) for s in selectors]
+        out_ids: list = [None] * B
+        out_d: list = [None] * B
+        stats = QueryStats(
+            mechanism=["scan"] * B,
+            io_pages=np.zeros(B, np.int64), est_io_pages=np.zeros(B),
+            dist_comps=np.zeros(B, np.int64), est_compute=np.zeros(B),
+            hops=np.zeros(B, np.int64), fp_explored=np.zeros(B, np.int64),
+            explored=np.zeros(B, np.int64), n_valid=np.zeros(B, np.int64),
+            selectivity=np.array([p.selectivity for p in plans]),
+            precision_in=np.array([p.precision_in for p in plans]),
+            faults=np.zeros(B, np.int64), retries=np.zeros(B, np.int64),
+            degraded=np.ones(B, np.int64))
+        ds = self.disk_store
+        disk_before = ds.snapshot() if ds is not None else None
+        qjn = jnp.asarray(queries)
+        for i in range(B):
+            scfg = scfgs[i]
+            rerank = int(min(scfg.max_pool,
+                             max(scfg.l + scfg.l_rerank_delta,
+                                 2 * scfg.k)))
+            qf = plans[i].qfilter
+            top_ids, _ = prefilter.scan_all_gated(
+                self.codes, self.codebook, self.mem, qf, qjn[i], rerank,
+                prefilter.SCAN_CHUNK)
+            pp = prefilter.PrefilterParams(l_rerank=rerank, k=scfg.k)
+            if ds is None:
+                ids, dists, io, nv = prefilter._rerank_verify(
+                    self.store, qf, qjn[i], top_ids, pp)
+            else:
+                tid = np.asarray(top_ids)
+                rec = ds.fetch_host(np.where(tid >= 0, tid, 0))
+                ids, dists, io, nv = prefilter._verify_fetched(
+                    qf, qjn[i], top_ids, jnp.asarray(rec["vectors"]),
+                    jnp.asarray(rec["rec_labels"]),
+                    jnp.asarray(rec["rec_values"]), pp,
+                    self.store.pages_std)
+            est = cost_model.approx_scan_cost(
+                self.cost_inputs(plans[i], scfg), rerank)
+            out_ids[i] = np.asarray(ids)
+            out_d[i] = np.asarray(dists)
+            stats.io_pages[i] = int(io)
+            stats.est_io_pages[i] = est.io_pages
+            stats.dist_comps[i] = int(self.codes.shape[0])
+            stats.est_compute[i] = est.compute
+            stats.explored[i] = rerank
+            stats.n_valid[i] = int(nv)
         if ds is not None:
             stats.disk = ds.delta(disk_before, ds.snapshot())
         return out_ids, out_d, stats

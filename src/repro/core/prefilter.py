@@ -19,9 +19,12 @@ import numpy as np
 
 from repro.core import pq as pq_mod
 from repro.core.records import RecordStore
-from repro.core.selectors import QueryFilter, Selector, is_member
+from repro.core.selectors import (InMemory, QueryFilter, Selector, is_member,
+                                  is_member_approx)
 
 BIG = jnp.float32(1e30)
+INVALID_PENALTY = jnp.float32(1e12)
+SCAN_CHUNK = 4096        # full-corpus gated-scan chunk (scan_all_gated)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +105,50 @@ def _rerank_verify(store: RecordStore, qf: QueryFilter, query,
                         params.k, store.pages_std)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("l_rerank", "chunk", "distance_fn"))
+def scan_all_gated(codes, codebook, mem: InMemory, qf: QueryFilter, query,
+                   l_rerank: int, chunk: int,
+                   distance_fn: Callable = pq_mod.adc_lookup):
+    """Gated full-corpus ADC scan: the serve tier's last degrade rung.
+
+    Every id is a candidate (no posting scan, no graph traversal — one
+    fused pass over the in-memory code tier), ranked by ADC distance plus
+    ``INVALID_PENALTY`` where the *approximate* membership gate rejects.
+    The gate is a superset test (bloom / bucket words only over-admit),
+    so no truly-valid record is ever pushed behind an invalid one — the
+    no-false-negative contract holds structurally; exactness comes from
+    the caller's fetch + exact verify of the returned top-``l_rerank``.
+
+    Returns ``(top_ids (l_rerank,), top_keys)``; ids whose key carries
+    the penalty are approx-invalid fill (the verifier drops them).
+    """
+    table = pq_mod.distance_table(codebook, query)
+    n = codes.shape[0]
+    n_chunks = -(-n // chunk)
+    pad_n = n_chunks * chunk
+    ids_all = jnp.arange(pad_n, dtype=jnp.int32)
+
+    def step(carry, ids_chunk):
+        top_ids, top_d = carry
+        live = ids_chunk < n
+        safe = jnp.where(live, ids_chunk, 0)
+        d = distance_fn(codes[safe], table)
+        ok = is_member_approx(qf, safe, mem)
+        d = d + jnp.where(ok, 0.0, INVALID_PENALTY)
+        d = jnp.where(live, d, BIG)
+        all_ids = jnp.concatenate([top_ids, ids_chunk])
+        all_d = jnp.concatenate([top_d, d])
+        neg_d, idx = jax.lax.top_k(-all_d, l_rerank)
+        return (all_ids[idx], -neg_d), None
+
+    init = (jnp.full((l_rerank,), -1, jnp.int32),
+            jnp.full((l_rerank,), BIG, jnp.float32))
+    (top_ids, top_d), _ = jax.lax.scan(
+        step, init, ids_all.reshape(n_chunks, chunk))
+    return top_ids, top_d
+
+
 def prefilter_search(store: RecordStore, codes, codebook, selectors, qfilters,
                      queries, params: PrefilterParams,
                      distance_fn: Callable = pq_mod.adc_lookup,
@@ -134,7 +181,9 @@ def prefilter_search(store: RecordStore, codes, codebook, selectors, qfilters,
         pad = -(-max(cand.size, 1) // params.chunk) * params.chunk
         cand_padded = np.full(pad, -1, np.int32)
         cand_padded[:cand.size] = cand
-        qf = jax.tree_util.tree_map(lambda x: jnp.asarray(x)[b], qfilters)
+        # index on the host: a device-side row gather is shape-keyed on the
+        # raw batch width and would compile per distinct group composition
+        qf = jax.tree_util.tree_map(lambda x: np.asarray(x)[b], qfilters)
         top_ids, _ = _pq_topl(codes, codebook, queries[b],
                               jnp.asarray(cand_padded), cand.size,
                               params.l_rerank, params.chunk, distance_fn)

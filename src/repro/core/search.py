@@ -756,15 +756,22 @@ def init_search(store: RecordStore, codes: jax.Array,
 def run_hops(store: RecordStore, codes: jax.Array, mem: InMemory,
              ctx: QueryCtx, st: HopState, n_hops, params: SearchParams,
              distance_fn: Callable = pq_mod.adc_lookup,
-             fetch_fn: Callable = local_fetch) -> HopState:
+             fetch_fn: Callable = local_fetch):
     """Advance every active query by up to ``n_hops`` hops.
 
     ``n_hops`` is traced, so one compile covers every chunk length at a
     given batch width: the bucket jit cache is keyed only by (bucket
     shapes, params) — asserted by the compile-count test. ``st`` is
-    donated: chunk t's state buffers are reused in place by chunk t+1."""
-    return _hop_loop(store, codes, mem, params, distance_fn, fetch_fn, ctx,
-                     st, n_hops)
+    donated: chunk t's state buffers are reused in place by chunk t+1.
+
+    Returns ``(state, active_mask)``. The mask is an int8 *copy* of
+    ``state.active`` in its own output buffer (the dtype change forbids
+    any aliasing with the donated state), so the driver can dispatch the
+    next chunk — consuming ``state`` — and only then read the mask back,
+    overlapping the host sync with device work (the async readback)."""
+    st = _hop_loop(store, codes, mem, params, distance_fn, fetch_fn, ctx,
+                   st, n_hops)
+    return st, st.active.astype(jnp.int8)
 
 
 @functools.partial(jax.jit, static_argnames=("params",))
@@ -786,7 +793,8 @@ def filtered_search_pipelined(store: RecordStore, codes: jax.Array,
                               entries: jax.Array | None = None,
                               hop_chunk: int = DEFAULT_HOP_CHUNK,
                               min_bucket: int = MIN_COMPACT_BUCKET,
-                              collect_trace: bool = False):
+                              collect_trace: bool = False,
+                              async_readback: bool = True):
     """Bucketed host driver: chunked hops + straggler compaction.
 
     Runs :func:`run_hops` ``hop_chunk`` hops at a time; after every chunk
@@ -800,10 +808,22 @@ def filtered_search_pipelined(store: RecordStore, codes: jax.Array,
     width compiles once and is reused across calls/chunks (the Session
     repeat-search path).
 
+    ``async_readback`` (the default) overlaps the per-chunk host sync
+    with device work: the driver dispatches the *next* chunk before
+    reading the previous chunk's active mask (``copy_to_host_async``),
+    so settle/shrink decisions run one chunk late on a stale mask. This
+    is safe bit-wise: ``active`` only ever shrinks, so the stale mask is
+    a superset of the truly-active rows, and inactive rows are exact
+    fixed points of the hop step — a speculative chunk over a partially
+    settled bucket does identical work for live rows and none for
+    settled ones. ``async_readback=False`` keeps the synchronous
+    reference driver (one blocking readback per chunk).
+
     ``hop_chunk=0`` falls back to the single-shot jit. With
     ``collect_trace=True`` returns ``(SearchResult, trace)`` where trace
-    lists ``{"hop", "active", "bucket"}`` per chunk boundary — the
-    benchmark's ``--active-trace`` feed.
+    lists ``{"hop", "active", "bucket"}`` per observed chunk boundary —
+    the benchmark's ``--active-trace`` feed (in async mode the
+    observations lag dispatch by one chunk).
     """
     if hop_chunk <= 0:
         res = filtered_search(store, codes, codebook, mem, qfilters,
@@ -811,19 +831,49 @@ def filtered_search_pipelined(store: RecordStore, codes: jax.Array,
                               distance_fn=distance_fn, fetch_fn=fetch_fn,
                               entries=entries)
         return (res, []) if collect_trace else res
-    B = int(queries.shape[0])
+    orig_b = int(queries.shape[0])
+    # Quantize the top-level width to the same power-of-two bucket
+    # ladder the compaction loop uses: compile keys stay bounded to the
+    # widths ``Session.warmup`` tiles, so an arbitrary group size never
+    # hits a fresh multi-second jit mid-serve. Pads duplicate row 0 but
+    # start inactive — exact fixed points of the hop step, zero extra
+    # hops — and their rows are sliced off the result. The padding runs
+    # in numpy: eager device ops at the raw width would compile one tiny
+    # executable per distinct composition, defeating the quantization.
+    B = max(min_bucket, _pow2_at_least(orig_b))
+    n_pad = B - orig_b
+    if n_pad:
+        def _pad(a):
+            a = np.asarray(a)
+            return np.concatenate(
+                [a, np.broadcast_to(a[:1], (n_pad,) + a.shape[1:])], axis=0)
+        queries = _pad(queries)
+        qfilters = jax.tree_util.tree_map(_pad, qfilters)
+        if entries is not None:
+            entries = _pad(entries)
     full_ctx, full_st = init_search(store, codes, codebook, mem, qfilters,
                                     queries, entry, params,
                                     distance_fn=distance_fn,
                                     entries=entries)
+    if n_pad:
+        full_st = full_st._replace(
+            active=full_st.active.at[orig_b:].set(False))
     work_ctx, work_st = full_ctx, full_st
     work_map: np.ndarray | None = None   # None ⇒ identity (full width)
     work_valid: np.ndarray | None = None  # non-pad rows of the bucket
     width = B
     hops_done = 0
     trace: list = []
+
+    def hop(ctx, st):
+        return run_hops(store, codes, mem, ctx, st, hop_chunk, params,
+                        distance_fn=distance_fn, fetch_fn=fetch_fn)
+
+    # act: host copy of an active mask; in async mode it may lag work_st
+    # by one chunk (a superset of the truly-active rows — see docstring)
+    act = np.asarray(work_st.active)     # init-state snapshot, pre-donation
+    inflight = None                      # device mask of the newest chunk
     while True:
-        act = np.asarray(work_st.active)
         n_act = int(act.sum())               # pads are inert (forced off)
         if collect_trace:
             trace.append({"hop": hops_done, "active": n_act,
@@ -831,12 +881,26 @@ def filtered_search_pipelined(store: RecordStore, codes: jax.Array,
         bucket = min(B, max(min_bucket, _pow2_at_least(max(n_act, 1))))
         if n_act and bucket >= width:
             # active set still fills the current bucket: keep hopping
-            work_st = run_hops(store, codes, mem, work_ctx, work_st,
-                               hop_chunk, params, distance_fn=distance_fn,
-                               fetch_fn=fetch_fn)
+            work_st, mask = hop(work_ctx, work_st)
             hops_done += hop_chunk
+            if not async_readback:
+                act = np.asarray(mask)
+                continue
+            mask.copy_to_host_async()
+            if inflight is None:
+                # prime the one-chunk pipeline: dispatch a second chunk so
+                # there is device work to hide the first mask's readback
+                work_st, inflight = hop(work_ctx, work_st)
+                hops_done += hop_chunk
+                inflight.copy_to_host_async()
+                act = np.asarray(mask)
+            else:
+                # read the older in-flight mask while this chunk runs
+                act, inflight = np.asarray(inflight), mask
             continue
         # settle or shrink: fold the working rows into the full state
+        # (work_st may be one speculative chunk past the observed mask —
+        # settled rows are bitwise unchanged by it)
         if work_map is None:
             full_st = work_st
         else:
@@ -845,7 +909,9 @@ def filtered_search_pipelined(store: RecordStore, codes: jax.Array,
             full_st = tree_put_rows(full_st, work_st, sidx)
         if n_act == 0:
             break
-        # compact the survivors into the next power-of-two bucket
+        # compact the survivors into the next power-of-two bucket; the
+        # stale mask over-admits at worst (rows that settled during the
+        # speculative chunk ride along as inert valid rows)
         surv = np.flatnonzero(act)
         idx = (work_map[surv] if work_map is not None else surv) \
             .astype(np.int32)
@@ -858,11 +924,22 @@ def filtered_search_pipelined(store: RecordStore, codes: jax.Array,
         work_st = work_st._replace(
             active=work_st.active & jnp.asarray(work_valid))
         width = bucket
-        work_st = run_hops(store, codes, mem, work_ctx, work_st, hop_chunk,
-                           params, distance_fn=distance_fn,
-                           fetch_fn=fetch_fn)
+        inflight = None
+        if async_readback:
+            # don't block on the compacted state's mask: every carried
+            # row was stale-active, so assume all live and let the next
+            # iteration dispatch at this width (an all-settled carry makes
+            # that chunk an immediate-exit no-op)
+            act = work_valid.copy()
+            continue
+        work_st, mask = hop(work_ctx, work_st)
         hops_done += hop_chunk
+        act = np.asarray(mask)
     res = finalize_search(full_st, params)
+    if n_pad:
+        # slice on the host: a device-side slice at the raw width would
+        # compile per composition (same reason the padding is numpy)
+        res = SearchResult(*(np.asarray(a)[:orig_b] for a in res))
     return (res, trace) if collect_trace else res
 
 

@@ -238,9 +238,15 @@ def always_true_filter(ql: int, cap: int, nr: int = NR_DEFAULT) -> QueryFilter:
 
 
 def stack_filters(filters: Sequence[QueryFilter]) -> QueryFilter:
-    """Stack per-query filters into a batched pytree (leading dim = batch)."""
-    return jax.tree_util.tree_map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
-                                  *filters)
+    """Stack per-query filters into a batched pytree (leading dim = batch).
+
+    Stacks on the host: the batch width here is the raw group size, and
+    eager device ops at that width would compile one tiny executable per
+    distinct composition. The jitted search entry converts the (padded,
+    power-of-two-width) tree in one transfer instead.
+    """
+    return jax.tree_util.tree_map(
+        lambda *xs: np.stack([np.asarray(x) for x in xs]), *filters)
 
 
 # ---------------------------------------------------------------------------

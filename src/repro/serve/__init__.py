@@ -1,1 +1,7 @@
 from repro.serve.decode import generate, make_decode_step, make_prefill
+from repro.serve.server import (SearchServer, ServerConfig, ServerStats)
+
+__all__ = [
+    "generate", "make_decode_step", "make_prefill",
+    "SearchServer", "ServerConfig", "ServerStats",
+]
