@@ -14,6 +14,11 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_search --sm
 # serving-tier smoke: degrade-rung calibration + a tiny Poisson
 # open-loop sweep through the threaded SearchServer (no floors)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.bench_serve --smoke
+# multi-device mesh leg: the dist suite launches its own subprocesses
+# with fake CPU devices, but setting the flag here too keeps any
+# in-process jax usage on the same 4-device topology the tests assume
+XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=4" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m dist
 # light chaos tests (deterministic fault hash, injector, latency model)
 # are marked fast+chaos and ride the -m fast run below; the full chaos
 # property suite is `pytest -m chaos` (tier-1 runs it unmarked too)

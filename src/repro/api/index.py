@@ -140,7 +140,8 @@ class Index:
               defaults: SearchConfig = SearchConfig(),
               store: str = "device",
               storage_dir: Optional[str] = None,
-              storage_config=None) -> "Index":
+              storage_config=None,
+              shards: int = 0) -> "Index":
         """Build an index over ``vectors`` + per-record metadata dicts.
 
         ``schema`` declares the attribute fields explicitly; when omitted
@@ -156,10 +157,21 @@ class Index:
         ``storage_config`` is a :class:`repro.storage.StorageConfig`
         (cache size, read-ahead, device budget). Inserts require the
         device backend.
+
+        ``shards > 1`` builds and serves over a local mesh of that many
+        devices (docs/distributed.md): the Vamana link phase shards with
+        PQ-approximate navigation and the engine comes back pre-sharded,
+        so :class:`~repro.api.session.Session` / the serve tier run the
+        hop loop through the mesh transparently — results bit-identical
+        to ``shards=0``'s search (build graphs differ within the ±1%
+        recall envelope). Mutually exclusive with ``store="disk"``.
         """
         if store not in ("device", "disk"):
             raise ValueError(f"unknown store backend {store!r} "
                              "(expected 'device' or 'disk')")
+        if shards > 1 and store == "disk":
+            raise ValueError("shards > 1 requires the device backend: "
+                             "the disk tier owns the fetch seam")
         vectors = np.asarray(vectors, np.float32)
         if len(metadata) != vectors.shape[0]:
             raise ValueError(f"{vectors.shape[0]} vectors but "
@@ -181,7 +193,8 @@ class Index:
         vocab, offsets, label_flat, values = _ingest_metadata(metadata,
                                                               schema)
         engine = FilteredANNEngine.build(
-            vectors, offsets, label_flat, max(1, len(vocab)), values, config)
+            vectors, offsets, label_flat, max(1, len(vocab)), values, config,
+            shards=shards)
         if store == "disk":
             if storage_dir is None:
                 import tempfile
@@ -510,8 +523,14 @@ class Index:
                 json.dump(meta, fh)
 
     @classmethod
-    def load(cls, path: str) -> "Index":
+    def load(cls, path: str, shards: int = 0) -> "Index":
         """Load a saved index, recovering from corrupted steps.
+
+        ``shards > 1`` re-shards the restored device-backend engine over a
+        local mesh (:meth:`FilteredANNEngine.shard`) — checkpoints carry
+        no mesh state, so the shard count is a load-time serving choice.
+        Rejected for disk-backend checkpoints (the disk tier owns the
+        fetch seam).
 
         Startup first reaps stale ``step_K.tmp`` dirs (a killed writer's
         leftovers are never valid — publishes are atomic renames). Steps
@@ -616,6 +635,8 @@ class Index:
             range_store, meta["medoid"], IndexConfig(**meta["config"]))
         if ds is not None:
             engine.attach_disk_store(ds)
+        if shards > 1:
+            engine.shard(shards)   # raises on the disk backend
         vocab = {(f, v): lab for f, v, lab in meta["vocab"]}
         defaults = dict(meta["defaults"])
         if isinstance(defaults.get("fault_plan"), dict):

@@ -150,6 +150,7 @@ class FilteredANNEngine:
         self.config = config
         self.n = label_store.n_vectors  # valid records (store may hold pads)
         self._builder = None      # lazy IncrementalBuilder (insert path)
+        self._runner = None       # ShardedSearchRunner when shard()ed
         self.calibration: cost_model.Calibration | None = None
         self.disk_store = None    # storage.DiskRecordStore when backend=disk
         self.io_model: io_sim.IOModel | None = None
@@ -183,9 +184,19 @@ class FilteredANNEngine:
     @classmethod
     def build(cls, vectors: np.ndarray, label_offsets: np.ndarray,
               label_flat: np.ndarray, n_labels: int, values: np.ndarray,
-              config: IndexConfig = IndexConfig()) -> "FilteredANNEngine":
+              config: IndexConfig = IndexConfig(),
+              shards: int = 0) -> "FilteredANNEngine":
         """``values`` is the numeric attribute matrix, (n, F) — a flat
-        (n,) array is accepted as the single-field F=1 case."""
+        (n,) array is accepted as the single-field F=1 case.
+
+        ``shards > 1`` builds AND serves over a local mesh of that many
+        devices: the Vamana link phase runs per shard with PQ-approximate
+        navigation (``distributed.build_vamana_sharded`` — the codebook is
+        trained first so ADC distances can steer the beam pools; the
+        RobustPrune re-rank stays exact, recall within the batched
+        builder's ±1% envelope), and the returned engine is already
+        :meth:`shard`-ed so ``execute`` routes the hop loop through the
+        mesh."""
         vectors = np.asarray(vectors, np.float32)
         n, d = vectors.shape
         # pad dim to a multiple of pq_m
@@ -194,7 +205,26 @@ class FilteredANNEngine:
             vectors = np.pad(vectors, ((0, 0), (0, pad)))
             d += pad
 
-        if config.builder == "batched":
+        # PQ first: the sharded builder navigates on ADC distances
+        key = jax.random.PRNGKey(config.seed)
+        codebook = pq_mod.train_pq(key, jnp.asarray(vectors), config.pq_m,
+                                   iters=config.pq_iters)
+        codes = pq_mod.encode_pq(codebook, jnp.asarray(vectors))
+
+        if shards > 1:
+            if config.builder != "batched":
+                raise ValueError(
+                    "shards > 1 requires builder='batched' (the sharded "
+                    f"link path), got {config.builder!r}")
+            from repro.core.distributed import ShardPlan, \
+                build_vamana_sharded
+            from repro.launch.mesh import make_local_mesh
+            plan = ShardPlan(mesh=make_local_mesh(1, shards),
+                             shard_axes=("model",))
+            adj, medoid = build_vamana_sharded(
+                vectors, plan, config.r, config.l_build, config.alpha,
+                seed=config.seed, codes=codes, codebook=codebook)
+        elif config.builder == "batched":
             adj, medoid = graph.build_vamana_batched(
                 vectors, config.r, config.l_build, config.alpha,
                 seed=config.seed)
@@ -213,14 +243,43 @@ class FilteredANNEngine:
         store = make_record_store(vectors, adj, dense, rec_labels,
                                   range_store.values)
 
-        key = jax.random.PRNGKey(config.seed)
-        codebook = pq_mod.train_pq(key, jnp.asarray(vectors), config.pq_m,
-                                   iters=config.pq_iters)
-        codes = pq_mod.encode_pq(codebook, jnp.asarray(vectors))
         mem = InMemory(blooms=jnp.asarray(label_store.blooms),
                        bucket_codes=jnp.asarray(range_store.bucket_codes))
-        return cls(store, codes, codebook, mem, label_store, range_store,
-                   medoid, config)
+        eng = cls(store, codes, codebook, mem, label_store, range_store,
+                  medoid, config)
+        if shards > 1:
+            eng.shard(shards)
+        return eng
+
+    # ------------------------------------------------------------------
+    def shard(self, shards: int) -> "FilteredANNEngine":
+        """Route the pipelined hop loop through a mesh of ``shards``
+        devices (``distributed.ShardedSearchRunner``): the record store is
+        ID-range-sharded over the mesh's model axis, queries row-shard per
+        bucket, and results stay bit-identical to the single-device driver
+        (docs/distributed.md). ``shards in (0, 1)`` reverts to local
+        execution. In place; returns self. Requires the device backend —
+        the disk tier already owns the fetch seam."""
+        if shards in (0, 1):
+            self._runner = None
+            return self
+        if self.disk_store is not None:
+            raise ValueError(
+                "sharded execution requires the device backend: the disk "
+                "tier's host fetch already owns the fetch_fn seam "
+                "(shard before to_disk, or serve from the device store)")
+        from repro.core.distributed import ShardPlan, ShardedSearchRunner
+        from repro.launch.mesh import make_local_mesh
+        plan = ShardPlan(mesh=make_local_mesh(1, shards),
+                         shard_axes=("model",))
+        self._runner = ShardedSearchRunner(plan, self.store, self.codes,
+                                           self.codebook, self.mem)
+        return self
+
+    @property
+    def n_shards(self) -> int:
+        """Mesh shards the hop loop spans (1 = local single-device)."""
+        return self._runner.n_shards if self._runner is not None else 1
 
     # ------------------------------------------------------------------
     def to_disk(self, path: str, storage_config=None) -> "FilteredANNEngine":
@@ -246,6 +305,8 @@ class FilteredANNEngine:
         (e.g. from a restored checkpoint) and drop the device arrays."""
         self.disk_store = disk_store
         self.store = disk_store.stub_store()
+        self._runner = None   # sharded runner holds device copies; disk owns
+                              # the fetch seam now
 
     def calibrate_io(self) -> "io_sim.IOModel | None":
         """Fit :class:`io_sim.IOModel` from the disk tier's measured read
@@ -325,6 +386,11 @@ class FilteredANNEngine:
 
         self._refresh_padded_stores(n0, m, vectors)
         self.n = n0 + m
+        if self._runner is not None:
+            # the runner holds its own padded device copy of the store —
+            # rebuild it over the same mesh so sharded serving sees the
+            # inserted records
+            self.shard(self._runner.n_shards)
         return ids
 
     def _refresh_padded_stores(self, n0: int, m: int, new_vectors):
@@ -598,7 +664,9 @@ class FilteredANNEngine:
                     sub_q, self.medoid, sp, entries=entries,
                     hop_chunk=scfg.hop_chunk,
                     **({"fetch_fn": ds.fetch_callable}
-                       if ds is not None else {}))
+                       if ds is not None else
+                       {"runner": self._runner}
+                       if self._runner is not None else {}))
                 prefetch = np.array([plans[i].pages_prefetch for i in idxs]) \
                     if mode == "spec_in" else 0
                 for j, i in enumerate(idxs):

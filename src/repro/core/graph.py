@@ -107,6 +107,59 @@ def greedy_search(data, adj, entry: int, queries, ell: int, max_hops: int):
     return jax.vmap(one)(queries)
 
 
+def _beam_pool(adj, entry: int, ell: int, max_hops: int, width: int,
+               dist_fn):
+    """One query's beam-pool navigation over ``adj`` with a pluggable
+    distance: ``dist_fn(ids (C,) int32) -> (C,) float32`` (ids are safe,
+    i.e. already clamped non-negative; invalid lanes are masked to +inf by
+    this navigator). Shared by :func:`greedy_search_beam` (exact
+    full-precision distances) and the sharded builder's PQ-approximate
+    navigation (core/distributed.py — ADC distances steer the pool, the
+    RobustPrune re-rank stays exact). Returns (pool_ids, pool_d), each
+    (ell,) ascending."""
+    r = adj.shape[1]
+    w = width
+    d0 = dist_fn(jnp.full((1,), entry, jnp.int32))[0]
+    pool_ids0 = jnp.full((ell,), -1, jnp.int32).at[0].set(entry)
+    pool_d0 = jnp.full((ell,), jnp.inf, jnp.float32).at[0].set(d0)
+    explored0 = jnp.zeros((ell,), jnp.bool_)
+
+    def cond(state):
+        _, pool_d, explored, hops = state
+        has_frontier = jnp.any(~explored & jnp.isfinite(pool_d))
+        return has_frontier & (hops < max_hops)
+
+    def body(state):
+        pool_ids, pool_d, explored, hops = state
+        masked = jnp.where(explored, jnp.inf, pool_d)
+        _, sel = jax.lax.top_k(-masked, w)
+        cur_live = jnp.isfinite(masked[sel])
+        explored = explored.at[sel].set(True)
+        cur = jnp.where(cur_live, pool_ids[sel], 0)
+        nbrs = adj[cur]                                  # (W, R)
+        nbrs = jnp.where(cur_live[:, None], nbrs, -1).reshape(-1)
+        valid = nbrs >= 0
+        nv = jnp.where(valid, nbrs, 0)
+        nd = dist_fn(nv)
+        nd = jnp.where(valid, nd, jnp.inf)
+        # dedup against pool and across the W beams' rows
+        dup = jnp.any(nbrs[:, None] == pool_ids[None, :], axis=1)
+        c = nbrs.shape[0]
+        tri = jnp.tril(jnp.ones((c, c), jnp.bool_), -1)
+        dup |= jnp.any((nbrs[:, None] == nbrs[None, :]) & tri, axis=1)
+        nd = jnp.where(dup, jnp.inf, nd)
+        all_ids = jnp.concatenate([pool_ids, nbrs])
+        all_d = jnp.concatenate([pool_d, nd])
+        all_exp = jnp.concatenate([explored, jnp.zeros((c,), jnp.bool_)])
+        # top_k merge: ~4x cheaper than a full argsort on CPU/TPU
+        neg_d, order = jax.lax.top_k(-all_d, ell)
+        return (all_ids[order], -neg_d, all_exp[order], hops + 1)
+
+    pool_ids, pool_d, _, _ = jax.lax.while_loop(
+        cond, body, (pool_ids0, pool_d0, explored0, jnp.int32(0)))
+    return pool_ids, pool_d
+
+
 @functools.partial(jax.jit, static_argnames=("ell", "max_hops", "width"))
 def greedy_search_beam(data, adj, entry: int, queries, ell: int,
                        max_hops: int, width: int = 4):
@@ -116,49 +169,10 @@ def greedy_search_beam(data, adj, entry: int, queries, ell: int,
     builder as its candidate generator (same pool semantics, coarser
     exploration order). Returns (pool_ids, pool_dists): (B, ell) ascending.
     """
-    r = adj.shape[1]
-    w = width
-
     def one(q):
-        d0 = jnp.sum((data[entry] - q) ** 2)
-        pool_ids = jnp.full((ell,), -1, jnp.int32).at[0].set(entry)
-        pool_d = jnp.full((ell,), jnp.inf, jnp.float32).at[0].set(d0)
-        explored = jnp.zeros((ell,), jnp.bool_)
-
-        def cond(state):
-            _, pool_d, explored, hops = state
-            has_frontier = jnp.any(~explored & jnp.isfinite(pool_d))
-            return has_frontier & (hops < max_hops)
-
-        def body(state):
-            pool_ids, pool_d, explored, hops = state
-            masked = jnp.where(explored, jnp.inf, pool_d)
-            _, sel = jax.lax.top_k(-masked, w)
-            cur_live = jnp.isfinite(masked[sel])
-            explored = explored.at[sel].set(True)
-            cur = jnp.where(cur_live, pool_ids[sel], 0)
-            nbrs = adj[cur]                                  # (W, R)
-            nbrs = jnp.where(cur_live[:, None], nbrs, -1).reshape(-1)
-            valid = nbrs >= 0
-            nv = jnp.where(valid, nbrs, 0)
-            nd = jnp.sum((data[nv] - q[None, :]) ** 2, axis=1)
-            nd = jnp.where(valid, nd, jnp.inf)
-            # dedup against pool and across the W beams' rows
-            dup = jnp.any(nbrs[:, None] == pool_ids[None, :], axis=1)
-            c = nbrs.shape[0]
-            tri = jnp.tril(jnp.ones((c, c), jnp.bool_), -1)
-            dup |= jnp.any((nbrs[:, None] == nbrs[None, :]) & tri, axis=1)
-            nd = jnp.where(dup, jnp.inf, nd)
-            all_ids = jnp.concatenate([pool_ids, nbrs])
-            all_d = jnp.concatenate([pool_d, nd])
-            all_exp = jnp.concatenate([explored, jnp.zeros((c,), jnp.bool_)])
-            # top_k merge: ~4x cheaper than a full argsort on CPU/TPU
-            neg_d, order = jax.lax.top_k(-all_d, ell)
-            return (all_ids[order], -neg_d, all_exp[order], hops + 1)
-
-        pool_ids, pool_d, explored, _ = jax.lax.while_loop(
-            cond, body, (pool_ids, pool_d, explored, jnp.int32(0)))
-        return pool_ids, pool_d
+        return _beam_pool(
+            adj, entry, ell, max_hops, width,
+            lambda ids: jnp.sum((data[ids] - q[None, :]) ** 2, axis=1))
 
     return jax.vmap(one)(queries)
 
@@ -434,22 +448,35 @@ def _group_overflow(st, ss, overflow, ov_cap: int):
     return uniq.astype(np.int32), srcs, (t[~take], s[~take])
 
 
-def _apply_batch(data_dev, adj_ext, ids: np.ndarray, live: np.ndarray,
-                 pool_ids, r: int, alpha: float):
-    """One insertion batch: prune + row set + reverse scatter + overflow."""
+@functools.partial(jax.jit, donate_argnums=(0,))
+def apply_pruned_rows(adj_ext: jax.Array, ids: jax.Array, live: jax.Array,
+                      rows: jax.Array):
+    """Row set + reverse-edge scatter for externally pruned rows — the
+    replicated host half of the sharded build's link step
+    (core/distributed.py): navigation + RobustPrune run per shard under
+    shard_map and the all-gathered (B, R) rows land here. Identical to
+    the back half of :func:`_link_batch` (which fuses the prune in)."""
+    dump = adj_ext.shape[0] - 1
+    rows = jnp.where(live[:, None], rows, -1)
+    adj_ext = adj_ext.at[jnp.where(live, ids, dump)].set(rows)
+    tgt = rows.reshape(-1)
+    src = jnp.repeat(ids, rows.shape[1])
+    return _scatter_pairs(adj_ext, tgt, src)
+
+
+def _drain_overflow(data_dev, adj_ext, st, ss, overflow, n_rows: int,
+                    r: int, alpha: float):
+    """Drain a batch's pending reverse-edge overflow rounds."""
     # small per-round source cap: overflow counts are heavy-tailed (most
     # targets receive a handful of pending edges), so a narrow candidate
     # width r+8 keeps the O(C²·D) prune cheap; rare hot targets just take
     # extra rounds, each consuming another 8 sources
     ov_cap = 8
-    adj_ext, st, ss, overflow = _link_batch(
-        data_dev, adj_ext, jnp.asarray(ids), jnp.asarray(live), pool_ids,
-        r=r, alpha=alpha)
     # every round consumes ≥ ov_cap pending sources per remaining target
     # (or scatters them into freed slots), so ceil(B/ov_cap) rounds is a
     # hard upper bound — a target receives at most one edge per batch node.
     # Exceeding it means a logic bug: fail loudly, never drop edges.
-    max_rounds = -(-ids.shape[0] // ov_cap) + 2
+    max_rounds = -(-n_rows // ov_cap) + 2
     for _ in range(max_rounds):
         grouped = _group_overflow(st, ss, overflow, ov_cap=ov_cap)
         if grouped is None:
@@ -468,6 +495,16 @@ def _apply_batch(data_dev, adj_ext, ids: np.ndarray, live: np.ndarray,
             "reverse-edge overflow failed to drain within the round bound; "
             "this indicates a bug in the scatter/overflow bookkeeping")
     return adj_ext
+
+
+def _apply_batch(data_dev, adj_ext, ids: np.ndarray, live: np.ndarray,
+                 pool_ids, r: int, alpha: float):
+    """One insertion batch: prune + row set + reverse scatter + overflow."""
+    adj_ext, st, ss, overflow = _link_batch(
+        data_dev, adj_ext, jnp.asarray(ids), jnp.asarray(live), pool_ids,
+        r=r, alpha=alpha)
+    return _drain_overflow(data_dev, adj_ext, st, ss, overflow,
+                           ids.shape[0], r, alpha)
 
 
 def build_vamana_batched(data: np.ndarray, r: int = 32, ell: int = 64,

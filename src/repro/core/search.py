@@ -97,7 +97,7 @@ from repro.core.faults import FaultPlan
 from repro.core.records import RecordStore
 from repro.core.selectors import (InMemory, QueryFilter, is_member,
                                   is_member_approx, kernel_filter_params,
-                                  kernel_view, merged_table)
+                                  kernel_view, merged_table_words)
 from repro.kernels import ops as kops
 from repro.kernels.ref import INVALID_PENALTY   # single source (1e12)
 from repro.utils.tree import tree_put_rows, tree_take_rows
@@ -174,9 +174,9 @@ def local_fetch(store: RecordStore, ids: jax.Array) -> dict:
     ``ids`` may be any shape — the batched hop loop passes one flat
     ``(B·W,)`` vector per hop so the whole batch's reads coalesce. The
     distributed engine (core/distributed.py) swaps in a psum-combined
-    sharded fetch honouring the same contract (minus the optional
-    ``cand_first`` precompute — absent keys make the search fall back to
-    the on-the-fly dedup). Unused keys cost nothing: XLA dead-code
+    sharded fetch honouring the same contract, ``cand_first`` included
+    (stores without the precompute omit the key and the search falls
+    back to the on-the-fly dedup). Unused keys cost nothing: XLA dead-code
     eliminates gathers whose results a mode never consumes."""
     rec = {
         "vectors": store.vectors[ids],
@@ -283,8 +283,9 @@ class QueryCtx(NamedTuple):
     queries: jax.Array        # (B, D) float32
     tables: jax.Array         # (B, M, ksub) ADC distance tables
     qf: QueryFilter           # batched filter pytree
-    merged_tbl: jax.Array     # (B, n_ids+1) bool rare-list table
-                              # ((B, 1) dummy outside spec_in)
+    merged_tbl: jax.Array     # (B, ceil((n_ids+1)/32)) int32 word-packed
+                              # rare-list bitmap ((B, 1) dummy outside
+                              # spec_in) — see selectors.merged_table_words
 
 
 class HopState(NamedTuple):
@@ -299,7 +300,10 @@ class HopState(NamedTuple):
     pool_ids: jax.Array       # (B, P) int32
     pool_key: jax.Array       # (B, P) float32, key-ascending
     pool_exp: jax.Array       # (B, P) bool
-    visited: jax.Array        # (B, n_slots) bool
+    visited: jax.Array        # (B, n_slots // 32) int32 bit-words
+                              # (kernels/or_scatter.py sets, shift+mask
+                              # reads — 8× smaller than the former
+                              # byte-per-slot bool table)
     res_ids: jax.Array        # (B, res_cap) int32
     res_d: jax.Array          # (B, res_cap) float32
     res_valid: jax.Array      # (B, res_cap) bool
@@ -343,14 +347,14 @@ def _init(store, codes, codebook, mem, qfilters, queries, entry, params,
     assert E <= P, "entry seeds exceed the pool length"
 
     tables = jax.vmap(lambda q: pq_mod.distance_table(codebook, q))(queries)
-    bW = jnp.arange(B, dtype=jnp.int32)[:, None]
     if p.mode == "spec_in":
-        # rare-list membership as a per-query table, built once: one
-        # scatter replaces a (B, W·C)-wide binary search over the
-        # CAP-length merged list every hop (selectors.merged_table)
-        merged_tbl = merged_table(qfilters, n_ids)
+        # rare-list membership as a per-query word-packed bitmap, built
+        # once: one OR-scatter replaces a (B, W·C)-wide binary search
+        # over the CAP-length merged list every hop
+        # (selectors.merged_table_words)
+        merged_tbl = merged_table_words(qfilters, n_ids)
     else:
-        merged_tbl = jnp.zeros((B, 1), jnp.bool_)
+        merged_tbl = jnp.zeros((B, 1), jnp.int32)
 
     # ---- entry seeding (pool kept key-ascending from the start) ----
     ent_valid = entries >= 0
@@ -368,10 +372,11 @@ def _init(store, codes, codebook, mem, qfilters, queries, entry, params,
     pool_exp = jnp.ones((B, P), jnp.bool_).at[:, :E].set(
         jnp.take_along_axis(~ent_valid, order0, 1))
 
-    visited = jnp.zeros((B, n_slots), jnp.bool_)
-    visited = visited.at[
-        bW, jnp.where(ent_valid, _visited_slot(safe_ent, n_ids), n_slots)
-    ].set(True, mode="drop")
+    # n_slots is 2^bits with bits >= 8, so the word table divides evenly;
+    # the n_slots sentinel is out of range and drops in the OR-scatter
+    visited = kops.or_scatter(
+        jnp.zeros((B, n_slots // 32), jnp.int32),
+        jnp.where(ent_valid, _visited_slot(safe_ent, n_ids), n_slots))
 
     res_ids = jnp.full((B, res_cap), -1, jnp.int32)
     res_d = jnp.full((B, res_cap), BIG, jnp.float32)
@@ -504,7 +509,8 @@ def _hop_step(store, codes, mem, params, distance_fn, fetch_fn, ctx, mc,
     live = cand >= 0
     safe_cand = jnp.where(live, cand, 0)
     slots = _visited_slot(safe_cand, n_ids)
-    seen = jnp.take_along_axis(visited, slots, axis=1)
+    seen = ((jnp.take_along_axis(visited, slots >> 5, axis=1)
+             >> (slots & 31)) & 1).astype(jnp.bool_)
     if W == 1 and "cand_first" in rec:
         # W=1: the slab is exactly one record's candidate list, whose
         # intra-slab duplicate structure is query-independent — read the
@@ -526,8 +532,9 @@ def _hop_step(store, codes, mem, params, distance_fn, fetch_fn, ctx, mc,
     elif p.mode == "spec_in":
         if default_dist:
             bl_i32, bc_i32, (f_scal, f_om, f_rf, f_blo, f_bhi) = mc
-            in_merged = jnp.take_along_axis(merged_tbl, safe_cand,
-                                            axis=1)
+            in_merged = ((jnp.take_along_axis(merged_tbl, safe_cand >> 5,
+                                              axis=1)
+                          >> (safe_cand & 31)) & 1).astype(jnp.bool_)
             key_slab, ok_approx = kops.hop_fused(
                 codes[safe_cand], bl_i32[safe_cand], bc_i32[safe_cand],
                 in_merged, tables, f_scal, f_om, f_rf, f_blo, f_bhi)
@@ -593,11 +600,11 @@ def _hop_step(store, codes, mem, params, distance_fn, fetch_fn, ctx, mc,
     # that loses slot selection stays unmarked and may be re-proposed
     # through another parent — the legacy pool/explored-membership
     # dedup behaves the same way
-    visited = visited.at[
-        bW, jnp.where(sel_live,
-                      _visited_slot(jnp.where(sel_live, new_ids, 0),
-                                    n_ids),
-                      n_slots)].set(True, mode="drop")
+    visited = kops.or_scatter(
+        visited,
+        jnp.where(sel_live,
+                  _visited_slot(jnp.where(sel_live, new_ids, 0), n_ids),
+                  n_slots))
 
     # ---- 7. sorted-pool merge: concatenate + one top_k ----
     all_key = jnp.concatenate([pool_key, new_key], axis=1)
@@ -629,13 +636,23 @@ def _hop_step(store, codes, mem, params, distance_fn, fetch_fn, ctx, mc,
 
 
 def _hop_loop(store, codes, mem, params, distance_fn, fetch_fn, ctx, st,
-              n_hops) -> "HopState":
+              n_hops, active_any=jnp.any) -> "HopState":
     """Run up to ``n_hops`` double-buffered hops over ``st``.
 
     The body consumes the carried slab, then issues the next frontier's
     fetch as its last action — the slab rides the loop carry, so hop
     t+1's gather sits behind hop t's candidate pass in program order
-    (``prefetch_depth`` = 2 slabs in flight)."""
+    (``prefetch_depth`` = 2 slabs in flight).
+
+    ``active_any`` reduces the per-row active mask to the loop-level
+    "keep hopping" scalar. It is evaluated in the loop *body* and carried
+    (identical value to re-deriving it in the condition — the state is
+    unchanged between body end and condition), because the sharded runner
+    substitutes a psum-based global any and collectives are not legal in
+    a ``while_loop`` condition: under ``shard_map`` every shard must take
+    the same number of iterations, with settled shards hopping inertly
+    (inactive rows are exact fixed points of the hop step) until the
+    *global* active set drains."""
     p = params
     if p.mode == "spec_in" and distance_fn is pq_mod.adc_lookup:
         bl_i32, bc_i32 = kernel_view(mem)
@@ -662,16 +679,17 @@ def _hop_loop(store, codes, mem, params, distance_fn, fetch_fn, ctx, st,
         return fetch_fn(store, ids)
 
     def cond(carry):
-        st, _, i = carry
-        return jnp.any(st.active) & (i < n_hops)
+        st, _, i, g = carry
+        return g & (i < n_hops)
 
     def body(carry):
-        st, rec, i = carry
+        st, rec, i, _ = carry
         st = _hop_step(store, codes, mem, p, distance_fn, fetch_fn, ctx,
                        mc, st, rec)
-        return st, issue(st), i + 1
+        return st, issue(st), i + 1, active_any(st.active)
 
-    st, _, _ = jax.lax.while_loop(cond, body, (st, issue(st), jnp.int32(0)))
+    st, _, _, _ = jax.lax.while_loop(
+        cond, body, (st, issue(st), jnp.int32(0), active_any(st.active)))
     return st
 
 
@@ -794,7 +812,8 @@ def filtered_search_pipelined(store: RecordStore, codes: jax.Array,
                               hop_chunk: int = DEFAULT_HOP_CHUNK,
                               min_bucket: int = MIN_COMPACT_BUCKET,
                               collect_trace: bool = False,
-                              async_readback: bool = True):
+                              async_readback: bool = True,
+                              runner=None):
     """Bucketed host driver: chunked hops + straggler compaction.
 
     Runs :func:`run_hops` ``hop_chunk`` hops at a time; after every chunk
@@ -824,7 +843,24 @@ def filtered_search_pipelined(store: RecordStore, codes: jax.Array,
     lists ``{"hop", "active", "bucket"}`` per observed chunk boundary —
     the benchmark's ``--active-trace`` feed (in async mode the
     observations lag dispatch by one chunk).
+
+    ``runner`` (a ``distributed.ShardedSearchRunner``) swaps the hop
+    kernel for its shard_map'd equivalent over the mesh-sharded record
+    store: init/finalize and this driver's whole compaction/bucket logic
+    run unchanged on the replicated query state, only the chunked hop
+    call crosses the mesh (``fetch_fn`` is then owned by the runner and
+    ignored here). Bucket widths stay divisible by the shard count —
+    both are powers of two and ``min_bucket`` is raised to ``n_shards``
+    — so every bucket row-shards evenly. Results remain bit-identical to
+    the single-device driver.
     """
+    if runner is not None:
+        min_bucket = max(min_bucket, runner.n_shards)
+        if hop_chunk <= 0:
+            # single-shot through the sharded runner: one max_hops chunk
+            # of the same driver (bit-identical; the runner owns the only
+            # sharded hop entry)
+            hop_chunk = params.max_hops
     if hop_chunk <= 0:
         res = filtered_search(store, codes, codebook, mem, qfilters,
                               queries, entry, params,
@@ -866,6 +902,8 @@ def filtered_search_pipelined(store: RecordStore, codes: jax.Array,
     trace: list = []
 
     def hop(ctx, st):
+        if runner is not None:
+            return runner.run(ctx, st, hop_chunk, params, distance_fn)
         return run_hops(store, codes, mem, ctx, st, hop_chunk, params,
                         distance_fn=distance_fn, fetch_fn=fetch_fn)
 

@@ -172,11 +172,28 @@ def merged_table(qf: QueryFilter, n_ids: int) -> jax.Array:
     < n_ids). One scatter per search call replaces a (B, W·C)-wide binary
     search over the CAP-length merged list every hop. One BYTE per id per
     query (``jnp.bool_`` is byte-backed; jnp has no OR-scatter to pack
-    words) — ~N·B bytes, fine at this repo's corpus scales; a Pallas
-    word-packed variant is the TPU-scale follow-up (see ROADMAP)."""
+    words) — kept as the readable oracle for
+    :func:`merged_table_words`, the word-packed form the search loop
+    actually carries."""
     b = jnp.arange(qf.merged_ids.shape[0], dtype=jnp.int32)[:, None]
     return jnp.zeros((qf.merged_ids.shape[0], n_ids + 1), jnp.bool_).at[
         b, jnp.minimum(qf.merged_ids, n_ids)].set(True)
+
+
+def merged_table_words(qf: QueryFilter, n_ids: int) -> jax.Array:
+    """:func:`merged_table` packed 32 ids per int32 word.
+
+    Returns ``(B, ceil((n_ids+1)/32))`` int32 — bit ``i`` of row ``b``
+    set iff ``merged_table(qf, n_ids)[b, i]``. Pad ids clip into the
+    sentinel bit ``n_ids`` exactly like the bool form (never gathered:
+    candidate ids are < n_ids). Built with the OR-scatter kernel
+    (kernels/or_scatter.py), so the replicated per-query rare-list state
+    shrinks 8× before the sharded driver multiplies it per shard."""
+    from repro.kernels import ops as kops
+    n_words = (n_ids + 1 + 31) // 32
+    return kops.or_scatter(
+        jnp.zeros((qf.merged_ids.shape[0], n_words), jnp.int32),
+        jnp.minimum(qf.merged_ids, n_ids))
 
 
 def kernel_view(mem: InMemory) -> tuple[jax.Array, jax.Array]:

@@ -13,6 +13,7 @@ import jax
 from repro.kernels import approx_probe as _probe
 from repro.kernels import hop_fused as _hop
 from repro.kernels import l2_rerank as _l2
+from repro.kernels import or_scatter as _orsc
 from repro.kernels import pq_scan as _pq
 from repro.kernels import prune_scan as _prune
 from repro.kernels import ref
@@ -80,6 +81,20 @@ def l2_rerank(vecs, query):
 
 def l2_rerank_interpret(vecs, query):
     return _l2.l2_rerank(vecs, query, interpret=True)
+
+
+def or_scatter(words, slots):
+    """Word-packed bitmap OR-scatter (B, NW) x (B, C) -> (B, NW).
+
+    Sets bit ``slots[b, j]`` in the int32 word table; out-of-range slots
+    (< 0 or >= NW*32) are dropped — the search loop's "skip" sentinel."""
+    if on_tpu():
+        return _orsc.or_scatter(words, slots, interpret=False)
+    return ref.or_scatter_ref(words, slots)
+
+
+def or_scatter_interpret(words, slots):
+    return _orsc.or_scatter(words, slots, interpret=True)
 
 
 def prune_scan(dp_s, dcc_s, a2: float, r: int):

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: word-packed OR-scatter — the visited/rare-list setter.
+
+jnp has no OR-scatter, so the byte-per-slot bitmap tables (search visited
+set, merged rare-list table) historically stayed bool to keep `.at[].set`
+usable. This kernel ORs bit ``1 << (slot & 31)`` into word ``slot >> 5`` of
+an int32 word table, letting those tables shrink 32× (8× vs bool bytes on
+host, 32× vs the int8 lanes bools occupy on TPU) before they get multiplied
+by shard-replicated query state.
+
+Words are int32, not uint32: TPU vector lanes are signed and the rest of the
+repo already bitcasts its uint32 bit-words to int32 at the kernel boundary
+(see selectors.kernel_view). Shifts are defined modulo the word width, and
+``(w >> k) & 1`` extracts bits correctly even for the sign bit, so signed
+words are bitwise-equivalent for set/test.
+
+One program per batch row. The C slot lanes are walked with a fori_loop;
+the scalar slot is pulled out of the (1, C) vector with the broadcasted-iota
+one-hot + masked-sum idiom (same as prune_scan — TPU has no cheap dynamic
+scalar reads from VMEM vectors). Each step ORs a one-hot-by-word
+contribution row into a (1, NW) accumulator initialized from the input
+words, so duplicate slots and already-set bits are naturally idempotent.
+Out-of-range slots (< 0 or >= NW*32) contribute nothing — callers encode
+"skip this lane" as any such sentinel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _or_scatter_kernel(words_ref, slots_ref, out_ref):
+    words = words_ref[...]                              # (1, NW) int32
+    slots = slots_ref[...]                              # (1, C) int32
+    nw = words.shape[1]
+    c = slots.shape[1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, c), 1)
+    word_ix = jax.lax.broadcasted_iota(jnp.int32, (1, nw), 1)
+
+    def body(j, acc):
+        sel = lane == j                                 # (1, C) one-hot
+        s = jnp.sum(jnp.where(sel, slots, 0))
+        valid = (s >= 0) & (s < nw * 32)
+        bit = jnp.where(valid, jax.lax.shift_left(jnp.int32(1), s & 31), 0)
+        return acc | jnp.where(word_ix == (s >> 5), bit, 0)
+
+    out_ref[...] = jax.lax.fori_loop(0, c, body, words)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def or_scatter(words: jax.Array, slots: jax.Array, *,
+               interpret: bool = False) -> jax.Array:
+    """Row-wise bitmap OR-scatter. words (B, NW) int32 bit-words; slots
+    (B, C) int32 bit indices into [0, NW*32) — out-of-range lanes are
+    dropped. Returns words with bit ``slots[b, j]`` set for every in-range
+    slot of row b."""
+    b, nw = words.shape
+    c = slots.shape[1]
+    return pl.pallas_call(
+        _or_scatter_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, nw), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nw), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nw), jnp.int32),
+        interpret=interpret,
+    )(words.astype(jnp.int32), slots.astype(jnp.int32))

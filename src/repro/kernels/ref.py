@@ -123,6 +123,36 @@ def hop_fused_ref(codes_slab: jax.Array, blooms: jax.Array,
     return key, ok
 
 
+def or_scatter_ref(words: jax.Array, slots: jax.Array) -> jax.Array:
+    """Row-wise bitmap OR-scatter: set bit ``slots[b, j]`` in the int32
+    word table ``words[b, slots[b, j] >> 5]`` for every in-range slot;
+    slots < 0 or >= NW*32 are dropped (the caller's "skip" sentinel).
+
+    jnp's only scatter-combiner is add, which corrupts a bitmap when a bit
+    is contributed twice or is already set. Exact-OR is recovered by making
+    every contribution carry-free first: sort each row's slots (out-of-range
+    mapped past the end so they sort last), drop exact duplicates via the
+    sorted-neighbor compare, and AND-NOT each bit against the word it
+    targets so already-set bits contribute 0. What remains is a sum of
+    distinct unset bits — addition IS bitwise OR. Bitwise-identical to the
+    Pallas kernel for any input (pinned by tests/test_kernels.py)."""
+    b, nw = words.shape
+    n_bits = nw * 32
+    words = words.astype(jnp.int32)
+    s = slots.astype(jnp.int32)
+    s = jnp.where((s >= 0) & (s < n_bits), s, n_bits)
+    s = jnp.sort(s, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((b, 1), jnp.bool_), s[:, 1:] == s[:, :-1]], axis=1)
+    keep = (s < n_bits) & ~dup
+    w = jnp.where(keep, s >> 5, nw)
+    bit = jax.lax.shift_left(jnp.int32(1), s & 31)
+    cur = jnp.take_along_axis(words, jnp.minimum(w, nw - 1), axis=1)
+    add = jnp.where(keep, bit & ~cur, 0)
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    return words.at[rows, w].add(add, mode="drop")
+
+
 def l2_rerank_ref(vecs: jax.Array, query: jax.Array) -> jax.Array:
     d = vecs.astype(jnp.float32) - query.astype(jnp.float32)[None, :]
     return jnp.sum(d * d, axis=1)

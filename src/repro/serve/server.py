@@ -117,6 +117,8 @@ class ServerStats:
     healthy: bool                # worker thread alive
     ready: bool                  # healthy ∧ accepting (not stopping)
     warmed: bool                 # warmup() has run
+    shards: int = 1              # mesh shards the hop loop spans
+                                 # (engine.n_shards; 1 = single-device)
 
 
 @dataclasses.dataclass
@@ -132,7 +134,14 @@ class _Entry:
 
 
 class SearchServer:
-    """Threaded serving frontend over an :class:`~repro.api.index.Index`."""
+    """Threaded serving frontend over an :class:`~repro.api.index.Index`.
+
+    Sharded indexes (``Index.build(shards=…)``) serve through the same
+    path with zero server-side changes: the engine routes each flushed
+    bucket's hop loop through its mesh runner, and :meth:`warmup` covers
+    the sharded bucket-jit ladder because the runner's kernels sit behind
+    the exact same (params, width) cache keys. ``stats().shards`` reports
+    the mesh width."""
 
     def __init__(self, index, config: ServerConfig = ServerConfig(),
                  ladder: tuple = cost_model.DEGRADE_LADDER):
@@ -497,4 +506,5 @@ class SearchServer:
                 tail_guard_us=self._tail_guard_us,
                 healthy=alive,
                 ready=alive and not self._stop,
-                warmed=self._warmed)
+                warmed=self._warmed,
+                shards=getattr(self.index.engine, "n_shards", 1))

@@ -211,6 +211,55 @@ def test_ops_dispatch_cpu():
 
 
 # ---------------------------------------------------------------------------
+# or_scatter
+# ---------------------------------------------------------------------------
+
+def _or_scatter_numpy(words, slots):
+    out = np.asarray(words, np.int32).copy()
+    n_bits = out.shape[1] * 32
+    for b, row in enumerate(np.asarray(slots)):
+        for s in row:
+            if 0 <= s < n_bits:
+                out[b, s >> 5] |= np.int32(1) << np.int32(s & 31)
+    return out
+
+
+@pytest.mark.parametrize("b,nw,c", [(1, 1, 4), (3, 8, 33), (7, 4, 128),
+                                    (2, 32, 300)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_or_scatter_matches_ref(b, nw, c, seed):
+    rng = np.random.default_rng(seed * 997 + b * nw * c)
+    # dense slot range + negatives and overflow sentinels + duplicates,
+    # over words with bits already set
+    words = jnp.asarray(
+        rng.integers(-2 ** 31, 2 ** 31, (b, nw), dtype=np.int64)
+        .astype(np.int32))
+    slots = jnp.asarray(
+        rng.integers(-8, nw * 32 + 8, (b, c)).astype(np.int32))
+    want = _or_scatter_numpy(words, slots)
+    got_k = ops.or_scatter_interpret(words, slots)
+    got_r = ref.or_scatter_ref(words, slots)
+    np.testing.assert_array_equal(np.asarray(got_r), want)
+    np.testing.assert_array_equal(np.asarray(got_k), want)
+
+
+def test_or_scatter_idempotent_and_sign_bit():
+    words = jnp.zeros((2, 2), jnp.int32)
+    # duplicate slots, the sign bit (31), and a word-1 slot; row 1 all
+    # out-of-range -> untouched
+    slots = jnp.asarray([[31, 31, 0, 32, 0], [-1, 64, 64, 100, -5]],
+                        jnp.int32)
+    want = np.array([[np.int32(1) << 31 | 1, 1], [0, 0]], np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(ref.or_scatter_ref(words, slots)), want)
+    np.testing.assert_array_equal(
+        np.asarray(ops.or_scatter_interpret(words, slots)), want)
+    # OR-ing into already-set words is a no-op
+    again = ref.or_scatter_ref(jnp.asarray(want), slots)
+    np.testing.assert_array_equal(np.asarray(again), want)
+
+
+# ---------------------------------------------------------------------------
 # prune_scan
 # ---------------------------------------------------------------------------
 
